@@ -1,0 +1,78 @@
+//! Bit-width ablation (paper §2.1): train LeNet at act_bit ∈ {1, 2, 4, 32}
+//! on synth-MNIST and compare accuracy + deployed size — the trade-off the
+//! Q-layers' `act_bit` parameter exposes.
+//!
+//!     cargo run --release --example quantization_sweep [steps]
+//!
+//! Expected shape: accuracy rises (or saturates) with bit width while the
+//! deployable size grows 32× from 1-bit to full precision.
+
+use anyhow::Result;
+use repro::bench::harness::BenchTable;
+use repro::data::Kind;
+use repro::model::bmx::{convert, convert_kbit};
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::{Manifest, Runtime};
+use repro::train::{train, TrainConfig};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let man = Manifest::load(repro::ARTIFACTS_DIR)?;
+    let rt = Runtime::cpu()?;
+
+    let mut table = BenchTable::new(
+        "act_bit sweep: LeNet on synth-MNIST",
+        &["act_bit", "train acc (PJRT)", "engine acc", "deployed size"],
+    );
+    for (model, act_bit) in [
+        ("lenet_bin", 1u32),
+        ("lenet_q2", 2),
+        ("lenet_q4", 4),
+        ("lenet_fp", 32),
+    ] {
+        if man.model(model).is_err() {
+            println!("({model} artifacts missing, skipped)");
+            continue;
+        }
+        println!("-- {model} (act_bit={act_bit}, {steps} steps) --");
+        let mut cfg = TrainConfig::quick(model, Kind::Digits, steps);
+        cfg.log_every = 50;
+        cfg.lr_decay_steps = steps / 3;
+        let report = train(&rt, &man, &cfg)?;
+
+        // deploy through the right converter and evaluate on the engine
+        let entry = man.model(model)?;
+        let mut ck = Checkpoint::new();
+        for (spec, data) in entry.params.iter().zip(&report.params) {
+            ck.push_f32(&format!("params.{}", spec.name), spec.shape.clone(), data.clone());
+        }
+        for (spec, data) in entry.state.iter().zip(&report.state) {
+            ck.push_f32(&format!("state.{}", spec.name), spec.shape.clone(), data.clone());
+        }
+        let names = if act_bit == 32 {
+            vec![]
+        } else {
+            inventory::lenet(true).binary_names()
+        };
+        let bmx = match act_bit {
+            1 | 32 => convert(&ck, &names, &entry.bmx_meta())?,
+            k => convert_kbit(&ck, &names, k, &entry.bmx_meta())?,
+        };
+        let engine = Engine::from_bmx(&bmx)?;
+        let test = Kind::Digits.generate(512, 909);
+        let engine_acc = engine.accuracy(&test.images, &test.labels, 32)?;
+        table.row(vec![
+            act_bit.to_string(),
+            format!("{:.3}", report.final_eval_acc),
+            format!("{engine_acc:.3}"),
+            format!("{:.0} kB", bmx.payload_bytes() as f64 / 1024.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

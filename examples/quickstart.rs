@@ -1,0 +1,45 @@
+//! Quickstart: the whole stack in ~40 lines.
+//!
+//!     make artifacts                       # once (python AOT path)
+//!     cargo run --release --example quickstart
+//!
+//! Loads the binary-LeNet init checkpoint, converts it to the packed
+//! `.bmx` deployment format (paper §2.2.3), builds the Rust xnor inference
+//! engine and classifies a batch of synthetic digits.
+
+use anyhow::Result;
+use repro::data::Kind;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::Manifest;
+
+fn main() -> Result<()> {
+    // 1. The manifest describes every AOT artifact python emitted.
+    let manifest = Manifest::load(repro::ARTIFACTS_DIR)?;
+    let entry = manifest.model("lenet_bin")?;
+
+    // 2. Convert the f32 checkpoint: Q-layer weights -> 1 bit each.
+    let ckpt = Checkpoint::load(manifest.path(&entry.init_ckpt))?;
+    let binary_names = inventory::lenet(true).binary_names();
+    let bmx = convert(&ckpt, &binary_names, &entry.bmx_meta())?;
+    println!(
+        "converted: {} tensors, packed payload {:.1} kB",
+        bmx.tensors.len(),
+        bmx.payload_bytes() as f64 / 1024.0
+    );
+
+    // 3. Build the xnor inference engine and classify some digits.
+    let engine = Engine::from_bmx(&bmx)?;
+    let ds = Kind::Digits.generate(8, 1);
+    let preds = engine.classify(&ds.images, 8)?;
+    for (i, (class, score)) in preds.iter().enumerate() {
+        println!(
+            "image {i}: label={} pred={class} (logit {score:.2})",
+            ds.labels[i]
+        );
+    }
+    println!("note: untrained weights — run --example train_binary_lenet for real accuracy");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Serving demo — the role of the paper's Android/iOS apps (§4.2), as an
+//! inference server: load a (trained if available, else init) binary LeNet
+//! `.bmx`, start the coordinator, fire concurrent requests, report
+//! latency percentiles and throughput.
+//!
+//!     cargo run --release --example serve_classifier [requests] [producers]
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::coordinator::{BatchPolicy, Server, ServerConfig};
+use repro::data::Kind;
+use repro::model::bmx::{convert, BmxModel};
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::Manifest;
+
+fn load_model(manifest: &Manifest) -> Result<BmxModel> {
+    // prefer the checkpoint the e2e example writes
+    let trained = std::path::Path::new("target/e2e/lenet_bin.bmx");
+    if trained.exists() {
+        println!("using trained model {trained:?}");
+        return BmxModel::load(trained);
+    }
+    println!("using init checkpoint (run --example train_binary_lenet for a trained one)");
+    let entry = manifest.model("lenet_bin")?;
+    let ck = Checkpoint::load(manifest.path(&entry.init_ckpt))?;
+    convert(&ck, &inventory::lenet(true).binary_names(), &entry.bmx_meta())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let producers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let manifest = Manifest::load(repro::ARTIFACTS_DIR)?;
+    let engine = Arc::new(Engine::from_bmx(&load_model(&manifest)?)?);
+    let ds = Kind::Digits.generate(requests, 23);
+
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(2) },
+            queue_cap: 4096,
+        },
+    );
+
+    println!("== {requests} requests from {producers} concurrent producers ==");
+    let t0 = Instant::now();
+    let correct: usize = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let client = server.client();
+            let ds = &ds;
+            handles.push(s.spawn(move || {
+                let mut ok = 0usize;
+                for i in (p..requests).step_by(producers) {
+                    let resp = client.classify(ds.image(i).to_vec()).unwrap();
+                    if resp.class == ds.labels[i] as usize {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let wall = t0.elapsed();
+    let snap = server.shutdown();
+
+    println!(
+        "throughput: {:.0} req/s  |  accuracy {:.3}",
+        requests as f64 / wall.as_secs_f64(),
+        correct as f64 / requests as f64
+    );
+    println!("{}", snap.summary());
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Accuracy columns for Tables 1 and 2: train each model variant on its
+//! synthetic dataset and report test accuracy + converted size.
+//!
+//!     cargo run --release --example table_accuracy [steps] [--table2]
+//!
+//! Defaults to 150 steps per model (enough for the *ordering* the paper's
+//! tables show; raise for tighter numbers).  Without --table2 only the
+//! Table 1 pairs run (binary vs fp LeNet and mini-ResNet); with --table2
+//! the 7 partial-binarization configs train as well (slow on one core).
+
+use anyhow::Result;
+use repro::bench::harness::BenchTable;
+use repro::data::Kind;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::runtime::{Manifest, Runtime};
+use repro::train::{train, TrainConfig};
+
+fn run_one(
+    rt: &Runtime,
+    man: &Manifest,
+    model: &str,
+    dataset: Kind,
+    steps: usize,
+) -> Result<(f64, usize)> {
+    println!("-- training {model} ({steps} steps) --");
+    let mut cfg = TrainConfig::quick(model, dataset, steps);
+    cfg.log_every = 50;
+    cfg.lr = if model.starts_with("lenet") { 0.05 } else { 0.02 };
+    cfg.lr_decay_steps = steps / 3;
+    let report = train(rt, man, &cfg)?;
+
+    // converted size of the trained model
+    let entry = man.model(model)?;
+    let mut ck = Checkpoint::new();
+    for (spec, data) in entry.params.iter().zip(&report.params) {
+        ck.push_f32(&format!("params.{}", spec.name), spec.shape.clone(), data.clone());
+    }
+    for (spec, data) in entry.state.iter().zip(&report.state) {
+        ck.push_f32(&format!("state.{}", spec.name), spec.shape.clone(), data.clone());
+    }
+    let names = match entry.arch.as_str() {
+        "lenet" => {
+            if matches!(entry.raw.get("binary"), Some(repro::model::json::Value::Bool(true))) {
+                inventory::lenet(true).binary_names()
+            } else {
+                vec![]
+            }
+        }
+        _ => {
+            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap_or(64);
+            inventory::resnet18(width, entry.classes, Stem::Cifar, &entry.fp_stages())
+                .binary_names()
+        }
+    };
+    let bmx = convert(&ck, &names, &entry.bmx_meta())?;
+    Ok((report.final_eval_acc, bmx.payload_bytes()))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args
+        .iter()
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(150);
+    let table2 = args.iter().any(|a| a == "--table2");
+
+    let man = Manifest::load(repro::ARTIFACTS_DIR)?;
+    let rt = Runtime::cpu()?;
+
+    let mut t1 = BenchTable::new(
+        "Table 1 (synthetic stand-ins): accuracy + size",
+        &["dataset", "model", "acc", "size", "paper acc", "paper size"],
+    );
+    for (model, dataset, label, pacc, psize) in [
+        ("lenet_bin", Kind::Digits, "synth-MNIST", "0.97", "206kB"),
+        ("lenet_fp", Kind::Digits, "synth-MNIST", "0.99", "4.6MB"),
+        ("resnet_mini_bin", Kind::Cifar, "synth-CIFAR", "0.86", "1.5MB"),
+        ("resnet_mini_fp", Kind::Cifar, "synth-CIFAR", "0.90", "44.7MB"),
+    ] {
+        let (acc, bytes) = run_one(&rt, &man, model, dataset, steps)?;
+        t1.row(vec![
+            label.into(),
+            model.into(),
+            format!("{acc:.3}"),
+            format!("{:.0} kB", bytes as f64 / 1024.0),
+            pacc.into(),
+            psize.into(),
+        ]);
+    }
+    t1.print();
+
+    if table2 {
+        let mut t2 = BenchTable::new(
+            "Table 2 (synth-ImageNet-100, mini width): accuracy + size",
+            &["fp stage", "acc", "size kB", "paper acc", "paper size"],
+        );
+        for (cfg, label, pacc, psize) in [
+            ("none", "none", "0.42", "3.6MB"),
+            ("fp1", "1st", "0.48", "4.1MB"),
+            ("fp2", "2nd", "0.44", "5.6MB"),
+            ("fp3", "3rd", "0.49", "11.3MB"),
+            ("fp4", "4th", "0.47", "36MB"),
+            ("fp12", "1st,2nd", "0.49", "6.2MB"),
+            ("all", "all", "0.61", "47MB"),
+        ] {
+            let model = format!("resnet_mini_img_{cfg}");
+            let (acc, bytes) = run_one(&rt, &man, &model, Kind::Imagenet, steps)?;
+            t2.row(vec![
+                label.into(),
+                format!("{acc:.3}"),
+                format!("{:.0}", bytes as f64 / 1024.0),
+                pacc.into(),
+                psize.into(),
+            ]);
+        }
+        t2.print();
+    } else {
+        println!("(pass --table2 to also train the 7 partial-binarization configs)");
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end driver (DESIGN.md §End-to-end): train binary LeNet on
+//! synth-MNIST through the AOT train_step (PJRT, float dots on ±1 values),
+//! log the loss curve, evaluate with BOTH the PJRT graph and the Rust xnor
+//! engine, convert to `.bmx`, and report the compression ratio.
+//!
+//!     cargo run --release --example train_binary_lenet [steps] [examples]
+//!
+//! Defaults: 300 steps, 4096 train / 1024 test examples.  Results recorded
+//! in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use repro::data::Kind;
+use repro::model::bmx::convert;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::{Manifest, Runtime};
+use repro::train::{train, TrainConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let train_examples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+
+    let manifest = Manifest::load(repro::ARTIFACTS_DIR)?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    let out_dir = std::path::PathBuf::from("target/e2e");
+    std::fs::create_dir_all(&out_dir)?;
+    let cfg = TrainConfig {
+        model: "lenet_bin".into(),
+        dataset: Kind::Digits,
+        steps,
+        lr: 0.05,
+        lr_decay_steps: steps / 3,
+        lr_decay: 0.5,
+        train_examples,
+        test_examples: train_examples / 4,
+        seed: 42,
+        log_every: 20,
+        eval_every: (steps / 4).max(1),
+        out_ckpt: Some(out_dir.join("lenet_bin_trained.bmxc")),
+        metrics_csv: Some(out_dir.join("lenet_bin_loss_curve.csv")),
+    };
+    println!("== training binary LeNet: {steps} steps, batch 64 ==");
+    let report = train(&rt, &manifest, &cfg)?;
+    println!(
+        "loss: {:.4} (first 5 avg) -> {:.4} (last 5 avg) | {:.2} steps/s | {:.0}ms/step",
+        report.metrics.mean_loss_head(5),
+        report.metrics.mean_loss_tail(5),
+        report.steps_per_sec,
+        report.metrics.mean_step_ms(),
+    );
+    println!("PJRT eval accuracy: {:.4}", report.final_eval_acc);
+
+    // Deploy: convert the trained checkpoint and evaluate on the Rust
+    // xnor engine — the Eq. 2 equivalence means accuracy must match the
+    // PJRT number (same logits, same argmax).
+    let entry = manifest.model("lenet_bin")?;
+    let ckpt = repro::model::ckpt::Checkpoint::load(out_dir.join("lenet_bin_trained.bmxc"))?;
+    let names = inventory::lenet(true).binary_names();
+    let bmx = convert(&ckpt, &names, &entry.bmx_meta())?;
+    let bmx_path = out_dir.join("lenet_bin.bmx");
+    bmx.save(&bmx_path)?;
+
+    let fp_bytes: usize = ckpt
+        .tensors
+        .iter()
+        .map(|(_, s, _)| 4 * s.iter().product::<usize>())
+        .sum();
+    println!(
+        "converter: f32 {:.2} MB -> .bmx {:.0} kB ({:.1}x compression; paper LeNet: 4.6MB -> 206kB)",
+        fp_bytes as f64 / (1024.0 * 1024.0),
+        bmx.payload_bytes() as f64 / 1024.0,
+        fp_bytes as f64 / bmx.payload_bytes() as f64,
+    );
+
+    let engine = Engine::from_bmx(&bmx)?;
+    let test = Kind::Digits.generate(cfg.test_examples, 777);
+    let t0 = std::time::Instant::now();
+    let rust_acc = engine.accuracy(&test.images, &test.labels, 32)?;
+    let wall = t0.elapsed();
+    println!(
+        "rust xnor engine: accuracy {:.4} on {} fresh images ({:.0} img/s)",
+        rust_acc,
+        test.len(),
+        test.len() as f64 / wall.as_secs_f64()
+    );
+    println!("loss curve -> {:?}", out_dir.join("lenet_bin_loss_curve.csv"));
+
+    anyhow::ensure!(
+        report.metrics.mean_loss_tail(5) < report.metrics.mean_loss_head(5),
+        "training did not reduce the loss"
+    );
+    Ok(())
+}

@@ -1,0 +1,288 @@
+"""AOT artifact emitter: lower every L2 graph to HLO *text* + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Outputs per model:
+  * ``<name>_train_b<B>.hlo.txt``   flat train_step (params/state/momentum
+                                    flats + x + y + lr -> updated flats +
+                                    loss + acc)
+  * ``<name>_infer_b<B>.hlo.txt``   flat inference (flats + x -> logits)
+  * ``<name>_init.bmxc``            initial params+state checkpoint
+plus standalone L1 kernel artifacts and ``manifest.json`` describing every
+input/output so the Rust coordinator is fully self-describing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt, lenet, model, resnet
+from . import train as T
+from .kernels import binarize as K_bin
+from .kernels import quantize as K_quant
+from .kernels import xnor_gemm as K_gemm
+
+SEED = 42
+
+# Table 2 partial-binarization configs: fp stage sets, in paper row order.
+TABLE2_CONFIGS: list[tuple[str, frozenset[int]]] = [
+    ("none", frozenset()),
+    ("fp1", frozenset({1})),
+    ("fp2", frozenset({2})),
+    ("fp3", frozenset({3})),
+    ("fp4", frozenset({4})),
+    ("fp12", frozenset({1, 2})),
+    ("all", frozenset({1, 2, 3, 4})),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(flats):
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flats]
+
+
+def _shape_entry(pairs):
+    return [[name, [int(d) for d in arr.shape]] for name, arr in pairs]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.manifest = {"version": 1, "models": {}, "kernels": {}}
+
+    def _write(self, name: str, text: str) -> str:
+        path = os.path.join(self.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+        return name
+
+    def emit_model(
+        self,
+        name: str,
+        forward,
+        params,
+        state,
+        meta: dict,
+        *,
+        input_shape: tuple[int, ...],
+        train_batch: int,
+        infer_batches: list[int],
+    ) -> None:
+        print(f"[model {name}]")
+        p_pairs = T.flatten_tree(params)
+        s_pairs = T.flatten_tree(state)
+        p_flat = [a for _, a in p_pairs]
+        s_flat = [a for _, a in s_pairs]
+        m_flat = [jnp.zeros_like(a) for a in p_flat]
+
+        entry = dict(meta)
+        entry["params"] = _shape_entry(p_pairs)
+        entry["state"] = _shape_entry(s_pairs)
+        entry["input_shape"] = list(input_shape)
+
+        # Initial checkpoint (params then state, prefixed).
+        ckpt_name = f"{name}_init.bmxc"
+        ckpt.save(
+            os.path.join(self.out, ckpt_name),
+            [(f"params.{n}", np.asarray(a)) for n, a in p_pairs]
+            + [(f"state.{n}", np.asarray(a)) for n, a in s_pairs],
+        )
+        entry["init_ckpt"] = ckpt_name
+
+        # Train step.
+        step = T.make_train_step(forward, params, state)
+        x_spec = jax.ShapeDtypeStruct((train_batch, *input_shape), jnp.float32)
+        y_spec = jax.ShapeDtypeStruct((train_batch,), jnp.int32)
+        lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(step).lower(
+            *_specs(p_flat), *_specs(s_flat), *_specs(m_flat),
+            x_spec, y_spec, lr_spec,
+        )
+        entry["train"] = {
+            "file": self._write(f"{name}_train_b{train_batch}.hlo.txt",
+                                to_hlo_text(lowered)),
+            "batch": train_batch,
+        }
+
+        # Inference graphs.
+        infer = T.make_infer(forward, params, state)
+        entry["infer"] = []
+        for b in infer_batches:
+            xb = jax.ShapeDtypeStruct((b, *input_shape), jnp.float32)
+            lowered = jax.jit(infer).lower(
+                *_specs(p_flat), *_specs(s_flat), xb
+            )
+            entry["infer"].append({
+                "file": self._write(f"{name}_infer_b{b}.hlo.txt",
+                                    to_hlo_text(lowered)),
+                "batch": b,
+            })
+        self.manifest["models"][name] = entry
+
+    def emit_pallas_infer(self, name: str, base_model: str, params, state,
+                          input_shape, batch: int) -> None:
+        """Binary-LeNet inference with the L1 Pallas kernels inlined."""
+        print(f"[pallas-infer {name}]")
+        infer = T.make_infer(
+            lambda p, s, x, train=False: model.lenet_forward_pallas(
+                p, s, x, train=train
+            ),
+            params, state,
+        )
+        p_flat = [a for _, a in T.flatten_tree(params)]
+        s_flat = [a for _, a in T.flatten_tree(state)]
+        xb = jax.ShapeDtypeStruct((batch, *input_shape), jnp.float32)
+        lowered = jax.jit(infer).lower(*_specs(p_flat), *_specs(s_flat), xb)
+        self.manifest["models"][base_model]["infer_pallas"] = {
+            "file": self._write(f"{name}_b{batch}.hlo.txt",
+                                to_hlo_text(lowered)),
+            "batch": batch,
+        }
+
+    def emit_kernels(self) -> None:
+        """Standalone L1 kernel artifacts for the Rust integration tests."""
+        print("[kernels]")
+        m, n, k = 64, 128, 800  # K = 5*5*32 words -> W = 25
+        w = k // 32
+        gem = jax.jit(functools.partial(
+            K_gemm.xnor_gemm_packed, block_m=64, block_n=64))
+        lowered = gem.lower(
+            jax.ShapeDtypeStruct((m, w), jnp.uint32),
+            jax.ShapeDtypeStruct((n, w), jnp.uint32),
+        )
+        self.manifest["kernels"]["xnor_gemm"] = {
+            "file": self._write("kernel_xnor_gemm.hlo.txt",
+                                to_hlo_text(lowered)),
+            "m": m, "n": n, "words": w,
+        }
+        lowered = jax.jit(K_bin.pack).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32))
+        self.manifest["kernels"]["pack"] = {
+            "file": self._write("kernel_pack.hlo.txt", to_hlo_text(lowered)),
+            "m": m, "k": k,
+        }
+        lowered = jax.jit(K_bin.binarize).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32))
+        self.manifest["kernels"]["binarize"] = {
+            "file": self._write("kernel_binarize.hlo.txt",
+                                to_hlo_text(lowered)),
+            "m": m, "k": k,
+        }
+        lowered = jax.jit(
+            functools.partial(K_quant.clip_quantize, k=4)
+        ).lower(jax.ShapeDtypeStruct((m, 64), jnp.float32))
+        self.manifest["kernels"]["quantize_k4"] = {
+            "file": self._write("kernel_quantize_k4.hlo.txt",
+                                to_hlo_text(lowered)),
+            "m": m, "n": 64, "bits": 4,
+        }
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest.json: {len(self.manifest['models'])} models, "
+              f"{len(self.manifest['kernels'])} kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-resnet", action="store_true",
+                    help="emit only LeNet + kernels (fast debug)")
+    args = ap.parse_args()
+    em = Emitter(args.out)
+    key = jax.random.PRNGKey(SEED)
+
+    # --- LeNet, binary and full precision (Table 1 row 1) ---------------
+    for binary, mname in [(True, "lenet_bin"), (False, "lenet_fp")]:
+        params, state, meta = lenet.init(key, binary=binary)
+        fwd = functools.partial(lenet.forward, binary=binary, act_bit=1)
+        em.emit_model(
+            mname,
+            lambda p, s, x, train=False, _f=fwd: _f(p, s, x, train=train),
+            params, state, meta,
+            input_shape=(1, 28, 28),
+            train_batch=64,
+            infer_batches=[1, 8, 32] if binary else [32],
+        )
+        if binary:
+            em.emit_pallas_infer("lenet_bin_infer_pallas", mname,
+                                 params, state, (1, 28, 28), batch=8)
+
+    # --- k-bit quantized LeNets (paper §2.1: act_bit in [2, 31]) --------
+    for act_bit in (2, 4):
+        params, state, meta = lenet.init(key, binary=True, act_bit=act_bit)
+        fwd = functools.partial(lenet.forward, binary=True, act_bit=act_bit)
+        em.emit_model(
+            f"lenet_q{act_bit}",
+            lambda p, s, x, train=False, _f=fwd: _f(p, s, x, train=train),
+            params, state, meta,
+            input_shape=(1, 28, 28),
+            train_batch=64,
+            infer_batches=[32],
+        )
+
+    if not args.skip_resnet:
+        # --- ResNet mini on synth-CIFAR (Table 1 row 2 accuracy trend) --
+        for fp_stages, mname in [
+            (frozenset(), "resnet_mini_bin"),
+            (frozenset({1, 2, 3, 4}), "resnet_mini_fp"),
+        ]:
+            params, state, meta = resnet.init(
+                key, fp_stages=fp_stages, width=16, classes=10)
+            fwd = functools.partial(
+                resnet.forward, fp_stages=fp_stages, act_bit=1)
+            em.emit_model(
+                mname,
+                lambda p, s, x, train=False, _f=fwd: _f(p, s, x, train=train),
+                params, state, meta,
+                input_shape=(3, 32, 32),
+                train_batch=32,
+                infer_batches=[64],
+            )
+
+        # --- ResNet mini, 100-class synth-ImageNet, Table 2 sweep -------
+        for cfg_name, fp_stages in TABLE2_CONFIGS:
+            params, state, meta = resnet.init(
+                key, fp_stages=fp_stages, width=16, classes=100)
+            fwd = functools.partial(
+                resnet.forward, fp_stages=fp_stages, act_bit=1)
+            em.emit_model(
+                f"resnet_mini_img_{cfg_name}",
+                lambda p, s, x, train=False, _f=fwd: _f(p, s, x, train=train),
+                params, state, meta,
+                input_shape=(3, 32, 32),
+                train_batch=32,
+                infer_batches=[64],
+            )
+
+    em.emit_kernels()
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""BMXC checkpoint format — the f32 interchange between python and rust.
+
+Layout (little-endian):
+
+    magic   b"BMXC"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u16     name length, then UTF-8 name bytes
+        u8      dtype code (0 = f32, 1 = u32)
+        u8      ndim
+        u32*n   dims
+        bytes   raw data, row-major LE
+
+The Rust side (rust/src/model/ckpt.rs) reads and writes the same layout;
+``tests/test_ckpt.py`` and the cargo integration tests round-trip files in
+both directions.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"BMXC"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.uint32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.uint32): 1}
+
+
+def save(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> list[tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {data[:4]!r}")
+    version, count = struct.unpack_from("<II", data, 4)
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    off = 12
+    out = []
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode("utf-8")
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        dtype = np.dtype(_DTYPES[code])
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(
+            data, dtype=dtype, count=n, offset=off
+        ).reshape(dims)
+        off += n * dtype.itemsize
+        out.append((name, arr.copy()))
+    return out

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for BMXNet's compute hot-spots.
+
+* :mod:`.binarize` — sign binarization + BINARY_WORD bit packing
+* :mod:`.xnor_gemm` — packed xnor+popcount GEMM (the paper's Listing 3)
+* :mod:`.quantize` — Eq. 1 k-bit linear quantization
+* :mod:`.ref` — pure-jnp oracles every kernel is tested against
+"""
+
+from . import binarize, quantize, ref, xnor_gemm  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pallas kernels for sign-binarization and BINARY_WORD bit-packing.
+
+TPU adaptation of BMXNet's input-binarization stage (paper §2.2): instead of
+a scalar CPU loop setting bits, each grid step loads a (block_rows, K) tile
+into VMEM, computes the sign bits with the VPU, and reduces 32 lanes into a
+single uint32 word per output element.  ``interpret=True`` everywhere — the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+WORD_BITS = 32
+
+
+def _binarize_kernel(x_ref, o_ref):
+    """o = sign(x) in {-1, +1}, 0 mapping to +1."""
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def binarize(x: jax.Array, block_rows: int = 128) -> jax.Array:
+    """Sign-binarize a 2D array (M, K) tile-by-tile.
+
+    Grid over row blocks only: K is kept whole per tile because binarization
+    is elementwise (no reduction) and LeNet/ResNet K values (<= 12800 f32 =
+    50 KiB/row-block-lane) fit comfortably in VMEM.
+    """
+    m, k = x.shape
+    block_rows = min(block_rows, m)
+    grid = (pl.cdiv(m, block_rows),)
+    return pl.pallas_call(
+        _binarize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _pack_kernel(x_ref, o_ref):
+    """Pack sign bits of a (bm, K) tile into (bm, K/32) uint32 words."""
+    x = x_ref[...]
+    bm, k = x.shape
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, k // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def pack(x: jax.Array, block_rows: int = 128) -> jax.Array:
+    """Binarize + pack a 2D array (M, K), K % 32 == 0, to (M, K/32) uint32.
+
+    One fused VMEM pass: the float tile never round-trips to HBM between
+    binarization and packing (the paper binarizes then packs in one loop for
+    the same reason).
+    """
+    m, k = x.shape
+    if k % WORD_BITS != 0:
+        raise ValueError(f"K={k} not a multiple of {WORD_BITS}; pad first")
+    w = k // WORD_BITS
+    block_rows = min(block_rows, m)
+    grid = (pl.cdiv(m, block_rows),)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, w), jnp.uint32),
+        interpret=True,
+    )(x)

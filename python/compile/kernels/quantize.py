@@ -1,0 +1,45 @@
+"""Pallas kernel for Eq. 1 k-bit linear quantization (paper §2.1).
+
+Quantizes a real input in [0, 1] to the nearest of 2^k - 1 levels.  The
+paper stores quantized values back in f32 and uses standard dot products;
+the kernel is elementwise, so the tile schedule is row-blocked like
+``binarize``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, o_ref, *, levels: float):
+    x = x_ref[...]
+    o_ref[...] = jnp.round(x * levels) / levels
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows"))
+def quantize(x: jax.Array, k: int, block_rows: int = 128) -> jax.Array:
+    """Eq. 1 over a 2D array (M, N); k is the act_bit width in [1, 31]."""
+    if not 1 <= k <= 31:
+        raise ValueError(f"act_bit k must be in [1, 31], got {k}")
+    m, n = x.shape
+    block_rows = min(block_rows, m)
+    grid = (pl.cdiv(m, block_rows),)
+    levels = float((1 << k) - 1)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, levels=levels),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows"))
+def clip_quantize(x: jax.Array, k: int, block_rows: int = 128) -> jax.Array:
+    """Clip to [0, 1] then Eq. 1 — the QActivation forward for k > 1."""
+    return quantize(jnp.clip(x, 0.0, 1.0), k, block_rows)

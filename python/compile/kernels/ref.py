@@ -1,0 +1,127 @@
+"""Pure-jnp reference oracles for the BMXNet L1 kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+is checked against the functions here by ``python/tests``.  The semantics
+follow the paper exactly:
+
+* ``sign_binarize`` — the sign function used by BMXNet to binarize weights
+  and inputs to {-1, +1} (0 maps to +1, matching ``x >= 0``).
+* ``quantize_k`` — Eq. 1: linear quantization of a real in [0, 1] to a k-bit
+  representable value in [0, 1].
+* ``pack_bits`` / ``unpack_bits`` — BINARY_WORD packing: 32 sign bits per
+  uint32 lane (bit 1 == +1, bit 0 == -1), LSB-first within a word.
+* ``xnor_popcount_gemm`` — the paper's xnor GEMM: per output element the
+  popcount of xnor over packed words; value in [0, K] (step 1).
+* ``xnor_to_dot`` / ``dot_to_xnor`` — Eq. 2 range maps between the xnor
+  output range [0, n] and the +/-1 dot-product range [-n, n].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def sign_binarize(x: jax.Array) -> jax.Array:
+    """Binarize to {-1, +1} with sign(x), mapping 0 -> +1 (paper: x >= 0)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def quantize_k(x: jax.Array, k: int) -> jax.Array:
+    """Eq. 1: quantize input in [0, 1] to k-bit resolution, k in [1, 31]."""
+    if not 1 <= k <= 31:
+        raise ValueError(f"act_bit k must be in [1, 31], got {k}")
+    levels = jnp.asarray((1 << k) - 1, x.dtype)
+    return jnp.round(levels * x) / levels
+
+
+def clip_quantize(x: jax.Array, k: int) -> jax.Array:
+    """DoReFa-style activation quantization: clip to [0, 1] then Eq. 1."""
+    return quantize_k(jnp.clip(x, 0.0, 1.0), k)
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack sign bits of x (..., K) into uint32 words (..., K/32).
+
+    Bit b of word w is 1 iff x[..., 32*w + b] >= 0 (LSB-first). K must be a
+    multiple of 32; callers pad (A rows with +1, B rows with -1) so padding
+    contributes 0 to xnor popcounts — see ``pad_pair``.
+    """
+    if x.shape[-1] % WORD_BITS != 0:
+        raise ValueError(f"K={x.shape[-1]} not a multiple of {WORD_BITS}")
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(*x.shape[:-1], x.shape[-1] // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_bits: (..., K/32) uint32 -> (..., k) float in {-1,+1}."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return jnp.where(flat[..., :k] == 1, 1.0, -1.0).astype(jnp.float32)
+
+
+def pad_to_words(x: jax.Array, pad_value: float) -> jax.Array:
+    """Pad the last axis up to a multiple of 32 with ``pad_value``."""
+    k = x.shape[-1]
+    rem = (-k) % WORD_BITS
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, widths, constant_values=pad_value)
+
+
+def pad_pair(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pad A with +1 and B with -1 so padded lanes xnor to 0 (no popcount)."""
+    return pad_to_words(a, 1.0), pad_to_words(b, -1.0)
+
+
+def xnor_popcount_gemm(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Paper's xnor GEMM on packed operands.
+
+    a_packed: (M, W) uint32, b_packed: (N, W) uint32 (B stored row-major by
+    output column, i.e. already transposed).  Returns (M, N) int32 popcount
+    accumulations — the xnor dot in [0, K].
+    """
+    x = jnp.bitwise_xor(a_packed[:, None, :], b_packed[None, :, :])
+    xnor = jnp.bitwise_not(x)
+    return jnp.sum(
+        jax.lax.population_count(xnor).astype(jnp.int32), axis=-1
+    )
+
+
+def xnor_to_dot(pop: jax.Array, k: int) -> jax.Array:
+    """Map xnor popcount in [0, n] back to the +/-1 dot range [-n, n].
+
+    With A padded +1 / B padded -1, padded lanes contribute 0 matches, so
+    dot = 2*pop - k exactly (k = the true, unpadded reduction length).
+    """
+    return (2 * pop - k).astype(jnp.float32)
+
+
+def dot_to_xnor(dot: jax.Array, n: int) -> jax.Array:
+    """Eq. 2: map a +/-1 dot product in [-n, n] to the xnor range [0, n]."""
+    return (dot + n) / 2
+
+
+def binary_gemm_reference(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Float reference: sign-binarize both operands, then ordinary matmul.
+
+    a: (M, K), b: (K, N).  This is what BMXNet's GPU training path computes;
+    the xnor path must match it exactly (Eq. 2 equivalence).
+    """
+    return sign_binarize(a) @ sign_binarize(b)
+
+
+def xnor_linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """End-to-end packed path: binarize+pack x (M,K) and w (N,K), xnor GEMM,
+    map back to the dot range.  Must equal ``binary_gemm_reference(x, w.T)``.
+    """
+    k = x.shape[-1]
+    xp, wp = pad_pair(x, w)
+    pop = xnor_popcount_gemm(pack_bits(xp), pack_bits(wp))
+    return xnor_to_dot(pop, k)

@@ -1,0 +1,88 @@
+"""Pallas xnor+popcount GEMM — the paper's compute hot-spot on TPU terms.
+
+BMXNet's CPU kernel (Listing 3) runs xnor+popcnt over 64-bit words with
+cache blocking.  The TPU rethink (DESIGN.md §Hardware-Adaptation): the
+operands are *packed uint32* matrices, so this is an integer bit-op
+workload for the VPU, not an MXU matmul.  We tile the output (bm, bn) and
+stream W = K/32 packed words per tile pair through VMEM, accumulating
+``popcount(xnor(a, b))`` in int32.  BlockSpec expresses the HBM->VMEM
+schedule the paper expressed with cache blocking.
+
+``interpret=True`` is mandatory on this box (CPU PJRT cannot run Mosaic
+custom-calls); TPU performance is estimated structurally in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+WORD_BITS = 32
+
+
+def _xnor_gemm_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile: popcount(xnor) accumulated over all words.
+
+    a_ref: (bm, W) uint32, b_ref: (bn, W) uint32 (B pre-transposed so both
+    operands stream row-major, the same trick the paper's packed B uses).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    xnor = jnp.bitwise_not(jnp.bitwise_xor(a[:, None, :], b[None, :, :]))
+    pop = jax.lax.population_count(xnor).astype(jnp.int32)
+    o_ref[...] = jnp.sum(pop, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def xnor_gemm_packed(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jax.Array:
+    """Packed xnor GEMM: (M, W) x (N, W) uint32 -> (M, N) int32 popcounts.
+
+    Output range [0, 32*W] step 1, exactly the paper's xnor dot.  VMEM per
+    grid step = (bm + bn) * W * 4 bytes + bm * bn * 4 bytes; defaults keep
+    this < 4 MiB for every shape in the paper's sweeps (W <= 200 at
+    C=256, 5x5 kernels).
+    """
+    m, w = a_packed.shape
+    n, wb = b_packed.shape
+    if w != wb:
+        raise ValueError(f"word-width mismatch: {w} vs {wb}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    return pl.pallas_call(
+        _xnor_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a_packed, b_packed)
+
+
+def xnor_linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Full binary-linear hot path on the Pallas kernels.
+
+    x: (M, K) float activations, w: (N, K) float weights.  Binarize+pack
+    both (with the +1/-1 padding trick so K need not divide 32), run the
+    packed kernel, and map popcounts back to the +/-1 dot range.  Must
+    equal ``ref.binary_gemm_reference(x, w.T)`` exactly — pytest enforces.
+    """
+    from . import binarize as bz
+
+    k = x.shape[-1]
+    xp, wp = ref.pad_pair(x, w)
+    pop = xnor_gemm_packed(bz.pack(xp), bz.pack(wp))
+    return (2 * pop - k).astype(jnp.float32)

@@ -1,0 +1,241 @@
+"""L2 building blocks: BMXNet's Q-layers re-expressed in JAX.
+
+The paper's drop-in layers (``QActivation``, ``QConvolution``,
+``QFullyConnected``) are reproduced as functional layers over explicit
+parameter pytrees.  Training-path semantics follow §2.2.2: compute with
+{-1, +1} values through standard dots (XLA fuses these on any backend) with
+straight-through estimators (STE) for the sign/round non-differentiabilities;
+the Rust inference engine computes the same numbers with xnor+popcount
+(Eq. 2 equivalence, tested at every layer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+Params = dict[str, Any]
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_sign(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1, +1} with the clipped straight-through gradient.
+
+    Backward passes the gradient where |x| <= 1 and zeroes it elsewhere
+    (Hubara et al. / XNOR-Net; BMXNet inherits this rule from MXNet's
+    det_sign).
+    """
+    return ref.sign_binarize(x)
+
+
+def _ste_sign_fwd(x):
+    return ref.sign_binarize(x), x
+
+
+def _ste_sign_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+@jax.custom_vjp
+def ste_round(x: jax.Array) -> jax.Array:
+    """round(x) with identity gradient (DoReFa quantizer STE)."""
+    return jnp.round(x)
+
+
+ste_round.defvjp(lambda x: (jnp.round(x), None), lambda _, g: (g,))
+
+
+def qactivation(x: jax.Array, act_bit: int = 1) -> jax.Array:
+    """The paper's QActivation: binarize (k=1) or k-bit quantize inputs.
+
+    k = 1: clip to [-1, 1] then STE sign -> {-1, +1}.
+    k > 1: clip to [0, 1] then Eq. 1 with an STE round -> 2^k - 1 levels.
+    """
+    if act_bit == 1:
+        return ste_sign(jnp.clip(x, -1.0, 1.0))
+    levels = float((1 << act_bit) - 1)
+    return ste_round(jnp.clip(x, 0.0, 1.0) * levels) / levels
+
+
+def quantize_weights(w: jax.Array, act_bit: int) -> jax.Array:
+    """Weight binarization/quantization used inside QConv/QFC.
+
+    k = 1: STE sign.  k > 1: DoReFa-style: tanh-normalize to [0, 1],
+    Eq. 1-quantize, then rescale to [-1, 1].
+    """
+    if act_bit == 1:
+        return ste_sign(w)
+    t = jnp.tanh(w)
+    t01 = t / (2.0 * jnp.max(jnp.abs(t))) + 0.5
+    levels = float((1 << act_bit) - 1)
+    q = ste_round(t01 * levels) / levels
+    return 2.0 * q - 1.0
+
+
+# ---------------------------------------------------------------------------
+# Dense / conv layers
+# ---------------------------------------------------------------------------
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    """Full-precision fully connected: x (B, K) @ w (N, K)^T + b."""
+    return x @ p["w"].T + p["b"]
+
+
+def qdense(p: Params, x: jax.Array, act_bit: int = 1) -> jax.Array:
+    """QFullyConnected: quantized weights, standard dot, no bias.
+
+    The input is expected to already be quantized by a preceding
+    QActivation (the paper's block order QActivation-QFC-BatchNorm).
+    """
+    wq = quantize_weights(p["w"], act_bit)
+    return x @ wq.T
+
+
+def conv2d(
+    p: Params,
+    x: jax.Array,
+    stride: int = 1,
+    padding: str | int = "SAME",
+) -> jax.Array:
+    """Full-precision NCHW convolution with bias."""
+    out = _conv(x, p["w"], stride, padding)
+    return out + p["b"][None, :, None, None]
+
+
+def qconv2d(
+    p: Params,
+    x: jax.Array,
+    stride: int = 1,
+    padding: str | int = "SAME",
+    act_bit: int = 1,
+) -> jax.Array:
+    """QConvolution: quantized weights, standard conv, no bias.
+
+    Integer padding pads the (already binarized) input with **+1**, not 0:
+    a zero pad is unrepresentable in the xnor domain (sign(0) = +1), and
+    padding pre-binarization keeps the float training path and the Rust
+    xnor inference path bit-identical (the Eq. 2 contract).
+    """
+    wq = quantize_weights(p["w"], act_bit)
+    if isinstance(padding, int) and padding > 0:
+        x = jnp.pad(
+            x,
+            ((0, 0), (0, 0), (padding, padding), (padding, padding)),
+            constant_values=1.0,
+        )
+        padding = "VALID"
+    return _conv(x, wq, stride, padding)
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int, padding: str | int):
+    if isinstance(padding, int):
+        padding = [(padding, padding), (padding, padding)]
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm / pooling / misc
+# ---------------------------------------------------------------------------
+
+def batchnorm(
+    p: Params,
+    x: jax.Array,
+    state: Params,
+    train: bool,
+) -> tuple[jax.Array, Params]:
+    """BatchNorm over NCHW (axis 1) or NK (axis 1) with EMA running stats.
+
+    Returns (y, new_state); in eval mode state passes through unchanged.
+    """
+    axes = (0, 2, 3) if x.ndim == 4 else (0,)
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": BN_MOMENTUM * state["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * state["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    shape = (1, -1, 1, 1) if x.ndim == 4 else (1, -1)
+    inv = jax.lax.rsqrt(var + BN_EPS).reshape(shape)
+    y = (x - mean.reshape(shape)) * inv * p["gamma"].reshape(shape)
+    return y + p["beta"].reshape(shape), new_state
+
+
+def maxpool2d(x: jax.Array, size: int = 2, stride: int | None = None):
+    """Max pooling over NCHW spatial dims, VALID padding."""
+    stride = stride or size
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, size, size),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def global_avgpool(x: jax.Array) -> jax.Array:
+    """NCHW -> NC mean over spatial dims."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def flatten(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, bias: bool = True) -> Params:
+    scale = (2.0 / in_dim) ** 0.5
+    p = {"w": scale * jax.random.normal(key, (out_dim, in_dim), jnp.float32)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def init_conv(
+    key, in_ch: int, out_ch: int, ksize: int, bias: bool = True
+) -> Params:
+    fan_in = in_ch * ksize * ksize
+    scale = (2.0 / fan_in) ** 0.5
+    p = {
+        "w": scale
+        * jax.random.normal(key, (out_ch, in_ch, ksize, ksize), jnp.float32)
+    }
+    if bias:
+        p["b"] = jnp.zeros((out_ch,), jnp.float32)
+    return p
+
+
+def init_bn(ch: int) -> tuple[Params, Params]:
+    params = {"gamma": jnp.ones((ch,), jnp.float32),
+              "beta": jnp.zeros((ch,), jnp.float32)}
+    state = {"mean": jnp.zeros((ch,), jnp.float32),
+             "var": jnp.ones((ch,), jnp.float32)}
+    return params, state

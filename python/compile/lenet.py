@@ -1,0 +1,76 @@
+"""LeNet and Binary LeNet — the paper's Listing 1 / Listing 2 pair.
+
+Binary block order follows §2: *QActivation - QConv/QFC - BatchNorm - Pool*,
+with the first conv and last FC kept full precision (binarizing them
+"greatly decreases accuracy", confirmed from [14]).
+
+Architectures (28x28x1 input, 10 classes):
+
+  fp     : conv1(32,5x5) tanh pool bn | conv2(64,5x5) bn tanh pool |
+           flatten fc1(512) bn tanh | fc2(10)
+  binary : conv1(32,5x5) tanh pool bn | QAct QConv2(64,5x5) bn pool |
+           flatten QAct QFC1(512) bn tanh | fc2(10)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def init(key: jax.Array, binary: bool, act_bit: int = 1):
+    """Initialize (params, state) pytrees; identical layout for fp/binary."""
+    ks = jax.random.split(key, 4)
+    bn1, s1 = L.init_bn(32)
+    bn2, s2 = L.init_bn(64)
+    bn3, s3 = L.init_bn(512)
+    params = {
+        "conv1": L.init_conv(ks[0], 1, 32, 5),
+        "bn1": bn1,
+        "conv2": L.init_conv(ks[1], 32, 64, 5, bias=not binary),
+        "bn2": bn2,
+        "fc1": L.init_dense(ks[2], 64 * 4 * 4, 512, bias=not binary),
+        "bn3": bn3,
+        "fc2": L.init_dense(ks[3], 512, 10),
+    }
+    state = {"bn1": s1, "bn2": s2, "bn3": s3}
+    meta = {"arch": "lenet", "binary": binary, "act_bit": act_bit,
+            "input": [1, 28, 28], "classes": 10}
+    return params, state, meta
+
+
+def forward(
+    params, state, x: jax.Array, *, binary: bool, act_bit: int = 1,
+    train: bool = False,
+):
+    """Forward pass -> (logits, new_state).  x: (B, 1, 28, 28)."""
+    ns = dict(state)
+    # First conv stays full precision (paper §2).
+    h = L.conv2d(params["conv1"], x, padding="VALID")      # (B,32,24,24)
+    h = jnp.tanh(h)
+    h = L.maxpool2d(h)                                     # (B,32,12,12)
+    h, ns["bn1"] = L.batchnorm(params["bn1"], h, state["bn1"], train)
+
+    if binary:
+        h = L.qactivation(h, act_bit)
+        h = L.qconv2d(params["conv2"], h, padding="VALID", act_bit=act_bit)
+    else:
+        h = L.conv2d(params["conv2"], h, padding="VALID")  # (B,64,8,8)
+    h, ns["bn2"] = L.batchnorm(params["bn2"], h, state["bn2"], train)
+    if not binary:
+        h = jnp.tanh(h)
+    h = L.maxpool2d(h)                                     # (B,64,4,4)
+
+    h = L.flatten(h)
+    if binary:
+        h = L.qactivation(h, act_bit)
+        h = L.qdense(params["fc1"], h, act_bit)
+    else:
+        h = L.dense(params["fc1"], h)
+    h, ns["bn3"] = L.batchnorm(params["bn3"], h, state["bn3"], train)
+    h = jnp.tanh(h)
+
+    logits = L.dense(params["fc2"], h)  # last FC full precision
+    return logits, ns

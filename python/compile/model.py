@@ -1,0 +1,77 @@
+"""L2 facade: model zoo + the Pallas-backed inference variants.
+
+``aot.py`` builds every artifact through the functions here.  The training
+graphs use the STE formulation from :mod:`.layers`; ``lenet_forward_pallas``
+is the composition proof — the binary layers of LeNet run through the L1
+Pallas kernels (im2col + packed xnor GEMM) inside one lowered HLO module,
+and must produce bit-identical logits to the plain forward (pytest
+``test_model.py::test_pallas_forward_matches``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import lenet, resnet, train
+from .kernels import xnor_gemm
+
+__all__ = [
+    "lenet", "resnet", "train", "L",
+    "lenet_forward_pallas", "xnor_conv2d_pallas",
+]
+
+
+def xnor_conv2d_pallas(
+    p, x: jax.Array, stride: int = 1, padding: str | int = "VALID"
+) -> jax.Array:
+    """Binary convolution on the L1 packed-xnor path.
+
+    im2col (lax patches, feature order C*fh*fw matching an OIHW reshape)
+    followed by the Pallas xnor GEMM.  Inputs are expected binarized
+    (post-QActivation); weights are sign-binarized inside xnor_linear's
+    packing, so this equals qconv2d(...) exactly on {-1,+1} inputs.
+    """
+    w = p["w"]
+    o, _, fh, fw = w.shape
+    if isinstance(padding, int):
+        if padding > 0:
+            # +1 padding, matching layers.qconv2d (xnor-representable)
+            x = jnp.pad(
+                x,
+                ((0, 0), (0, 0), (padding, padding), (padding, padding)),
+                constant_values=1.0,
+            )
+        padding = "VALID"
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (fh, fw), (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    b, f, ho, wo = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(-1, f)
+    out = xnor_gemm.xnor_linear(cols, w.reshape(o, -1))
+    return out.reshape(b, ho, wo, o).transpose(0, 3, 1, 2)
+
+
+def lenet_forward_pallas(params, state, x, *, act_bit: int = 1,
+                         train: bool = False):
+    """Binary LeNet forward with QConv2/QFC1 on the Pallas xnor kernels."""
+    del train  # inference only: Pallas path has no STE; BN uses run stats
+    ns = dict(state)
+    h = L.conv2d(params["conv1"], x, padding="VALID")
+    h = jnp.tanh(h)
+    h = L.maxpool2d(h)
+    h, _ = L.batchnorm(params["bn1"], h, state["bn1"], False)
+
+    h = L.qactivation(h, act_bit)
+    h = xnor_conv2d_pallas(params["conv2"], h, padding="VALID")
+    h, _ = L.batchnorm(params["bn2"], h, state["bn2"], False)
+    h = L.maxpool2d(h)
+
+    h = L.flatten(h)
+    h = L.qactivation(h, act_bit)
+    h = xnor_gemm.xnor_linear(h, params["fc1"]["w"])
+    h, _ = L.batchnorm(params["bn3"], h, state["bn3"], False)
+    h = jnp.tanh(h)
+    return L.dense(params["fc2"], h), ns

@@ -1,0 +1,153 @@
+"""ResNet-18 with stage-wise (partial) binarization — paper §3.2 / Table 2.
+
+The MXNet ResNet-18 the paper uses has 4 ResUnit stages of 2 basic blocks.
+``fp_stages`` selects which stages stay full precision: Table 2 sweeps
+none / {1} / {2} / {3} / {4} / {1,2} / all.  Binary blocks use the paper's
+block order (QActivation before each QConv); the stem conv, downsample
+1x1 convs and the final FC stay full precision always (paper §3.2 strategy,
+downsample convs are <2% of weights and binarizing them breaks the skip
+path's scale).
+
+``width`` scales channel counts: 64 is the real ResNet-18 (Table 1/2 model
+sizes are computed from this inventory in Rust), 16 is the "mini" variant we
+can actually *train* on this 1-core CPU box for the accuracy-trend columns
+(substitution documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+NUM_STAGES = 4
+BLOCKS_PER_STAGE = 2
+
+
+def stage_widths(width: int) -> list[int]:
+    return [width * (1 << s) for s in range(NUM_STAGES)]
+
+
+def init(
+    key: jax.Array,
+    *,
+    fp_stages: frozenset[int] | set[int],
+    width: int = 64,
+    classes: int = 10,
+    in_ch: int = 3,
+    act_bit: int = 1,
+):
+    """Initialize (params, state, meta) for a CIFAR-style ResNet-18."""
+    fp_stages = frozenset(fp_stages)
+    widths = stage_widths(width)
+    keys = iter(jax.random.split(key, 64))
+    bn_s, st_s = L.init_bn(widths[0])
+    params = {"stem": L.init_conv(next(keys), in_ch, widths[0], 3, bias=False),
+              "stem_bn": bn_s}
+    state = {"stem_bn": st_s}
+    ch = widths[0]
+    for s in range(NUM_STAGES):
+        out_ch = widths[s]
+        binary = (s + 1) not in fp_stages
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            name = f"s{s + 1}b{b + 1}"
+            blk, blk_state = _init_block(
+                next(keys), ch, out_ch, stride, binary=binary
+            )
+            params[name] = blk
+            state[name] = blk_state
+            ch = out_ch
+    params["fc"] = L.init_dense(next(keys), ch, classes)
+    meta = {
+        "arch": "resnet18",
+        "width": width,
+        "fp_stages": sorted(fp_stages),
+        "act_bit": act_bit,
+        "classes": classes,
+        "in_ch": in_ch,
+    }
+    return params, state, meta
+
+
+def _init_block(key, in_ch: int, out_ch: int, stride: int, *, binary: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    bn1, s1 = L.init_bn(out_ch)
+    bn2, s2 = L.init_bn(out_ch)
+    p = {
+        "conv1": L.init_conv(k1, in_ch, out_ch, 3, bias=False),
+        "bn1": bn1,
+        "conv2": L.init_conv(k2, out_ch, out_ch, 3, bias=False),
+        "bn2": bn2,
+    }
+    s = {"bn1": s1, "bn2": s2}
+    if stride != 1 or in_ch != out_ch:
+        bnd, sd = L.init_bn(out_ch)
+        p["down"] = L.init_conv(k3, in_ch, out_ch, 1, bias=False)
+        p["down_bn"] = bnd
+        s["down_bn"] = sd
+    return p, s
+
+
+def _block(p, s, x, stride: int, *, binary: bool, act_bit: int, train: bool):
+    ns = dict(s)
+    if binary:
+        h = L.qactivation(x, act_bit)
+        h = L.qconv2d(p["conv1"], h, stride=stride, padding=1,
+                      act_bit=act_bit)
+    else:
+        h = L.conv2d({"w": p["conv1"]["w"],
+                      "b": jnp.zeros(p["conv1"]["w"].shape[0])},
+                     x, stride=stride, padding=1)
+    h, ns["bn1"] = L.batchnorm(p["bn1"], h, s["bn1"], train)
+    if not binary:
+        h = jax.nn.relu(h)
+
+    if binary:
+        h = L.qactivation(h, act_bit)
+        h = L.qconv2d(p["conv2"], h, padding=1, act_bit=act_bit)
+    else:
+        h = L.conv2d({"w": p["conv2"]["w"],
+                      "b": jnp.zeros(p["conv2"]["w"].shape[0])},
+                     h, padding=1)
+    h, ns["bn2"] = L.batchnorm(p["bn2"], h, s["bn2"], train)
+
+    if "down" in p:
+        skip = L.conv2d({"w": p["down"]["w"],
+                         "b": jnp.zeros(p["down"]["w"].shape[0])},
+                        x, stride=stride, padding=0)
+        skip, ns["down_bn"] = L.batchnorm(p["down_bn"], skip,
+                                          s["down_bn"], train)
+    else:
+        skip = x
+    out = h + skip
+    if not binary:
+        out = jax.nn.relu(out)
+    return out, ns
+
+
+def forward(
+    params, state, x: jax.Array, *,
+    fp_stages: frozenset[int] | set[int],
+    act_bit: int = 1,
+    train: bool = False,
+):
+    """Forward -> (logits, new_state).  x: (B, in_ch, 32, 32)."""
+    fp_stages = frozenset(fp_stages)
+    ns = dict(state)
+    h = L.conv2d({"w": params["stem"]["w"],
+                  "b": jnp.zeros(params["stem"]["w"].shape[0])},
+                 x, padding=1)
+    h, ns["stem_bn"] = L.batchnorm(params["stem_bn"], h,
+                                   state["stem_bn"], train)
+    h = jax.nn.relu(h)
+    for s in range(NUM_STAGES):
+        binary = (s + 1) not in fp_stages
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            name = f"s{s + 1}b{b + 1}"
+            h, ns[name] = _block(params[name], state[name], h, stride,
+                                 binary=binary, act_bit=act_bit, train=train)
+    h = L.global_avgpool(h)
+    return L.dense(params["fc"], h), ns

@@ -1,0 +1,106 @@
+"""Training graph: loss, SGD-with-momentum, and the AOT train_step factory.
+
+The train_step is a *pure flat-array function* so the Rust coordinator can
+drive it through PJRT without any pytree machinery: inputs are the flattened
+params, BN state, momentum buffers, a batch (x, y) and a scalar lr; outputs
+are the updated flats plus (loss, accuracy).  Flattening order is the
+deterministic sorted-key order of :func:`flatten_tree` and is recorded in
+the artifact manifest.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 0.0  # binary weights are regularized by the clipped STE
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> list[tuple[str, jax.Array]]:
+    """Deterministic (path, leaf) flattening: sorted dict keys, '.'-joined."""
+    if isinstance(tree, dict):
+        out: list[tuple[str, jax.Array]] = []
+        for k in sorted(tree):
+            out.extend(flatten_tree(tree[k], f"{prefix}{k}."))
+        return out
+    return [(prefix[:-1], tree)]
+
+
+def unflatten_like(tree: Any, flat: list[jax.Array], _i: list[int] | None = None):
+    """Inverse of flatten_tree given the original tree structure."""
+    _i = _i if _i is not None else [0]
+    if isinstance(tree, dict):
+        return {k: unflatten_like(tree[k], flat, _i) for k in sorted(tree)}
+    v = flat[_i[0]]
+    _i[0] += 1
+    return v
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def make_train_step(
+    forward: Callable,
+    params_tpl: Any,
+    state_tpl: Any,
+) -> Callable:
+    """Build the flat train_step for a model ``forward(params, state, x,
+    train=True) -> (logits, new_state)``.
+
+    Returns ``step(p_flat, s_flat, m_flat, x, y, lr) ->
+    (new_p_flat, new_s_flat, new_m_flat, loss, acc)`` over flat lists.
+    """
+    n_p = len(flatten_tree(params_tpl))
+    n_s = len(flatten_tree(state_tpl))
+
+    def step(*args):
+        p_flat = list(args[:n_p])
+        s_flat = list(args[n_p:n_p + n_s])
+        m_flat = list(args[n_p + n_s:2 * n_p + n_s])
+        x, y, lr = args[2 * n_p + n_s:]
+        params = unflatten_like(params_tpl, p_flat)
+        state = unflatten_like(state_tpl, s_flat)
+
+        def loss_fn(params):
+            logits, new_state = forward(params, state, x, train=True)
+            return cross_entropy(logits, y), (logits, new_state)
+
+        (loss, (logits, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        acc = accuracy(logits, y)
+
+        g_flat = [g for _, g in flatten_tree(grads)]
+        new_m = [MOMENTUM * m + g for m, g in zip(m_flat, g_flat)]
+        new_p = [p - lr * m for p, m in zip(p_flat, new_m)]
+        new_s = [s for _, s in flatten_tree(new_state)]
+        return (*new_p, *new_s, *new_m, loss, acc)
+
+    return step
+
+
+def make_infer(forward: Callable, params_tpl: Any, state_tpl: Any) -> Callable:
+    """Flat inference fn: (p_flat..., s_flat..., x) -> (logits,)."""
+    n_p = len(flatten_tree(params_tpl))
+    n_s = len(flatten_tree(state_tpl))
+
+    def infer(*args):
+        p_flat = list(args[:n_p])
+        s_flat = list(args[n_p:n_p + n_s])
+        (x,) = args[n_p + n_s:]
+        params = unflatten_like(params_tpl, p_flat)
+        state = unflatten_like(state_tpl, s_flat)
+        logits, _ = forward(params, state, x, train=False)
+        return (logits,)
+
+    return infer

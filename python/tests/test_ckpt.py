@@ -1,0 +1,65 @@
+"""BMXC checkpoint format roundtrip + manifest sanity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ckpt
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    seed=st.integers(0, 1000),
+)
+def test_ckpt_roundtrip(tmp_path_factory, n, seed):
+    rng = np.random.default_rng(seed)
+    tensors = []
+    for i in range(n):
+        ndim = int(rng.integers(0, 4))
+        shape = tuple(int(d) for d in rng.integers(1, 5, ndim))
+        if rng.random() < 0.5:
+            arr = rng.standard_normal(shape).astype(np.float32)
+        else:
+            arr = rng.integers(0, 2**32, shape, dtype=np.uint32)
+        tensors.append((f"t{i}.x", arr))
+    path = str(tmp_path_factory.mktemp("ck") / "t.bmxc")
+    ckpt.save(path, tensors)
+    back = ckpt.load(path)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, back):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ckpt_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.bmxc"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="bad magic"):
+        ckpt.load(str(p))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for name, entry in man["models"].items():
+        assert os.path.exists(os.path.join(ART, entry["init_ckpt"])), name
+        assert os.path.exists(os.path.join(ART, entry["train"]["file"]))
+        for inf in entry["infer"]:
+            assert os.path.exists(os.path.join(ART, inf["file"]))
+        # init ckpt matches declared param/state inventory
+        tensors = dict(ckpt.load(os.path.join(ART, entry["init_ckpt"])))
+        for pname, shape in entry["params"]:
+            assert tuple(shape) == tensors[f"params.{pname}"].shape, pname
+        for sname, shape in entry["state"]:
+            assert tuple(shape) == tensors[f"state.{sname}"].shape, sname
+    for kname, kentry in man["kernels"].items():
+        assert os.path.exists(os.path.join(ART, kentry["file"])), kname

@@ -1,0 +1,206 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes/values; equality is exact (integer/bit semantics),
+not allclose, except where float rounding is inherent (Eq. 1 quantizer).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binarize as K_bin
+from compile.kernels import quantize as K_quant
+from compile.kernels import ref
+from compile.kernels import xnor_gemm as K_gemm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# binarize / pack
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 65), k=st.integers(1, 200), seed=st.integers(0, 99))
+def test_binarize_matches_ref(m, k, seed):
+    x = _rand(np.random.default_rng(seed), m, k)
+    np.testing.assert_array_equal(
+        np.asarray(K_bin.binarize(x)), np.asarray(ref.sign_binarize(x)))
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 65), words=st.integers(1, 8), seed=st.integers(0, 99))
+def test_pack_matches_ref(m, words, seed):
+    x = _rand(np.random.default_rng(seed), m, 32 * words)
+    np.testing.assert_array_equal(
+        np.asarray(K_bin.pack(x)), np.asarray(ref.pack_bits(x)))
+
+
+def test_pack_rejects_unaligned_k():
+    with pytest.raises(ValueError):
+        K_bin.pack(jnp.zeros((4, 33)))
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 16), k=st.integers(1, 100), seed=st.integers(0, 99))
+def test_pack_unpack_roundtrip(m, k, seed):
+    x = _rand(np.random.default_rng(seed), m, k)
+    xp = ref.pad_to_words(x, 1.0)
+    back = ref.unpack_bits(ref.pack_bits(xp), k)
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(ref.sign_binarize(x)))
+
+
+def test_binarize_zero_maps_to_plus_one():
+    x = jnp.zeros((2, 32))
+    assert np.all(np.asarray(K_bin.binarize(x)) == 1.0)
+    assert np.asarray(ref.pack_bits(x)).tolist() == [[0xFFFFFFFF]] * 2
+
+
+def test_pack_lsb_first_bit_order():
+    # Only element 0 positive -> word == 1 (LSB-first).
+    x = -np.ones((1, 32), np.float32)
+    x[0, 0] = 1.0
+    assert np.asarray(ref.pack_bits(jnp.asarray(x)))[0, 0] == 1
+    x[0, 0], x[0, 31] = -1.0, 1.0
+    assert np.asarray(ref.pack_bits(jnp.asarray(x)))[0, 0] == 1 << 31
+
+
+# ---------------------------------------------------------------------------
+# xnor GEMM
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70), n=st.integers(1, 70), words=st.integers(1, 6),
+    seed=st.integers(0, 99),
+)
+def test_xnor_gemm_packed_matches_ref(m, n, words, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2**32, (m, words), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, (n, words), dtype=np.uint32))
+    got = K_gemm.xnor_gemm_packed(a, b, block_m=32, block_n=32)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.xnor_popcount_gemm(a, b)))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40), n=st.integers(1, 40), k=st.integers(1, 150),
+    seed=st.integers(0, 99),
+)
+def test_xnor_linear_equals_float_binary_gemm(m, n, k, seed):
+    """The paper's core claim (§2.2.2): xnor path == float dot on +/-1."""
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, n, k)
+    got = K_gemm.xnor_linear(x, w)
+    expect = ref.binary_gemm_reference(x, w.T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 30), k=st.integers(1, 120), seed=st.integers(0, 99))
+def test_eq2_range_map_roundtrip(m, k, seed):
+    """Eq. 2: dot -> xnor range -> dot is the identity on +/-1 dots."""
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, m, k)
+    dot = ref.binary_gemm_reference(x, w.T)
+    pop = ref.dot_to_xnor(dot, k)
+    back = ref.xnor_to_dot(pop.astype(np.int32), k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(dot))
+    # xnor output range [0, n], step 1 (paper §2.2.2)
+    p = np.asarray(pop)
+    assert p.min() >= 0 and p.max() <= k
+    np.testing.assert_array_equal(p, np.round(p))
+
+
+def test_xnor_gemm_all_match_and_all_mismatch():
+    ones = jnp.asarray(np.full((3, 2), 0xFFFFFFFF, np.uint32))
+    zeros = jnp.asarray(np.zeros((3, 2), np.uint32))
+    assert np.all(np.asarray(ref.xnor_popcount_gemm(ones, ones)) == 64)
+    assert np.all(np.asarray(ref.xnor_popcount_gemm(ones, zeros)) == 0)
+
+
+@pytest.mark.parametrize("block", [8, 32, 128, 256])
+def test_xnor_gemm_block_shape_invariance(block):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 2**32, (50, 9), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, (70, 9), dtype=np.uint32))
+    got = K_gemm.xnor_gemm_packed(a, b, block_m=block, block_n=block)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.xnor_popcount_gemm(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# quantize (Eq. 1)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 20), m=st.integers(1, 40), seed=st.integers(0, 99))
+def test_quantize_matches_ref_1ulp(k, m, seed):
+    """Kernel (interpret-mode numpy) vs ref (XLA eager) may differ by one
+    ulp in the final division (`round(x*L)/L`); everything stronger —
+    level alphabet, idempotence, monotonicity — is tested exactly below."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((m, 16)).astype(np.float32))
+    a = np.asarray(K_quant.quantize(x, k))
+    b = np.asarray(ref.quantize_k(x, k))
+    ulp = np.spacing(np.maximum(np.abs(a), np.abs(b)).astype(np.float32))
+    np.testing.assert_array_less(np.abs(a - b), 1.5 * ulp + 1e-12)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(21, 31), seed=st.integers(0, 99))
+def test_quantize_matches_ref_high_bits(k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((8, 16)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(K_quant.quantize(x, k)),
+        np.asarray(ref.quantize_k(x, k)), rtol=1e-6, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 8), seed=st.integers(0, 99))
+def test_quantize_idempotent(k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((8, 16)).astype(np.float32))
+    q1 = ref.quantize_k(x, k)
+    np.testing.assert_allclose(np.asarray(ref.quantize_k(q1, k)),
+                               np.asarray(q1), atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 8))
+def test_quantize_level_count(k):
+    """Eq. 1 produces exactly 2^k distinct values on [0, 1]."""
+    x = jnp.linspace(0.0, 1.0, 4096, dtype=jnp.float32)[None, :]
+    q = np.unique(np.asarray(ref.quantize_k(x, k)))
+    assert len(q) == (1 << k)
+    assert q[0] == 0.0 and q[-1] == 1.0
+
+
+def test_quantize_monotone():
+    x = jnp.linspace(0.0, 1.0, 1000, dtype=jnp.float32)[None, :]
+    q = np.asarray(ref.quantize_k(x, 3))[0]
+    assert np.all(np.diff(q) >= 0)
+
+
+def test_quantize_rejects_bad_k():
+    x = jnp.zeros((2, 2))
+    for bad in (0, 32, -1):
+        with pytest.raises(ValueError):
+            ref.quantize_k(x, bad)
+        with pytest.raises(ValueError):
+            K_quant.quantize(x, bad)
+
+
+def test_clip_quantize_clips():
+    x = jnp.asarray([[-3.0, 0.5, 7.0]])
+    q = np.asarray(K_quant.clip_quantize(x, 2))
+    assert q[0, 0] == 0.0 and q[0, 2] == 1.0

@@ -1,0 +1,233 @@
+"""L2 model tests: shapes, STE gradients, Eq.2 layer equivalence,
+Pallas-forward equality, and loss-decreases training smoke tests."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import lenet, model, resnet
+from compile import train as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# STE + Q-layers
+# ---------------------------------------------------------------------------
+
+def test_ste_sign_forward_and_grad():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    y, vjp = jax.vjp(L.ste_sign, x)
+    np.testing.assert_array_equal(np.asarray(y), [-1, -1, 1, 1, 1])
+    (g,) = vjp(jnp.ones_like(x))
+    # gradient passes where |x| <= 1, clipped outside
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_ste_round_identity_grad():
+    x = jnp.asarray([0.2, 0.7, 1.4])
+    y, vjp = jax.vjp(L.ste_round, x)
+    np.testing.assert_array_equal(np.asarray(y), [0, 1, 1])
+    (g,) = vjp(jnp.asarray([3.0, 4.0, 5.0]))
+    np.testing.assert_array_equal(np.asarray(g), [3, 4, 5])
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_qactivation_output_alphabet(k):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,)) * 2
+    y = np.asarray(L.qactivation(x, k))
+    if k == 1:
+        assert set(np.unique(y)) <= {-1.0, 1.0}
+    else:
+        levels = (1 << k) - 1
+        np.testing.assert_allclose(y * levels, np.round(y * levels),
+                                   atol=1e-5)
+        assert y.min() >= 0.0 and y.max() <= 1.0
+
+
+def test_qdense_equals_binarized_dense():
+    """QFC == plain dot on sign-binarized weights/inputs (§2.2.2)."""
+    p = L.init_dense(KEY, 37, 11, bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 37))
+    xb = L.ste_sign(x)
+    got = L.qdense(p, xb)
+    expect = xb @ jnp.where(p["w"] >= 0, 1.0, -1.0).T
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_qconv_equals_binarized_conv():
+    p = L.init_conv(KEY, 8, 4, 3, bias=False)
+    x = L.ste_sign(jax.random.normal(jax.random.PRNGKey(3), (2, 8, 9, 9)))
+    got = L.qconv2d(p, x, padding="VALID")
+    pb = {"w": jnp.where(p["w"] >= 0, 1.0, -1.0),
+          "b": jnp.zeros(4)}
+    expect = L.conv2d(pb, x, padding="VALID")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=0, atol=1e-4)
+
+
+def test_xnor_conv2d_pallas_matches_qconv():
+    """The L1-composed conv equals the L2 float-path conv exactly."""
+    p = L.init_conv(KEY, 8, 6, 5, bias=False)
+    x = L.ste_sign(jax.random.normal(jax.random.PRNGKey(4), (2, 8, 12, 12)))
+    got = model.xnor_conv2d_pallas(p, x, padding="VALID")
+    pb = {"w": jnp.where(p["w"] >= 0, 1.0, -1.0), "b": jnp.zeros(6)}
+    expect = L.conv2d(pb, x, padding="VALID")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# batchnorm
+# ---------------------------------------------------------------------------
+
+def test_batchnorm_train_normalizes():
+    p, s = L.init_bn(4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 4, 6, 6)) * 3 + 2
+    y, ns = L.batchnorm(p, x, s, train=True)
+    yn = np.asarray(y)
+    np.testing.assert_allclose(yn.mean(axis=(0, 2, 3)), 0, atol=1e-4)
+    np.testing.assert_allclose(yn.std(axis=(0, 2, 3)), 1, atol=1e-2)
+    # EMA moved toward batch stats
+    assert np.all(np.asarray(ns["mean"]) != np.asarray(s["mean"]))
+
+
+def test_batchnorm_eval_uses_running_stats():
+    p, s = L.init_bn(3)
+    s = {"mean": jnp.asarray([1.0, 2.0, 3.0]), "var": jnp.ones(3) * 4}
+    x = jnp.ones((2, 3, 2, 2))
+    y, ns = L.batchnorm(p, x, s, train=False)
+    expect = (1.0 - np.asarray([1, 2, 3])) / np.sqrt(4 + L.BN_EPS)
+    np.testing.assert_allclose(np.asarray(y)[0, :, 0, 0], expect, rtol=1e-5)
+    assert ns is s
+
+
+# ---------------------------------------------------------------------------
+# LeNet / ResNet shapes + training smoke
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("binary", [True, False])
+def test_lenet_shapes(binary):
+    params, state, _ = lenet.init(KEY, binary=binary)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 1, 28, 28))
+    logits, ns = lenet.forward(params, state, x, binary=binary, train=True)
+    assert logits.shape == (4, 10)
+    assert set(ns) == set(state)
+
+
+@pytest.mark.parametrize("fp_stages", [frozenset(), frozenset({1, 2, 3, 4}),
+                                       frozenset({1, 2})])
+def test_resnet_shapes(fp_stages):
+    params, state, _ = resnet.init(KEY, fp_stages=fp_stages, width=8,
+                                   classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 3, 32, 32))
+    logits, _ = resnet.forward(params, state, x, fp_stages=fp_stages)
+    assert logits.shape == (2, 10)
+
+
+def test_flatten_unflatten_roundtrip():
+    params, state, _ = lenet.init(KEY, binary=True)
+    flat = T.flatten_tree(params)
+    names = [n for n, _ in flat]
+    assert names == sorted(names)
+    rebuilt = T.unflatten_like(params, [a for _, a in flat])
+    for (n1, a1), (n2, a2) in zip(T.flatten_tree(rebuilt), flat):
+        assert n1 == n2
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def _run_steps(fwd, params, state, n_steps, batch, in_shape, classes, lr):
+    step = jax.jit(T.make_train_step(fwd, params, state))
+    p_flat = [a for _, a in T.flatten_tree(params)]
+    s_flat = [a for _, a in T.flatten_tree(state)]
+    m_flat = [jnp.zeros_like(a) for a in p_flat]
+    rng = np.random.default_rng(0)
+    losses = []
+    for i in range(n_steps):
+        # Learnable synthetic task: class = argmax of per-class mean mask.
+        y = rng.integers(0, classes, batch).astype(np.int32)
+        x = rng.standard_normal((batch, *in_shape)).astype(np.float32) * 0.1
+        x[np.arange(batch), 0, y % in_shape[1], :] += 2.0
+        out = step(*p_flat, *s_flat, *m_flat,
+                   jnp.asarray(x), jnp.asarray(y), jnp.float32(lr))
+        n_p, n_s = len(p_flat), len(s_flat)
+        p_flat = list(out[:n_p])
+        s_flat = list(out[n_p:n_p + n_s])
+        m_flat = list(out[n_p + n_s:2 * n_p + n_s])
+        losses.append(float(out[-2]))
+    return losses
+
+
+def test_binary_lenet_loss_decreases():
+    params, state, _ = lenet.init(KEY, binary=True)
+    fwd = lambda p, s, x, train=False: lenet.forward(
+        p, s, x, binary=True, train=train)
+    losses = _run_steps(fwd, params, state, 30, 16, (1, 28, 28), 10, 0.05)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.9, losses
+
+
+def test_fp_lenet_loss_decreases():
+    params, state, _ = lenet.init(KEY, binary=False)
+    fwd = lambda p, s, x, train=False: lenet.forward(
+        p, s, x, binary=False, train=train)
+    losses = _run_steps(fwd, params, state, 30, 16, (1, 28, 28), 10, 0.05)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.9, losses
+
+
+def test_pallas_forward_matches_plain_forward():
+    """L1-composed LeNet inference == plain L2 inference, bit-for-bit on
+    the binary layers (tiny float tolerance from BN arithmetic order)."""
+    params, state, _ = lenet.init(KEY, binary=True)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 1, 28, 28))
+    plain, _ = lenet.forward(params, state, x, binary=True, train=False)
+    pallas, _ = model.lenet_forward_pallas(params, state, x)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(pallas),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("act_bit", [2, 4])
+def test_kbit_lenet_forward_and_weight_alphabet(act_bit):
+    """paper §2.1: act_bit > 1 uses Eq.1-quantized weights/activations."""
+    params, state, _ = lenet.init(KEY, binary=True, act_bit=act_bit)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 1, 28, 28))
+    logits, _ = lenet.forward(params, state, x, binary=True,
+                              act_bit=act_bit, train=False)
+    assert logits.shape == (2, 10)
+    wq = np.asarray(L.quantize_weights(params["conv2"]["w"], act_bit))
+    levels = np.unique(wq)
+    assert len(levels) <= (1 << act_bit)
+    assert wq.min() >= -1.0 and wq.max() <= 1.0
+
+
+def test_kbit_lenet_loss_decreases():
+    params, state, _ = lenet.init(KEY, binary=True, act_bit=2)
+    fwd = lambda p, s, x, train=False: lenet.forward(
+        p, s, x, binary=True, act_bit=2, train=train)
+    losses = _run_steps(fwd, params, state, 30, 16, (1, 28, 28), 10, 0.05)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.9, losses
+
+
+def test_resnet_partial_binarization_param_counts():
+    """More fp stages never decreases binarizable parameter fraction —
+    the Table 2 size ordering none < 1st < 2nd < 3rd < 4th < all."""
+    def binary_params(fp_stages):
+        params, _, _ = resnet.init(KEY, fp_stages=fp_stages, width=16)
+        n = 0
+        for s in range(1, 5):
+            if s in fp_stages:
+                continue
+            for b in (1, 2):
+                blk = params[f"s{s}b{b}"]
+                n += blk["conv1"]["w"].size + blk["conv2"]["w"].size
+        return n
+
+    sizes = [binary_params(fs) for fs in
+             [frozenset(), {1}, {2}, {3}, {4}, {1, 2}, {1, 2, 3, 4}]]
+    assert sizes[0] > 0 and sizes[-1] == 0
+    # stage s cost grows with s (channel widths double): fp1 keeps most bits
+    assert sizes[1] > sizes[2] > sizes[3] > sizes[4]
+    assert sizes[5] < sizes[2]

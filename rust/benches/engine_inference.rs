@@ -1,0 +1,90 @@
+//! Binary-engine inference latency/throughput + GEMM-method ablation.
+//!
+//!     cargo bench --bench engine_inference
+//!
+//! Measures the deployed path (the role of the paper's mobile apps):
+//! converted `.bmx` LeNet and mini-ResNet classified by the Rust xnor
+//! engine at several batch sizes, plus an ablation over the xnor kernel
+//! variant used inside QConv/QFC (DESIGN.md calls this design choice out).
+
+use repro::bench::harness::{time_best_of, BenchTable};
+use repro::data::Kind;
+use repro::gemm::{xnor_gemm_prepacked, Method, PackedMatrix, Side};
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::nn::Engine;
+use repro::runtime::Manifest;
+use repro::tensor::Tensor;
+
+fn main() {
+    let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) else {
+        println!("artifacts not built; run `make artifacts` first");
+        return;
+    };
+    let reps: usize = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    let mut table = BenchTable::new(
+        "Engine inference (rust xnor path)",
+        &["model", "batch", "ms/batch", "img/s"],
+    );
+    for (model, kind) in [
+        ("lenet_bin", Kind::Digits),
+        ("lenet_fp", Kind::Digits),
+        ("resnet_mini_bin", Kind::Cifar),
+    ] {
+        let entry = man.model(model).unwrap();
+        let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+        let names = match entry.arch.as_str() {
+            "lenet" if model == "lenet_bin" => inventory::lenet(true).binary_names(),
+            "resnet18" => {
+                let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap();
+                inventory::resnet18(width, entry.classes, Stem::Cifar, &entry.fp_stages())
+                    .binary_names()
+            }
+            _ => vec![],
+        };
+        let engine = Engine::from_bmx(&convert(&ck, &names, &entry.bmx_meta()).unwrap()).unwrap();
+        for batch in [1usize, 8, 32] {
+            let ds = kind.generate(batch, 3);
+            let [c, h, w] = engine.input_shape();
+            let x = Tensor::new(vec![batch, c, h, w], ds.images.clone());
+            let d = time_best_of(reps, || engine.forward(&x).unwrap());
+            table.row(vec![
+                model.into(),
+                batch.to_string(),
+                format!("{:.2}", d.as_secs_f64() * 1e3),
+                format!("{:.0}", batch as f64 / d.as_secs_f64()),
+            ]);
+        }
+    }
+    table.print();
+
+    // Ablation: xnor kernel variant on the LeNet QConv2 workload
+    // (rows = batch*8*8 im2col rows, K = 32*5*5 = 800, N = 64 filters).
+    let mut ab = BenchTable::new(
+        "Ablation: xnor kernel variant on the QConv2 GEMM (b=32)",
+        &["method", "us/call", "speedup vs xnor_32"],
+    );
+    let (m, n, k) = (32 * 64, 64, 800);
+    let mut rng = repro::data::Rng::new(5);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+    let pb = PackedMatrix::pack_cols(&b, k, n);
+    let mut base = None;
+    for method in [Method::Xnor32, Method::Xnor64, Method::Xnor64Blocked, Method::Xnor64Mt] {
+        let d = time_best_of(reps, || xnor_gemm_prepacked(method, &pa, &pb));
+        let us = d.as_secs_f64() * 1e6;
+        let b0 = *base.get_or_insert(us);
+        ab.row(vec![
+            method.label().into(),
+            format!("{us:.0}"),
+            format!("{:.2}x", b0 / us),
+        ]);
+    }
+    ab.print();
+}

@@ -1,0 +1,40 @@
+//! Figure 1: processing time of each GEMM method across input channel
+//! sizes (filters 64, kernel 5×5, batch 200 — reduced to 20 by default).
+//!
+//!     cargo bench --bench gemm_fig1            # reduced (batch 20)
+//!     BENCH_FULL=1 cargo bench --bench gemm_fig1   # paper-exact batch 200
+//!
+//! Paper reference (4-core i5, batch 200): naive ≈ 19,000 ms at C=512;
+//! xnor_64_omp ≈ 125× over naive and ≈ 50× over Cblas; binarization
+//! included still ≈ 13× over Cblas.
+
+use repro::bench::{fig1_workloads, run_gemm_figure};
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let reps: usize = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let ws = fig1_workloads(!full);
+    let rows = run_gemm_figure(
+        "Figure 1: GEMM processing time vs input channels (M=64, 5x5)",
+        "C",
+        &ws,
+        reps,
+        true,
+    );
+    // paper-shape summary: who wins and by what factor at C=256
+    let c256 = rows.iter().find(|r| r.x == 256).expect("C=256 row");
+    let labels: Vec<&str> = c256.timings.iter().map(|(l, _)| *l).collect();
+    let blocked = labels.iter().position(|&l| l == "cblas").unwrap();
+    let omp = labels.iter().position(|&l| l == "xnor_64_omp").unwrap();
+    println!(
+        "\nC=256: xnor_64_omp {:.1}x vs naive, {:.1}x vs cblas (paper: ~125x, ~50x on 4 cores)",
+        c256.speedup(omp),
+        c256.speedup(omp) / c256.speedup(blocked),
+    );
+    if !full {
+        println!("(reduced batch 20; set BENCH_FULL=1 for paper-exact shapes)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Figure 2: speedup over the naive GEMM while varying the convolution's
+//! filter number (input channels 256, kernel 5×5, batch 200 → reduced 20).
+//!
+//!     cargo bench --bench gemm_fig2
+//!     BENCH_FULL=1 cargo bench --bench gemm_fig2
+
+use repro::bench::{fig2_workloads, run_gemm_figure};
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let reps: usize = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let ws = fig2_workloads(!full);
+    let rows = run_gemm_figure(
+        "Figure 2: speedup vs naive, varying filter number (C=256, 5x5)",
+        "filters",
+        &ws,
+        reps,
+        false,
+    );
+    // paper shape: speedup grows with filter count (better A-row reuse)
+    let omp = rows[0].timings.iter().position(|(l, _)| *l == "xnor_64_omp").unwrap();
+    let first = rows.first().unwrap().speedup(omp);
+    let last = rows.last().unwrap().speedup(omp);
+    println!(
+        "\nxnor_64_omp speedup: {first:.1}x @ {} filters -> {last:.1}x @ {} filters \
+         (paper: rises with filter number)",
+        rows.first().unwrap().x,
+        rows.last().unwrap().x
+    );
+}

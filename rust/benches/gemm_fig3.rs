@@ -1,0 +1,30 @@
+//! Figure 3: speedup over the naive GEMM while varying the kernel size
+//! (input channels 256, filters 64, batch 200 → reduced 20).
+//!
+//!     cargo bench --bench gemm_fig3
+//!     BENCH_FULL=1 cargo bench --bench gemm_fig3
+
+use repro::bench::{fig3_workloads, run_gemm_figure};
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let reps: usize = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let ws = fig3_workloads(!full);
+    let rows = run_gemm_figure(
+        "Figure 3: speedup vs naive, varying kernel size (C=256, filters=64)",
+        "kernel",
+        &ws,
+        reps,
+        false,
+    );
+    let omp = rows[0].timings.iter().position(|(l, _)| *l == "xnor_64_omp").unwrap();
+    println!(
+        "\nxnor_64_omp speedup: {:.1}x @ 1x1 -> {:.1}x @ 8x8 \
+         (paper: grows with K = k^2 * C)",
+        rows.first().unwrap().speedup(omp),
+        rows.last().unwrap().speedup(omp)
+    );
+}

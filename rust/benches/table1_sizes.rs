@@ -1,0 +1,76 @@
+//! Table 1 (model-size columns): LeNet on MNIST and ResNet-18 on CIFAR-10,
+//! binary vs full precision, with byte-exact converter measurements.
+//!
+//!     cargo bench --bench table1_sizes
+//!
+//! Paper reference: LeNet 206 kB / 4.6 MB; ResNet-18 1.5 MB / 44.7 MB (29×).
+//! The accuracy columns are produced by the training examples
+//! (`cargo run --release --example table_accuracy`) — see EXPERIMENTS.md.
+
+use repro::bench::harness::BenchTable;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::runtime::Manifest;
+
+const MB: f64 = 1024.0 * 1024.0;
+const KB: f64 = 1024.0;
+
+fn main() {
+    let mut table = BenchTable::new(
+        "Table 1: model sizes (binary / full precision)",
+        &["dataset", "arch", "binary", "fp32", "ratio", "paper"],
+    );
+
+    // LeNet — exact inventory accounting.
+    let lenet_bin = inventory::lenet(true);
+    let lenet_fp = inventory::lenet(false);
+    table.row(vec![
+        "MNIST".into(),
+        "LeNet".into(),
+        format!("{:.0} kB", lenet_bin.bmx_bytes() as f64 / KB),
+        format!("{:.1} MB", lenet_fp.fp32_bytes() as f64 / MB),
+        format!("{:.1}x", lenet_fp.fp32_bytes() as f64 / lenet_bin.bmx_bytes() as f64),
+        "206kB / 4.6MB".into(),
+    ]);
+
+    // ResNet-18 (real width 64) — exact inventory accounting.
+    let rn_bin = inventory::resnet18(64, 10, Stem::Cifar, &[]);
+    let rn_fp = inventory::resnet18(64, 10, Stem::Cifar, &[1, 2, 3, 4]);
+    table.row(vec![
+        "CIFAR-10".into(),
+        "ResNet-18".into(),
+        format!("{:.1} MB", rn_bin.bmx_bytes() as f64 / MB),
+        format!("{:.1} MB", rn_fp.fp32_bytes() as f64 / MB),
+        format!("{:.1}x", rn_fp.fp32_bytes() as f64 / rn_bin.bmx_bytes() as f64),
+        "1.5MB / 44.7MB (29x)".into(),
+    ]);
+    table.print();
+
+    // Converter cross-check on the real artifacts (trained-shape ckpts).
+    if let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) {
+        let mut t2 = BenchTable::new(
+            "Converter cross-check (measured .bmx payload bytes)",
+            &["model", "predicted", "measured", "match"],
+        );
+        for (name, inv) in [
+            ("lenet_bin", inventory::lenet(true)),
+            ("lenet_fp", inventory::lenet(false)),
+        ] {
+            let entry = man.model(name).unwrap();
+            let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+            let names = if name == "lenet_bin" { inv.binary_names() } else { vec![] };
+            let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+            let predicted = if name == "lenet_bin" { inv.bmx_bytes() } else { inv.fp32_bytes() };
+            t2.row(vec![
+                name.into(),
+                predicted.to_string(),
+                bmx.payload_bytes().to_string(),
+                (predicted == bmx.payload_bytes()).to_string(),
+            ]);
+        }
+        t2.print();
+    } else {
+        println!("(artifacts not built; converter cross-check skipped)");
+    }
+}

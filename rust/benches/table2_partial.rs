@@ -1,0 +1,65 @@
+//! Table 2 (model-size ladder): ResNet-18 on ImageNet with stage-wise
+//! partial binarization — byte-exact size accounting for every row of the
+//! paper's table, plus the converter cross-check on the mini artifacts.
+//!
+//!     cargo bench --bench table2_partial
+//!
+//! Paper reference sizes: none 3.6 MB · 1st 4.1 · 2nd 5.6 · 3rd 11.3 ·
+//! 4th 36 · 1st+2nd 6.2 · all 47 MB.  The accuracy trend columns come from
+//! training the mini variants (`--example table_accuracy`).
+
+use repro::bench::harness::BenchTable;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::runtime::Manifest;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+const ROWS: [(&str, &[usize], &str); 7] = [
+    ("none", &[], "3.6MB"),
+    ("1st", &[1], "4.1MB"),
+    ("2nd", &[2], "5.6MB"),
+    ("3rd", &[3], "11.3MB"),
+    ("4th", &[4], "36MB"),
+    ("1st,2nd", &[1, 2], "6.2MB"),
+    ("all", &[1, 2, 3, 4], "47MB"),
+];
+
+fn main() {
+    let mut table = BenchTable::new(
+        "Table 2: ResNet-18 ImageNet sizes by full-precision stage",
+        &["fp stage", "size (ours)", "size (paper)"],
+    );
+    for (label, fp_stages, paper) in ROWS {
+        let inv = inventory::resnet18(64, 1000, Stem::Imagenet, fp_stages);
+        table.row(vec![
+            label.into(),
+            format!("{:.1} MB", inv.bmx_bytes() as f64 / MB),
+            paper.into(),
+        ]);
+    }
+    table.print();
+
+    // Converter cross-check on the trainable mini variants.
+    if let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) {
+        let mut t2 = BenchTable::new(
+            "Mini (width 16, 100-class) converted sizes — same ordering",
+            &["config", ".bmx bytes"],
+        );
+        for cfg in ["none", "fp1", "fp2", "fp3", "fp4", "fp12", "all"] {
+            let name = format!("resnet_mini_img_{cfg}");
+            let entry = man.model(&name).unwrap();
+            let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap();
+            let names =
+                inventory::resnet18(width, entry.classes, Stem::Cifar, &entry.fp_stages())
+                    .binary_names();
+            let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+            t2.row(vec![cfg.into(), bmx.payload_bytes().to_string()]);
+        }
+        t2.print();
+    } else {
+        println!("(artifacts not built; mini cross-check skipped)");
+    }
+}

@@ -1,0 +1,120 @@
+//! Shared driver for the Figure 1–3 GEMM benchmarks (used by both the
+//! `bmxnet bench-gemm` CLI and the `cargo bench` targets).
+//!
+//! Measurement protocol (matches the paper's):
+//! * float methods time the full GEMM on float operands;
+//! * `xnor_*` columns time the GEMM on **pre-packed** operands (weights are
+//!   packed offline; activations are assumed packed by the previous layer);
+//! * the final `bin+xnor_omp` column adds activation binarization+packing
+//!   to the threaded kernel (Fig 1's "binarize input and xnor_64_omp" bar).
+
+use std::time::Duration;
+
+use super::harness::{fmt_ms, time_best_of, BenchTable};
+use super::workloads::GemmWorkload;
+use crate::gemm::{binary_gemm_f32, xnor_gemm_prepacked, Method, PackedMatrix, Side};
+
+/// One measured row: time per method at a given x.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub x: usize,
+    /// (method label, duration) in Method::all() order + "bin+xnor_omp".
+    pub timings: Vec<(&'static str, Duration)>,
+}
+
+impl FigureRow {
+    pub fn naive(&self) -> Duration {
+        self.timings[0].1
+    }
+
+    pub fn speedup(&self, idx: usize) -> f64 {
+        self.naive().as_secs_f64() / self.timings[idx].1.as_secs_f64()
+    }
+}
+
+/// Measure every method over one workload.
+pub fn measure_workload(w: &GemmWorkload, reps: usize) -> FigureRow {
+    let (a, b) = w.operands(42);
+    let pa = PackedMatrix::pack_rows(&a, w.m, w.k, Side::A);
+    let pb = PackedMatrix::pack_cols(&b, w.k, w.n);
+    let mut timings = Vec::new();
+    for method in Method::all() {
+        let d = if method.is_binary() {
+            time_best_of(reps, || xnor_gemm_prepacked(*method, &pa, &pb))
+        } else {
+            time_best_of(reps, || binary_gemm_f32(*method, &a, &b, w.m, w.n, w.k))
+        };
+        timings.push((method.label(), d));
+    }
+    // activation packing (the conv input side) + threaded kernel
+    let d = time_best_of(reps, || {
+        let pb2 = PackedMatrix::pack_cols(&b, w.k, w.n);
+        xnor_gemm_prepacked(Method::Xnor64Mt, &pa, &pb2)
+    });
+    timings.push(("bin+xnor_omp", d));
+    FigureRow { x: w.x, timings }
+}
+
+/// Run a full figure and print a paper-style table.
+/// `absolute_times` prints ms (Fig 1); otherwise speedup vs naive (Figs 2–3).
+pub fn run_gemm_figure(
+    title: &str,
+    xlabel: &str,
+    workloads: &[GemmWorkload],
+    reps: usize,
+    absolute_times: bool,
+) -> Vec<FigureRow> {
+    let mut headers: Vec<&str> = vec![xlabel];
+    let mut rows = Vec::new();
+    let mut table: Option<BenchTable> = None;
+    for w in workloads {
+        let row = measure_workload(w, reps);
+        if table.is_none() {
+            headers.extend(row.timings.iter().map(|(l, _)| *l));
+            table = Some(BenchTable::new(title, &headers));
+        }
+        let mut cells = vec![row.x.to_string()];
+        for (i, (_, d)) in row.timings.iter().enumerate() {
+            cells.push(if absolute_times {
+                format!("{}ms", fmt_ms(*d))
+            } else if i == 0 {
+                format!("{}ms", fmt_ms(*d))
+            } else {
+                format!("{:.1}x", row.speedup(i))
+            });
+        }
+        table.as_mut().unwrap().row(cells);
+        rows.push(row);
+    }
+    if let Some(t) = table {
+        t.print();
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::fig1_workloads;
+
+    #[test]
+    fn measure_tiny_workload() {
+        let w = GemmWorkload { x: 8, m: 4, n: 32, k: 64 };
+        let row = measure_workload(&w, 1);
+        // Method::all() (6) + the bin+xnor column
+        assert_eq!(row.timings.len(), 7);
+        assert!(row.timings.iter().all(|(_, d)| *d > Duration::ZERO));
+        assert!(row.speedup(0) == 1.0);
+    }
+
+    #[test]
+    fn figure_rows_match_workloads() {
+        let mut ws = fig1_workloads(true);
+        ws.truncate(1);
+        // shrink for test speed
+        ws[0].n = 64;
+        let rows = run_gemm_figure("t", "C", &ws, 1, true);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].x, 64);
+    }
+}

@@ -1,0 +1,138 @@
+//! Timing + table-printing helpers for the bench targets.
+
+use std::time::{Duration, Instant};
+
+/// Best-of-`reps` wall time of `f` after one warmup call.
+///
+/// Best-of (not mean) is the standard for CPU microbenchmarks: it filters
+/// scheduler noise, which on this single-core box is the dominant variance.
+pub fn time_best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> Duration {
+    std::hint::black_box(f()); // warmup
+    let mut best = Duration::MAX;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed());
+    }
+    best
+}
+
+/// Simple fixed-width table writer for paper-style rows.
+pub struct BenchTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl BenchTable {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render to a string (also used by tests).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a duration as milliseconds with sensible precision.
+pub fn fmt_ms(d: Duration) -> String {
+    let ms = d.as_secs_f64() * 1e3;
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 1.0 {
+        format!("{ms:.1}")
+    } else {
+        format!("{ms:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_best_of_measures_something() {
+        let d = time_best_of(3, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(d > Duration::ZERO);
+        assert!(d < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn best_of_le_single_run() {
+        // best-of-5 of a sleep is roughly the sleep, never much more
+        let d = time_best_of(2, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(d >= Duration::from_millis(1));
+        assert!(d < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = BenchTable::new("test", &["a", "method_name"]);
+        t.row(vec!["1".into(), "x".into()]);
+        t.row(vec!["100".into(), "yyyy".into()]);
+        let s = t.render();
+        assert!(s.contains("== test =="));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // right-aligned columns: all data lines equal length
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = BenchTable::new("t", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_ms_precision() {
+        assert_eq!(fmt_ms(Duration::from_millis(250)), "250");
+        assert_eq!(fmt_ms(Duration::from_micros(1500)), "1.5");
+        assert_eq!(fmt_ms(Duration::from_micros(12)), "0.012");
+    }
+}

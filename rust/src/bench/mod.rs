@@ -1,0 +1,16 @@
+//! Benchmark harness (criterion is unavailable offline; this is our own).
+//!
+//! * [`harness`] — timing helpers: warmup + best-of-N wall-clock timing,
+//!   table-formatted output shared by `cargo bench` targets and the
+//!   `bmxnet bench-gemm` CLI.
+//! * [`workloads`] — the exact GEMM shapes of Figures 1–3 (and a reduced
+//!   variant: batch 20 instead of 200, so the naive baseline finishes in
+//!   seconds on this 1-core box; `--full` restores paper-exact shapes).
+
+pub mod figures;
+pub mod harness;
+pub mod workloads;
+
+pub use figures::{measure_workload, run_gemm_figure, FigureRow};
+pub use harness::{time_best_of, BenchTable};
+pub use workloads::{fig1_workloads, fig2_workloads, fig3_workloads, GemmWorkload};

@@ -1,0 +1,152 @@
+//! The GEMM workloads of Figures 1–3 (paper §3.1).
+//!
+//! All three figures measure GEMM inside a convolution layer with
+//! M = filters, N = batch × out_h × out_w, K = k_w × k_h × channels.
+//! The paper fixes out spatial size via its input so that batch 200 gives
+//! N = 12800 (i.e. 8×8 outputs per image).
+//!
+//! * Fig 1: filters 64, kernel 5×5, batch 200, channels ∈ {64..512} —
+//!   absolute times per method.
+//! * Fig 2: channels 256, kernel 5×5, batch 200, filters ∈ {16..512} —
+//!   speedup over naive.
+//! * Fig 3: channels 256, filters 64, batch 200, kernel ∈ {1..8} —
+//!   speedup over naive.
+//!
+//! `reduced = true` (default everywhere) scales batch 200 → 20 so the
+//! naive baseline stays in seconds on a single core; speedup *ratios* are
+//! unaffected (verified by comparing a reduced vs full spot-check in
+//! EXPERIMENTS.md).
+
+use crate::data::Rng;
+
+/// One GEMM measurement point.
+#[derive(Debug, Clone)]
+pub struct GemmWorkload {
+    /// x-axis label (channel count, filter count, or kernel size).
+    pub x: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmWorkload {
+    fn conv(filters: usize, channels: usize, kernel: usize, batch: usize) -> Self {
+        GemmWorkload {
+            x: 0,
+            m: filters,
+            n: batch * 64, // 8x8 outputs per image, as in the paper
+            k: kernel * kernel * channels,
+        }
+    }
+
+    /// Deterministic operand data for this shape.
+    pub fn operands(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f32> = (0..self.m * self.k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..self.k * self.n).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    /// Multiply-accumulate count (for GFLOP/s style reporting).
+    pub fn macs(&self) -> usize {
+        self.m * self.n * self.k
+    }
+}
+
+fn batch(reduced: bool) -> usize {
+    if reduced {
+        20
+    } else {
+        200
+    }
+}
+
+/// Figure 1: vary input channels; filters 64, kernel 5×5.
+pub fn fig1_workloads(reduced: bool) -> Vec<GemmWorkload> {
+    [64, 128, 256, 512]
+        .iter()
+        .map(|&c| {
+            let mut w = GemmWorkload::conv(64, c, 5, batch(reduced));
+            w.x = c;
+            w
+        })
+        .collect()
+}
+
+/// Figure 2: vary filter count; channels 256, kernel 5×5.
+pub fn fig2_workloads(reduced: bool) -> Vec<GemmWorkload> {
+    [16, 32, 64, 128, 256, 512]
+        .iter()
+        .map(|&f| {
+            let mut w = GemmWorkload::conv(f, 256, 5, batch(reduced));
+            w.x = f;
+            w
+        })
+        .collect()
+}
+
+/// Figure 3: vary kernel size; channels 256, filters 64.
+pub fn fig3_workloads(reduced: bool) -> Vec<GemmWorkload> {
+    (1..=8)
+        .map(|ks| {
+            let mut w = GemmWorkload::conv(64, 256, ks, batch(reduced));
+            w.x = ks;
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_matches_paper_parameters() {
+        let ws = fig1_workloads(false);
+        assert_eq!(ws.len(), 4);
+        // paper: M=64, N=12800, K=5*5*C
+        for w in &ws {
+            assert_eq!(w.m, 64);
+            assert_eq!(w.n, 12800);
+            assert_eq!(w.k, 25 * w.x);
+        }
+        assert_eq!(ws[2].k, 6400); // C=256
+    }
+
+    #[test]
+    fn fig2_sweeps_filters() {
+        let ws = fig2_workloads(true);
+        assert_eq!(ws[0].m, 16);
+        assert_eq!(ws.last().unwrap().m, 512);
+        assert!(ws.iter().all(|w| w.k == 6400));
+    }
+
+    #[test]
+    fn fig3_sweeps_kernel() {
+        let ws = fig3_workloads(true);
+        assert_eq!(ws.len(), 8);
+        assert_eq!(ws[0].k, 256);
+        assert_eq!(ws[7].k, 64 * 256);
+    }
+
+    #[test]
+    fn reduced_scales_n_only() {
+        let full = fig1_workloads(false);
+        let red = fig1_workloads(true);
+        for (f, r) in full.iter().zip(&red) {
+            assert_eq!(f.m, r.m);
+            assert_eq!(f.k, r.k);
+            assert_eq!(f.n, 10 * r.n);
+        }
+    }
+
+    #[test]
+    fn operands_deterministic_and_sized() {
+        let w = &fig1_workloads(true)[0];
+        let (a1, b1) = w.operands(5);
+        let (a2, _) = w.operands(5);
+        assert_eq!(a1, a2);
+        assert_eq!(a1.len(), w.m * w.k);
+        assert_eq!(b1.len(), w.k * w.n);
+    }
+}

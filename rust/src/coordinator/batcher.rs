@@ -1,0 +1,81 @@
+//! Dynamic batching policy: how many queued requests to coalesce and how
+//! long to wait for stragglers.
+//!
+//! The policy is deliberately explicit (instead of buried in the server
+//! loop) so the ablation bench `serving_throughput.rs` can sweep window
+//! and batch-size settings — the knobs every serving paper tunes.
+
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap on batch size (compiled executables / engine width).
+    pub max_batch: usize,
+    /// How long the first request in a batch may wait for company.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, window: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    /// Deadline for a batch whose first request arrived at `first`.
+    pub fn deadline(&self, first: Instant) -> Instant {
+        first + self.window
+    }
+
+    /// Should we dispatch now, given queue depth and the first arrival?
+    pub fn should_dispatch(&self, queued: usize, first: Instant, now: Instant) -> bool {
+        queued >= self.max_batch || now >= self.deadline(first)
+    }
+
+    /// Remaining wait budget (zero if past deadline).
+    pub fn remaining(&self, first: Instant, now: Instant) -> Duration {
+        self.deadline(first).saturating_duration_since(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatches_on_full_batch() {
+        let p = BatchPolicy { max_batch: 4, window: Duration::from_secs(10) };
+        let now = Instant::now();
+        assert!(p.should_dispatch(4, now, now));
+        assert!(p.should_dispatch(9, now, now));
+        assert!(!p.should_dispatch(3, now, now));
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let p = BatchPolicy { max_batch: 100, window: Duration::from_millis(1) };
+        let first = Instant::now();
+        assert!(!p.should_dispatch(1, first, first));
+        let later = first + Duration::from_millis(2);
+        assert!(p.should_dispatch(1, first, later));
+    }
+
+    #[test]
+    fn remaining_saturates_at_zero() {
+        let p = BatchPolicy { max_batch: 8, window: Duration::from_millis(1) };
+        let first = Instant::now();
+        assert!(p.remaining(first, first) <= Duration::from_millis(1));
+        assert_eq!(
+            p.remaining(first, first + Duration::from_secs(1)),
+            Duration::ZERO
+        );
+    }
+
+    #[test]
+    fn default_policy_reasonable() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.window > Duration::ZERO);
+    }
+}

@@ -1,0 +1,131 @@
+//! Serving metrics: request/batch counters and latency percentiles.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    rejected: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// Point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_batch: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += latencies.len() as u64;
+        g.batches += 1;
+        g.batch_size_sum += batch_size as u64;
+        for l in latencies {
+            g.latencies_us.push(l.as_micros() as u64);
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut ls = g.latencies_us.clone();
+        ls.sort_unstable();
+        // nearest-rank percentile: idx = ceil(p * N) - 1
+        let pct = |p: f64| -> Duration {
+            if ls.is_empty() {
+                return Duration::ZERO;
+            }
+            let rank = (p * ls.len() as f64).ceil() as usize;
+            Duration::from_micros(ls[rank.clamp(1, ls.len()) - 1])
+        };
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            rejected: g.rejected,
+            mean_batch: if g.batches == 0 {
+                0.0
+            } else {
+                g.batch_size_sum as f64 / g.batches as f64
+            },
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: ls.last().map_or(Duration::ZERO, |&u| Duration::from_micros(u)),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Human-readable one-liner for logs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} rejected={} p50={:?} p95={:?} p99={:?}",
+            self.requests, self.batches, self.mean_batch, self.rejected,
+            self.p50, self.p95, self.p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_from_known_data() {
+        let m = ServerMetrics::new();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        m.record_batch(100, &lats);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 100.0);
+        assert_eq!(s.p50, Duration::from_micros(50));
+        assert_eq!(s.p99, Duration::from_micros(99));
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = ServerMetrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn batches_accumulate() {
+        let m = ServerMetrics::new();
+        m.record_batch(2, &[Duration::from_micros(5); 2]);
+        m.record_batch(4, &[Duration::from_micros(7); 4]);
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.mean_batch, 3.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! The serving coordinator — the deployment role the paper's mobile apps
+//! play (§4.2), built like an inference server: request router, dynamic
+//! batcher, a worker owning the binary engine, and latency/throughput
+//! metrics.
+//!
+//! std-only (offline environment): threads + mpsc channels instead of
+//! tokio.  Requests enter through [`Client`] handles, the batcher coalesces
+//! them up to `max_batch` within `batch_window`, the worker runs one
+//! engine forward per batch, and responses flow back through per-request
+//! channels.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use server::{Backend, Client, Request, Response, Server, ServerConfig};

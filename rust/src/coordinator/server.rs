@@ -1,0 +1,364 @@
+//! The request router + worker loop.
+//!
+//! One ingress mpsc channel fans into the batcher thread; each request
+//! carries its own response channel (the std stand-in for a oneshot).
+//! Backpressure: the ingress channel is bounded (`queue_cap`); when it is
+//! full, `Client::try_classify` fails fast instead of queueing unboundedly.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How often the idle batcher re-checks the shutdown flag.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+use super::batcher::BatchPolicy;
+use super::metrics::{MetricsSnapshot, ServerMetrics};
+
+/// Anything that can classify a batch of flat NCHW images.
+///
+/// The production impl is [`crate::nn::Engine`]; tests use mocks.
+pub trait Backend: Send + Sync + 'static {
+    /// Expected per-image shape [C, H, W].
+    fn input_shape(&self) -> [usize; 3];
+    /// Classify `batch` images packed into `images`.
+    fn classify_batch(&self, images: &[f32], batch: usize) -> Result<Vec<(usize, f32)>>;
+}
+
+impl Backend for crate::nn::Engine {
+    fn input_shape(&self) -> [usize; 3] {
+        crate::nn::Engine::input_shape(self)
+    }
+
+    fn classify_batch(&self, images: &[f32], batch: usize) -> Result<Vec<(usize, f32)>> {
+        self.classify(images, batch)
+    }
+}
+
+/// One classification request.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub class: usize,
+    pub score: f32,
+    /// Queue + compute latency, measured at reply time.
+    pub latency: Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Server construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Ingress queue bound (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), queue_cap: 1024 }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Request>,
+    image_len: usize,
+}
+
+impl Client {
+    /// Blocking classify: submit and wait for the response.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    /// Submit without waiting; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "image must have {} floats, got {}",
+            self.image_len,
+            image.len()
+        );
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .try_send(Request { image, submitted: Instant::now(), reply })
+            .map_err(|e| anyhow!("queue full or server down: {e}"))?;
+        Ok(rx)
+    }
+}
+
+/// A running server (batcher + worker thread).
+pub struct Server {
+    tx: Option<mpsc::SyncSender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<ServerMetrics>,
+    stop: Arc<AtomicBool>,
+    image_len: usize,
+}
+
+impl Server {
+    /// Spawn the batcher/worker thread over the given backend.
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Server {
+        let [c, h, w] = backend.input_shape();
+        let image_len = c * h * w;
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
+        let metrics = Arc::new(ServerMetrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let m = metrics.clone();
+        let s = stop.clone();
+        let policy = cfg.policy;
+        let handle = std::thread::Builder::new()
+            .name("bmxnet-batcher".into())
+            .spawn(move || batcher_loop(rx, backend, policy, m, s))
+            .expect("spawn batcher thread");
+        Server { tx: Some(tx), handle: Some(handle), metrics, stop, image_len }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone().expect("server running"), image_len: self.image_len }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting requests, drain the queue, join the worker and return
+    /// final metrics.  Safe to call with outstanding `Client` clones: the
+    /// batcher also watches a stop flag, not just sender disconnection.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.take(); // close our ingress handle
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Request>,
+    backend: Arc<dyn Backend>,
+    policy: BatchPolicy,
+    metrics: Arc<ServerMetrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let [c, h, w] = backend.input_shape();
+    let per = c * h * w;
+    loop {
+        // Wait for the first request of the next batch, polling the stop
+        // flag so shutdown works even while Client clones keep the channel
+        // alive.
+        let first = loop {
+            match rx.recv_timeout(IDLE_POLL) {
+                Ok(r) => break r,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        // drain anything that raced in, then exit
+                        while let Ok(r) = rx.try_recv() {
+                            let mut batch = vec![r];
+                            dispatch(&backend, per, &mut batch, &metrics);
+                        }
+                        return;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        let first_arrival = Instant::now();
+        let mut batch = vec![first];
+        // Coalesce until the policy says dispatch.
+        loop {
+            let now = Instant::now();
+            if policy.should_dispatch(batch.len(), first_arrival, now) {
+                break;
+            }
+            match rx.recv_timeout(policy.remaining(first_arrival, now)) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        dispatch(&backend, per, &mut batch, &metrics);
+    }
+}
+
+fn dispatch(
+    backend: &Arc<dyn Backend>,
+    per: usize,
+    batch: &mut Vec<Request>,
+    metrics: &Arc<ServerMetrics>,
+) {
+    let bsz = batch.len();
+    let mut images = Vec::with_capacity(bsz * per);
+    for r in batch.iter() {
+        images.extend_from_slice(&r.image);
+    }
+    match backend.classify_batch(&images, bsz) {
+        Ok(preds) => {
+            let done = Instant::now();
+            let mut lats = Vec::with_capacity(bsz);
+            for (req, (class, score)) in batch.drain(..).zip(preds) {
+                let latency = done.duration_since(req.submitted);
+                lats.push(latency);
+                // receiver may have given up; ignore send errors
+                let _ = req.reply.send(Response { class, score, latency, batch_size: bsz });
+            }
+            metrics.record_batch(bsz, &lats);
+        }
+        Err(_) => {
+            // engine failure: drop replies (clients see disconnect)
+            for _ in batch.drain(..) {
+                metrics.record_rejected();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock backend: class = index of max pixel value % 10.
+    struct Mock {
+        delay: Duration,
+    }
+
+    impl Backend for Mock {
+        fn input_shape(&self) -> [usize; 3] {
+            [1, 2, 2]
+        }
+
+        fn classify_batch(&self, images: &[f32], batch: usize) -> Result<Vec<(usize, f32)>> {
+            std::thread::sleep(self.delay);
+            Ok(images
+                .chunks(4)
+                .take(batch)
+                .map(|img| {
+                    let (i, &v) = img
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .unwrap();
+                    (i, v)
+                })
+                .collect())
+        }
+    }
+
+    fn img(hot: usize) -> Vec<f32> {
+        let mut v = vec![0.0; 4];
+        v[hot] = 1.0;
+        v
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::ZERO }),
+            ServerConfig::default(),
+        );
+        let resp = server.client().classify(img(2)).unwrap();
+        assert_eq!(resp.class, 2);
+        assert!(resp.batch_size >= 1);
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_get_correct_answers() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::from_micros(200) }),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(5) },
+                queue_cap: 64,
+            },
+        );
+        let client = server.client();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let r = c.classify(img(i % 4)).unwrap();
+                    assert_eq!(r.class, i % 4, "request {i}");
+                    r.batch_size
+                })
+            })
+            .collect();
+        let sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // batching happened at least once under concurrency
+        assert!(sizes.iter().any(|&s| s > 1), "no batching observed: {sizes:?}");
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 16);
+        assert!(snap.batches < 16, "every request served alone");
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::ZERO }),
+            ServerConfig::default(),
+        );
+        assert!(server.client().classify(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::ZERO }),
+            ServerConfig::default(),
+        );
+        let c = server.client();
+        let rx = c.submit(img(1)).unwrap();
+        drop(c);
+        let snap = server.shutdown();
+        // submitted request was answered before shutdown completed
+        assert_eq!(rx.recv().unwrap().class, 1);
+        assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::from_micros(50) }),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 2, window: Duration::from_millis(20) },
+                queue_cap: 64,
+            },
+        );
+        let client = server.client();
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let c = client.clone();
+                std::thread::spawn(move || c.classify(img(0)).unwrap().batch_size)
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap() <= 2);
+        }
+        drop(client);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,169 @@
+//! Dataset container + batching/shuffling — the input pipeline feeding both
+//! the PJRT training orchestrator and the Rust inference engine.
+
+use super::rng::Rng;
+
+/// In-memory dataset: NCHW images + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Flattened images, n * c * h * w.
+    pub images: Vec<f32>,
+    /// One label per image, in [0, classes).
+    pub labels: Vec<i32>,
+    /// Per-image shape [c, h, w].
+    pub shape: [usize; 3],
+    /// Number of classes.
+    pub classes: usize,
+}
+
+/// One minibatch view (owned copies — batches cross thread boundaries).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub shape: [usize; 3],
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    fn image_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Copy out one image as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let e = self.image_elems();
+        &self.images[i * e..(i + 1) * e]
+    }
+
+    /// Split into (train, test) by a test fraction; deterministic order.
+    pub fn split(self, test_fraction: f32) -> (Dataset, Dataset) {
+        let n_test = ((self.len() as f32) * test_fraction).round() as usize;
+        let n_train = self.len() - n_test;
+        let e = self.image_elems();
+        let train = Dataset {
+            images: self.images[..n_train * e].to_vec(),
+            labels: self.labels[..n_train].to_vec(),
+            shape: self.shape,
+            classes: self.classes,
+        };
+        let test = Dataset {
+            images: self.images[n_train * e..].to_vec(),
+            labels: self.labels[n_train..].to_vec(),
+            shape: self.shape,
+            classes: self.classes,
+        };
+        (train, test)
+    }
+
+    /// Assemble a batch from explicit indices (wrapping around the end).
+    pub fn gather(&self, indices: &[usize]) -> Batch {
+        let e = self.image_elems();
+        let mut images = Vec::with_capacity(indices.len() * e);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &ix in indices {
+            let i = ix % self.len();
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Batch { images, labels, batch: indices.len(), shape: self.shape }
+    }
+
+    /// Epoch iterator with Fisher-Yates shuffling; final short batch is
+    /// wrapped to full size (PJRT executables have a fixed batch dim).
+    pub fn epoch(&self, batch: usize, seed: u64) -> Vec<Batch> {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Rng::new(seed);
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        order
+            .chunks(batch)
+            .map(|chunk| {
+                let mut idx = chunk.to_vec();
+                // wrap to full batch size for fixed-shape executables
+                let mut fill = 0;
+                while idx.len() < batch {
+                    idx.push(order[fill % order.len()]);
+                    fill += 1;
+                }
+                self.gather(&idx)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> Dataset {
+        Dataset {
+            images: (0..n * 4).map(|i| i as f32).collect(),
+            labels: (0..n).map(|i| (i % 3) as i32).collect(),
+            shape: [1, 2, 2],
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn split_fractions() {
+        let (tr, te) = tiny(10).split(0.2);
+        assert_eq!(tr.len(), 8);
+        assert_eq!(te.len(), 2);
+        assert_eq!(tr.image(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(te.image(0), &[32.0, 33.0, 34.0, 35.0]);
+    }
+
+    #[test]
+    fn gather_wraps_indices() {
+        let ds = tiny(3);
+        let b = ds.gather(&[0, 4]); // 4 % 3 == 1
+        assert_eq!(b.labels, vec![0, 1]);
+        assert_eq!(&b.images[4..8], ds.image(1));
+    }
+
+    #[test]
+    fn epoch_covers_all_once() {
+        let ds = tiny(12);
+        let batches = ds.epoch(4, 99);
+        assert_eq!(batches.len(), 3);
+        let mut seen: Vec<f32> = batches
+            .iter()
+            .flat_map(|b| b.images.chunks(4).map(|img| img[0]))
+            .collect();
+        seen.sort_by(f32::total_cmp);
+        let expect: Vec<f32> = (0..12).map(|i| (i * 4) as f32).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn epoch_pads_final_batch() {
+        let ds = tiny(10);
+        let batches = ds.epoch(4, 1);
+        assert_eq!(batches.len(), 3);
+        for b in &batches {
+            assert_eq!(b.batch, 4);
+            assert_eq!(b.labels.len(), 4);
+            assert_eq!(b.images.len(), 16);
+        }
+    }
+
+    #[test]
+    fn epoch_shuffles_by_seed() {
+        let ds = tiny(32);
+        let a: Vec<i32> = ds.epoch(8, 1).iter().flat_map(|b| b.labels.clone()).collect();
+        let b: Vec<i32> = ds.epoch(8, 2).iter().flat_map(|b| b.labels.clone()).collect();
+        assert_ne!(a, b);
+        let c: Vec<i32> = ds.epoch(8, 1).iter().flat_map(|b| b.labels.clone()).collect();
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,118 @@
+//! Synthetic dataset substrates.
+//!
+//! The paper evaluates on MNIST, CIFAR-10 and ImageNet; none are available
+//! in this environment, so each is replaced by a *procedural* generator
+//! that preserves the tensor shapes, class counts and "learnable but not
+//! trivial" character of the original (DESIGN.md §Substitutions):
+//!
+//! * [`synth_digits`] — 1×28×28, 10 classes: bitmap digit glyphs with
+//!   random placement, scale jitter and Gaussian noise (MNIST stand-in).
+//! * [`synth_cifar`] — 3×32×32, 10 classes: procedural shape/texture
+//!   classes with color jitter (CIFAR-10 stand-in).
+//! * [`synth_imagenet`] — 3×32×32, 100 classes: shape × palette product
+//!   classes (ImageNet stand-in for the Table 2 partial-binarization sweep).
+//!
+//! All generators are pure functions of a seed: the training orchestrator,
+//! tests and the Python side can regenerate identical data.
+
+pub mod loader;
+pub mod rng;
+pub mod synth_cifar;
+pub mod synth_digits;
+pub mod synth_imagenet;
+
+pub use loader::{Batch, Dataset};
+pub use rng::Rng;
+
+/// Which generator to use (CLI-facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Digits,
+    Cifar,
+    Imagenet,
+}
+
+impl Kind {
+    pub fn from_name(s: &str) -> Option<Kind> {
+        match s {
+            "digits" | "mnist" => Some(Kind::Digits),
+            "cifar" | "cifar10" => Some(Kind::Cifar),
+            "imagenet" | "img" => Some(Kind::Imagenet),
+            _ => None,
+        }
+    }
+
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        match self {
+            Kind::Digits => synth_digits::generate(n, seed),
+            Kind::Cifar => synth_cifar::generate(n, seed),
+            Kind::Imagenet => synth_imagenet::generate(n, seed),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            Kind::Digits | Kind::Cifar => 10,
+            Kind::Imagenet => 100,
+        }
+    }
+
+    pub fn input_shape(&self) -> [usize; 3] {
+        match self {
+            Kind::Digits => [1, 28, 28],
+            Kind::Cifar | Kind::Imagenet => [3, 32, 32],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_from_name() {
+        assert_eq!(Kind::from_name("mnist"), Some(Kind::Digits));
+        assert_eq!(Kind::from_name("cifar10"), Some(Kind::Cifar));
+        assert_eq!(Kind::from_name("imagenet"), Some(Kind::Imagenet));
+        assert_eq!(Kind::from_name("svhn"), None);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        for kind in [Kind::Digits, Kind::Cifar, Kind::Imagenet] {
+            let a = kind.generate(8, 123);
+            let b = kind.generate(8, 123);
+            assert_eq!(a.images, b.images, "{kind:?} not deterministic");
+            assert_eq!(a.labels, b.labels);
+            let c = kind.generate(8, 124);
+            assert_ne!(a.images, c.images, "{kind:?} ignores seed");
+        }
+    }
+
+    #[test]
+    fn shapes_and_label_ranges() {
+        for kind in [Kind::Digits, Kind::Cifar, Kind::Imagenet] {
+            let ds = kind.generate(16, 7);
+            let [c, h, w] = kind.input_shape();
+            assert_eq!(ds.images.len(), 16 * c * h * w);
+            assert!(ds.labels.iter().all(|&l| (l as usize) < kind.classes()));
+            // a healthy majority of classes appears in a big enough sample
+            let big = kind.generate(kind.classes() * 8, 9);
+            let mut seen = vec![false; kind.classes()];
+            for &l in &big.labels {
+                seen[l as usize] = true;
+            }
+            assert!(seen.iter().filter(|&&s| s).count() > kind.classes() / 2);
+        }
+    }
+
+    #[test]
+    fn pixel_range_normalized() {
+        for kind in [Kind::Digits, Kind::Cifar, Kind::Imagenet] {
+            let ds = kind.generate(4, 5);
+            for &p in &ds.images {
+                assert!((-3.0..=3.0).contains(&p), "{kind:?} pixel {p} out of range");
+            }
+        }
+    }
+}

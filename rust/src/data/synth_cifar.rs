@@ -1,0 +1,113 @@
+//! synth-CIFAR: procedural 3×32×32 10-class images (DESIGN.md
+//! §Substitutions).  Classes are distinct shape/texture programs —
+//! stripes at two angles, checkerboards, discs, rings, gradients, crosses,
+//! dots, triangles, bars — drawn in jittered colors over noisy backgrounds.
+//! ResNet-style models separate these well, and binarization costs a few
+//! points of accuracy, matching CIFAR-10's role in Table 1.
+
+use super::loader::Dataset;
+use super::rng::Rng;
+
+pub const SIZE: usize = 32;
+pub const CHANNELS: usize = 3;
+
+/// Paint one 3×32×32 image of class `cls` (0..10).
+pub fn render(cls: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(cls < 10);
+    let mut img = vec![0.0f32; CHANNELS * SIZE * SIZE];
+    // jittered foreground/background colors
+    let fg: [f32; 3] = [rng.range(0.5, 1.0), rng.range(0.1, 0.9), rng.range(0.1, 0.9)];
+    let bg: [f32; 3] = [-fg[0] * 0.6, rng.range(-0.5, 0.1), rng.range(-0.5, 0.1)];
+    let phase = rng.range(0.0, 8.0);
+    let freq = rng.range(0.5, 0.9);
+    let cx = rng.range(12.0, 20.0);
+    let cy = rng.range(12.0, 20.0);
+    let r = rng.range(6.0, 11.0);
+
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            let (xf, yf) = (x as f32, y as f32);
+            let on = match cls {
+                0 => ((xf * freq + phase) as i32) % 2 == 0,                 // v-stripes
+                1 => ((yf * freq + phase) as i32) % 2 == 0,                 // h-stripes
+                2 => (((xf + yf) * freq * 0.7 + phase) as i32) % 2 == 0,    // diagonal
+                3 => ((xf * 0.5) as i32 + (yf * 0.5) as i32) % 2 == 0,      // checker
+                4 => (xf - cx).hypot(yf - cy) < r,                          // disc
+                5 => {
+                    let d = (xf - cx).hypot(yf - cy);                       // ring
+                    d > r * 0.55 && d < r
+                }
+                6 => (xf - cx).abs() < 2.5 || (yf - cy).abs() < 2.5,        // cross
+                7 => (xf % 6.0 < 2.0) && (yf % 6.0 < 2.0),                  // dots
+                8 => yf - cy > (xf - cx).abs() - r * 0.8,                   // triangle-ish
+                _ => (yf > cy - 3.0) && (yf < cy + 3.0),                    // h-bar
+            };
+            let color = if on { fg } else { bg };
+            for (ch, &base) in color.iter().enumerate() {
+                img[(ch * SIZE + y) * SIZE + x] = base;
+            }
+        }
+    }
+    for p in &mut img {
+        *p += 0.10 * rng.normal();
+        *p = p.clamp(-2.0, 2.0);
+    }
+    img
+}
+
+/// Generate n labelled images.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xC1FA);
+    let mut images = Vec::with_capacity(n * CHANNELS * SIZE * SIZE);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = rng.below(10);
+        let mut img_rng = rng.fork(i as u64);
+        images.extend(render(cls, &mut img_rng));
+        labels.push(cls as i32);
+    }
+    Dataset { images, labels, shape: [CHANNELS, SIZE, SIZE], classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_differ_in_texture() {
+        let mut rng = Rng::new(5);
+        let imgs: Vec<Vec<f32>> = (0..10).map(|c| render(c, &mut rng)).collect();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f32 = imgs[a]
+                    .iter()
+                    .zip(&imgs[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum::<f32>()
+                    / imgs[a].len() as f32;
+                assert!(d > 0.05, "classes {a}/{b} mean abs diff {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_channels() {
+        let ds = generate(3, 1);
+        assert_eq!(ds.shape, [3, 32, 32]);
+        assert_eq!(ds.images.len(), 3 * 3 * 32 * 32);
+    }
+
+    #[test]
+    fn foreground_brighter_in_red() {
+        // class 4 (disc): center red channel should exceed corner red
+        let mut rng = Rng::new(9);
+        let mut center = 0.0;
+        let mut corner = 0.0;
+        for _ in 0..20 {
+            let img = render(4, &mut rng);
+            center += img[16 * SIZE + 16];
+            corner += img[1 * SIZE + 1];
+        }
+        assert!(center > corner, "disc not visible: {center} vs {corner}");
+    }
+}

@@ -1,0 +1,132 @@
+//! synth-MNIST: procedural 28×28 digit images (DESIGN.md §Substitutions).
+//!
+//! Each image renders a 5×7 bitmap glyph of its class digit, scaled ×3 with
+//! bilinear-ish soft edges, placed at a jittered offset, with per-image
+//! contrast jitter and additive Gaussian noise.  The task is learnable to
+//! high accuracy by LeNet yet non-trivial under binarization — matching the
+//! role MNIST plays in Table 1.
+
+use super::loader::Dataset;
+use super::rng::Rng;
+
+pub const SIZE: usize = 28;
+
+/// Classic 5×7 digit font, one row per digit, bit 4..0 = leftmost..rightmost.
+const FONT: [[u8; 7]; 10] = [
+    [0x0E, 0x11, 0x13, 0x15, 0x19, 0x11, 0x0E], // 0
+    [0x04, 0x0C, 0x04, 0x04, 0x04, 0x04, 0x0E], // 1
+    [0x0E, 0x11, 0x01, 0x02, 0x04, 0x08, 0x1F], // 2
+    [0x1F, 0x02, 0x04, 0x02, 0x01, 0x11, 0x0E], // 3
+    [0x02, 0x06, 0x0A, 0x12, 0x1F, 0x02, 0x02], // 4
+    [0x1F, 0x10, 0x1E, 0x01, 0x01, 0x11, 0x0E], // 5
+    [0x06, 0x08, 0x10, 0x1E, 0x11, 0x11, 0x0E], // 6
+    [0x1F, 0x01, 0x02, 0x04, 0x08, 0x08, 0x08], // 7
+    [0x0E, 0x11, 0x11, 0x0E, 0x11, 0x11, 0x0E], // 8
+    [0x0E, 0x11, 0x11, 0x0F, 0x01, 0x02, 0x0C], // 9
+];
+
+/// Render one digit into a 28×28 buffer (values roughly in [-1, 2]).
+pub fn render(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(digit < 10);
+    let mut img = vec![0.0f32; SIZE * SIZE];
+    let scale = rng.range(2.4, 3.4); // glyph cell size in pixels
+    let glyph_w = 5.0 * scale;
+    let glyph_h = 7.0 * scale;
+    let ox = rng.range(1.0, (SIZE as f32 - glyph_w - 1.0).max(1.5));
+    let oy = rng.range(1.0, (SIZE as f32 - glyph_h - 1.0).max(1.5));
+    let ink = rng.range(0.8, 1.2);
+
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            // map pixel center into glyph cell space
+            let gx = (x as f32 + 0.5 - ox) / scale;
+            let gy = (y as f32 + 0.5 - oy) / scale;
+            if gx < 0.0 || gy < 0.0 || gx >= 5.0 || gy >= 7.0 {
+                continue;
+            }
+            let (cx, cy) = (gx as usize, gy as usize);
+            if (FONT[digit][cy] >> (4 - cx)) & 1 == 1 {
+                // soft edge: fade near the cell border
+                let fx = (gx - cx as f32 - 0.5).abs() * 2.0;
+                let fy = (gy - cy as f32 - 0.5).abs() * 2.0;
+                let soft = (1.0 - 0.3 * fx.max(fy)).max(0.0);
+                img[y * SIZE + x] = ink * soft;
+            }
+        }
+    }
+    // additive noise + normalization to roughly zero-mean
+    for p in &mut img {
+        *p += 0.08 * rng.normal();
+        *p = (*p - 0.13).clamp(-1.0, 2.0);
+    }
+    img
+}
+
+/// Generate n labelled images.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * SIZE * SIZE);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = rng.below(10);
+        let mut img_rng = rng.fork(i as u64);
+        images.extend(render(digit, &mut img_rng));
+        labels.push(digit as i32);
+    }
+    Dataset { images, labels, shape: [1, SIZE, SIZE], classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyphs_distinguishable() {
+        // mean per-pixel ink differs across digits -> classes separable
+        let mut rng = Rng::new(1);
+        let imgs: Vec<Vec<f32>> = (0..10).map(|d| render(d, &mut rng)).collect();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f32 = imgs[a]
+                    .iter()
+                    .zip(&imgs[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(d > 5.0, "digits {a} and {b} nearly identical ({d})");
+            }
+        }
+    }
+
+    #[test]
+    fn ink_present() {
+        let mut rng = Rng::new(2);
+        for d in 0..10 {
+            let img = render(d, &mut rng);
+            let ink = img.iter().filter(|&&p| p > 0.3).count();
+            assert!(ink > 20, "digit {d} has only {ink} ink pixels");
+        }
+    }
+
+    #[test]
+    fn generate_counts() {
+        let ds = generate(25, 3);
+        assert_eq!(ds.len(), 25);
+        assert_eq!(ds.images.len(), 25 * 28 * 28);
+    }
+
+    #[test]
+    fn same_class_images_vary() {
+        let ds = generate(200, 4);
+        let first_of = |cls: i32| {
+            ds.labels
+                .iter()
+                .enumerate()
+                .filter(|(_, &l)| l == cls)
+                .map(|(i, _)| i)
+                .collect::<Vec<_>>()
+        };
+        let zeros = first_of(0);
+        assert!(zeros.len() >= 2);
+        assert_ne!(ds.image(zeros[0]), ds.image(zeros[1]), "no intra-class variation");
+    }
+}

@@ -1,0 +1,109 @@
+//! synth-ImageNet: 100-class 3×32×32 images for the Table 2 sweep
+//! (DESIGN.md §Substitutions).
+//!
+//! Classes are a product code: class = 10 * shape + palette, where `shape`
+//! reuses the 10 synth-CIFAR texture programs and `palette` selects one of
+//! 10 distinct hue pairs.  Discriminating the full 100 classes requires
+//! *both* texture and color features — coarse features that survive
+//! binarization and finer color balance that benefits from full-precision
+//! early stages, which is exactly the accuracy gradient Table 2 probes.
+
+use super::loader::Dataset;
+use super::rng::Rng;
+use super::synth_cifar;
+
+pub const SIZE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const CLASSES: usize = 100;
+
+/// 10 palette (foreground hue) programs, index = class % 10.
+fn palette(p: usize, rng: &mut Rng) -> ([f32; 3], [f32; 3]) {
+    let j = |rng: &mut Rng| rng.range(-0.08, 0.08);
+    let base: [[f32; 3]; 10] = [
+        [1.0, 0.1, 0.1],
+        [0.1, 1.0, 0.1],
+        [0.1, 0.1, 1.0],
+        [1.0, 1.0, 0.1],
+        [1.0, 0.1, 1.0],
+        [0.1, 1.0, 1.0],
+        [0.9, 0.5, 0.1],
+        [0.5, 0.1, 0.9],
+        [0.7, 0.7, 0.7],
+        [0.3, 0.9, 0.5],
+    ];
+    let fg = [
+        base[p][0] + j(rng),
+        base[p][1] + j(rng),
+        base[p][2] + j(rng),
+    ];
+    let bg = [-fg[0] * 0.5 + j(rng), -fg[1] * 0.5 + j(rng), -fg[2] * 0.5 + j(rng)];
+    (fg, bg)
+}
+
+/// Paint one image of class `cls` (0..100).
+pub fn render(cls: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(cls < CLASSES);
+    let shape_cls = cls / 10;
+    let pal_cls = cls % 10;
+    // Render the shape program in grayscale via synth_cifar, then recolor.
+    let proto = synth_cifar::render(shape_cls, rng);
+    let (fg, bg) = palette(pal_cls, rng);
+    let hw = SIZE * SIZE;
+    let mut img = vec![0.0f32; CHANNELS * hw];
+    for i in 0..hw {
+        // proto red channel carries the shape mask polarity
+        let mask = if proto[i] > 0.0 { 1.0 } else { 0.0 };
+        for ch in 0..CHANNELS {
+            let v = mask * fg[ch] + (1.0 - mask) * bg[ch];
+            img[ch * hw + i] = v + 0.08 * rng.normal();
+        }
+    }
+    img
+}
+
+/// Generate n labelled images.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x1A6E7);
+    let mut images = Vec::with_capacity(n * CHANNELS * SIZE * SIZE);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = rng.below(CLASSES);
+        let mut img_rng = rng.fork(i as u64);
+        images.extend(render(cls, &mut img_rng));
+        labels.push(cls as i32);
+    }
+    Dataset { images, labels, shape: [CHANNELS, SIZE, SIZE], classes: CLASSES }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hundred_classes() {
+        let ds = generate(4, 1);
+        assert_eq!(ds.classes, 100);
+    }
+
+    #[test]
+    fn same_shape_different_palette_differ() {
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let a = render(10, &mut r1); // shape 1, palette 0
+        let b = render(13, &mut r2); // shape 1, palette 3
+        let d: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        assert!(d > 0.05, "palettes indistinguishable: {d}");
+    }
+
+    #[test]
+    fn same_palette_different_shape_differ() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let a = render(5, &mut r1); // shape 0, palette 5
+        let b = render(45, &mut r2); // shape 4, palette 5
+        let d: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        assert!(d > 0.05, "shapes indistinguishable: {d}");
+    }
+}

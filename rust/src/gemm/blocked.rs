@@ -1,0 +1,69 @@
+//! Cache-blocked float GEMM — the `Cblas(Atlas)` stand-in of Figure 1.
+//!
+//! i-k-j loop order (unit-stride over B and C rows, LLVM auto-vectorizes
+//! the inner loop), blocked over k and j to keep the working set in L1/L2.
+//! On this box it reaches a few GFLOP/s single-threaded, playing the
+//! "optimized float BLAS" role against which the xnor kernels are compared.
+
+const KC: usize = 256; // k-panel: KC * 4B * (1 row A + NB cols B) << L2
+const NC: usize = 1024; // j-panel kept hot across the i loop
+
+/// C = A·B with A (m, k), B (k, n) row-major; returns C (m, n).
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for kc in (0..k).step_by(KC) {
+            let kb = KC.min(k - kc);
+            for i in 0..m {
+                let a_row = &a[i * k + kc..i * k + kc + kb];
+                let c_row = &mut c[i * n + jc..i * n + jc + nb];
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    let b_row = &b[(kc + kk) * n + jc..(kc + kk) * n + jc + nb];
+                    // unit-stride fma loop; vectorizes cleanly
+                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive;
+    use super::*;
+
+    #[test]
+    fn matches_naive_small() {
+        let a: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..12).map(|i| (i as f32) - 5.0).collect();
+        assert_eq!(gemm_f32(&a, &b, 2, 4, 3), naive::gemm_f32(&a, &b, 2, 4, 3));
+    }
+
+    #[test]
+    fn matches_naive_across_block_boundaries() {
+        // k and n straddle KC/NC boundaries
+        let (m, n, k) = (3, NC + 7, KC + 5);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32) - 6.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let got = gemm_f32(&a, &b, m, n, k);
+        let expect = naive::gemm_f32(&a, &b, m, n, k);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() <= 1e-2 * e.abs().max(1.0), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn exact_on_plus_minus_one() {
+        // ±1 accumulations are exact in f32 up to 2^24: bitwise equality
+        let (m, n, k) = (4, 33, 129);
+        let a: Vec<f32> = (0..m * k).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| if i % 5 == 0 { -1.0 } else { 1.0 }).collect();
+        assert_eq!(gemm_f32(&a, &b, m, n, k), naive::gemm_f32(&a, &b, m, n, k));
+    }
+}

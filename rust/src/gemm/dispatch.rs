@@ -1,0 +1,131 @@
+//! Method dispatch: one enum naming every GEMM variant in Figures 1–3,
+//! plus the high-level entry points the inference engine and the bench
+//! harness share.
+
+use super::pack::{PackedMatrix, Side};
+use super::{blocked, naive, parallel, xnor};
+use crate::quant::xnor_to_dot;
+
+/// Every GEMM variant the paper benchmarks (Figure 1 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Textbook i-j-k float GEMM (`naive gemm`).
+    NaiveF32,
+    /// Cache-blocked float GEMM (the `Cblas(Atlas)` stand-in).
+    BlockedF32,
+    /// Listing 3 on 32-bit words (`xnor_32`).
+    Xnor32,
+    /// Listing 3 on 64-bit words (`xnor_64`).
+    Xnor64,
+    /// Blocked + unrolled xnor_64.
+    Xnor64Blocked,
+    /// Multi-threaded blocked xnor_64 (`xnor_64_omp`).
+    Xnor64Mt,
+}
+
+impl Method {
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::NaiveF32,
+            Method::BlockedF32,
+            Method::Xnor32,
+            Method::Xnor64,
+            Method::Xnor64Blocked,
+            Method::Xnor64Mt,
+        ]
+    }
+
+    /// Figure-1 legend name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::NaiveF32 => "naive",
+            Method::BlockedF32 => "cblas",
+            Method::Xnor32 => "xnor_32",
+            Method::Xnor64 => "xnor_64",
+            Method::Xnor64Blocked => "xnor_64_blk",
+            Method::Xnor64Mt => "xnor_64_omp",
+        }
+    }
+
+    pub fn is_binary(&self) -> bool {
+        !matches!(self, Method::NaiveF32 | Method::BlockedF32)
+    }
+
+    pub fn from_label(s: &str) -> Option<Method> {
+        Method::all().iter().copied().find(|m| m.label() == s)
+    }
+}
+
+/// Run a prepacked xnor GEMM variant, returning raw popcounts.
+/// Panics if called with a float method.
+pub fn xnor_gemm_prepacked(method: Method, a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    match method {
+        Method::Xnor32 => xnor::gemm_u32(a, b),
+        Method::Xnor64 => xnor::gemm_u64(a, b),
+        Method::Xnor64Blocked => xnor::gemm_u64_blocked(a, b),
+        Method::Xnor64Mt => parallel::gemm_u64_mt(a, b),
+        m => panic!("{m:?} is not a packed xnor method"),
+    }
+}
+
+/// Binary GEMM through any method, float in / float out:
+/// inputs are sign-binarized implicitly; output is the ±1 dot product.
+///
+/// This is the semantic contract the paper's Eq. 2 establishes: every
+/// method returns the *same* C for the same A, B.
+pub fn binary_gemm_f32(
+    method: Method,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<f32> {
+    match method {
+        Method::NaiveF32 => {
+            let ab = super::pack::binarize_slice(a);
+            let bb = super::pack::binarize_slice(b);
+            naive::gemm_f32(&ab, &bb, m, n, k)
+        }
+        Method::BlockedF32 => {
+            let ab = super::pack::binarize_slice(a);
+            let bb = super::pack::binarize_slice(b);
+            blocked::gemm_f32(&ab, &bb, m, n, k)
+        }
+        _ => {
+            let pa = PackedMatrix::pack_rows(a, m, k, Side::A);
+            let pb = PackedMatrix::pack_cols(b, k, n);
+            xnor_gemm_prepacked(method, &pa, &pb)
+                .into_iter()
+                .map(|p| xnor_to_dot(p, k))
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::from_label(m.label()), Some(*m));
+        }
+        assert_eq!(Method::from_label("nope"), None);
+    }
+
+    #[test]
+    fn binary_flags() {
+        assert!(!Method::NaiveF32.is_binary());
+        assert!(!Method::BlockedF32.is_binary());
+        assert!(Method::Xnor64.is_binary());
+    }
+
+    #[test]
+    #[should_panic(expected = "not a packed xnor method")]
+    fn prepacked_rejects_float_methods() {
+        let p = PackedMatrix::pack_rows(&[1.0; 64], 1, 64, Side::A);
+        xnor_gemm_prepacked(Method::NaiveF32, &p, &p);
+    }
+}

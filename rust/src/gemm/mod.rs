@@ -1,0 +1,74 @@
+//! The BMXNet xnor+popcount GEMM family (paper §2.2.1, Listing 3).
+//!
+//! Measured head-to-head by Figures 1–3:
+//!
+//! | variant           | paper name            | notes                           |
+//! |-------------------|-----------------------|---------------------------------|
+//! | [`naive::gemm_f32`]        | `naive gemm`  | i-j-k loop, column-strided B    |
+//! | [`blocked::gemm_f32`]      | `Cblas(Atlas)`| register/cache-blocked float    |
+//! | [`xnor::gemm_u32`]         | `xnor_32`     | Listing 3 on 32-bit words       |
+//! | [`xnor::gemm_u64`]         | `xnor_64`     | Listing 3 on 64-bit words       |
+//! | [`xnor::gemm_u64_blocked`] | —             | blocked + unrolled xnor_64      |
+//! | [`parallel::gemm_u64_mt`]  | `xnor_64_omp` | row-partitioned threads         |
+//!
+//! Bit convention (shared with `python/compile/kernels/ref.py` and the
+//! Pallas kernel): bit 1 encodes +1, bit 0 encodes −1, LSB-first within a
+//! word.  A-side padding packs 1-bits and B-side padding packs 0-bits so
+//! padded lanes xnor to 0 and the true dot is `2*pop − K` (no correction
+//! term) — see [`pack`].
+
+pub mod blocked;
+pub mod dispatch;
+pub mod naive;
+pub mod pack;
+pub mod parallel;
+pub mod xnor;
+
+pub use dispatch::{binary_gemm_f32, xnor_gemm_prepacked, Method};
+pub use pack::{PackedMatrix, Side};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sign_binarize;
+
+    /// Deterministic pseudo-random ±1-ish floats without a rand dep.
+    pub(crate) fn lcg_floats(seed: u64, n: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+            })
+            .collect()
+    }
+
+    /// Every variant must equal the naive float GEMM on binarized data.
+    #[test]
+    fn all_variants_agree_on_pm_one() {
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (8, 16, 64), (13, 9, 100), (4, 4, 129)] {
+            let a: Vec<f32> = lcg_floats(1, m * k).iter().map(|&x| sign_binarize(x)).collect();
+            let b: Vec<f32> = lcg_floats(2, k * n).iter().map(|&x| sign_binarize(x)).collect();
+            let expect = naive::gemm_f32(&a, &b, m, n, k);
+            for method in Method::all() {
+                let got = binary_gemm_f32(*method, &a, &b, m, n, k);
+                assert_eq!(got, expect, "method {method:?} m={m} n={n} k={k}");
+            }
+        }
+    }
+
+    /// On arbitrary floats, the xnor variants implicitly binarize; they must
+    /// equal naive-on-binarized (the training/inference equivalence §2.2.2).
+    #[test]
+    fn xnor_variants_binarize_implicitly() {
+        let (m, n, k) = (6, 10, 70);
+        let a = lcg_floats(3, m * k);
+        let b = lcg_floats(4, k * n);
+        let ab: Vec<f32> = a.iter().map(|&x| sign_binarize(x)).collect();
+        let bb: Vec<f32> = b.iter().map(|&x| sign_binarize(x)).collect();
+        let expect = naive::gemm_f32(&ab, &bb, m, n, k);
+        for method in [Method::Xnor32, Method::Xnor64, Method::Xnor64Blocked, Method::Xnor64Mt] {
+            assert_eq!(binary_gemm_f32(method, &a, &b, m, n, k), expect, "{method:?}");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Naive float GEMM — the paper's `naive gemm` baseline (Figures 1–3 are
+//! speedups relative to this kernel).
+//!
+//! Deliberately cache-hostile i-j-k ordering with a column walk over B,
+//! mirroring the textbook triple loop the paper benchmarks against.  Do
+//! not "fix" it: its badness is part of the reproduced measurement.
+
+/// C = A·B with A (m, k), B (k, n) row-major; returns C (m, n).
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        // 2x2 identity times arbitrary
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, 4.0, 5.0, 6.0];
+        assert_eq!(gemm_f32(&a, &b, 2, 2, 2), b);
+    }
+
+    #[test]
+    fn known_product() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(gemm_f32(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rectangular() {
+        // (1,3) x (3,2)
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(gemm_f32(&a, &b, 1, 2, 3), vec![4.0, 5.0]);
+    }
+}

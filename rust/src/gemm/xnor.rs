@@ -1,0 +1,189 @@
+//! The xnor+popcount GEMM kernels — ports of the paper's Listing 3 plus
+//! the "several optimized versions" (§2.2.1: blocking, packing, unrolling).
+//!
+//! All kernels return raw popcounts (the xnor dot in `[0, K]`); callers map
+//! to the ±1 dot range with `2*pop − K` (see [`crate::quant::xnor_to_dot`]).
+//! `!(a ^ b)` is xnor; `count_ones()` compiles to `popcnt` on x86-64, the
+//! single-instruction hardware support the paper leans on.
+
+use super::pack::PackedMatrix;
+
+/// Listing 3 on 32-bit BINARY_WORDs (`xnor_32`): x86/ARMv7 width.
+pub fn gemm_u32(a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    assert_eq!(a.k, b.k, "reduction length mismatch");
+    let (m, n) = (a.rows, b.rows);
+    let aw = a.words_u32();
+    let bw = b.words_u32();
+    let wpr = a.words_per_row * 2;
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = &aw[i * wpr..(i + 1) * wpr];
+        for j in 0..n {
+            let brow = &bw[j * wpr..(j + 1) * wpr];
+            let mut acc: u32 = 0;
+            for w in 0..wpr {
+                acc += (!(arow[w] ^ brow[w])).count_ones();
+            }
+            // subtract the phantom matches of the high pad half-words:
+            // none exist because A pads are 1s and B pads are 0s -> xnor 0.
+            c[i * n + j] = acc as i32 - pad_correction(a.k);
+        }
+    }
+    c
+}
+
+/// Phantom popcount from whole pad words beyond k: with A=1/B=0 padding
+/// xnor is 0 everywhere, so the correction is always 0.  Kept as a function
+/// (and asserted in tests) to document the invariant the packing creates.
+#[inline]
+fn pad_correction(_k: usize) -> i32 {
+    0
+}
+
+/// Listing 3 on 64-bit BINARY_WORDs (`xnor_64`): x64 width.
+pub fn gemm_u64(a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    assert_eq!(a.k, b.k, "reduction length mismatch");
+    let (m, n, wpr) = (a.rows, b.rows, a.words_per_row);
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc: u32 = 0;
+            for w in 0..wpr {
+                acc += (!(arow[w] ^ brow[w])).count_ones();
+            }
+            c[i * n + j] = acc as i32;
+        }
+    }
+    c
+}
+
+/// Blocked + 4-way-unrolled xnor_64 — the paper's cache-hierarchy
+/// optimization.  Tiles the output so each A row block is reused across a
+/// B column block held in cache; the inner reduction is unrolled into four
+/// independent popcount chains to hide `popcnt` latency.
+pub fn gemm_u64_blocked(a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    assert_eq!(a.k, b.k, "reduction length mismatch");
+    let (m, n) = (a.rows, b.rows);
+    let mut c = vec![0i32; m * n];
+    gemm_u64_blocked_into(a, b, &mut c, 0, m);
+    c
+}
+
+/// Row-range worker shared with the multi-threaded variant: computes rows
+/// `[row_begin, row_end)` of C into `c` (full-size M×N buffer).
+pub(crate) fn gemm_u64_blocked_into(
+    a: &PackedMatrix,
+    b: &PackedMatrix,
+    c: &mut [i32],
+    row_begin: usize,
+    row_end: usize,
+) {
+    const JB: usize = 64; // B rows (output cols) per tile: JB*wpr*8B in L1/L2
+    let (n, wpr) = (b.rows, a.words_per_row);
+    for jc in (0..n).step_by(JB) {
+        let jb = JB.min(n - jc);
+        for i in row_begin..row_end {
+            let arow = a.row(i);
+            let crow = &mut c[i * n + jc..i * n + jc + jb];
+            for (dj, cv) in crow.iter_mut().enumerate() {
+                let brow = b.row(jc + dj);
+                *cv = xnor_popcount_row(arow, brow, wpr);
+            }
+        }
+    }
+}
+
+/// Single-row xnor popcount reduction.
+///
+/// §Perf note: this is deliberately the *simple* zip/sum form.  With
+/// `-C target-cpu=native` LLVM auto-vectorizes it to AVX-512
+/// `vpopcntq` (8×u64 per instruction) on this box; a manual 4-accumulator
+/// scalar unroll (the first implementation) *defeated* that
+/// vectorization and measured ~1.6× slower — see EXPERIMENTS.md §Perf.
+#[inline]
+pub(crate) fn xnor_popcount_row(arow: &[u64], brow: &[u64], wpr: usize) -> i32 {
+    debug_assert!(arow.len() >= wpr && brow.len() >= wpr);
+    arow[..wpr]
+        .iter()
+        .zip(&brow[..wpr])
+        .map(|(&a, &b)| (!(a ^ b)).count_ones())
+        .sum::<u32>() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack::Side;
+    use super::super::{naive, tests::lcg_floats};
+    use super::*;
+    use crate::quant::{sign_binarize, xnor_to_dot};
+
+    fn setup(m: usize, n: usize, k: usize) -> (PackedMatrix, PackedMatrix, Vec<f32>) {
+        let a: Vec<f32> = lcg_floats(7, m * k).iter().map(|&x| sign_binarize(x)).collect();
+        let b: Vec<f32> = lcg_floats(8, k * n).iter().map(|&x| sign_binarize(x)).collect();
+        let expect = naive::gemm_f32(&a, &b, m, n, k);
+        (
+            PackedMatrix::pack_rows(&a, m, k, Side::A),
+            PackedMatrix::pack_cols(&b, k, n),
+            expect,
+        )
+    }
+
+    fn check(pop: &[i32], expect: &[f32], n: usize, k: usize) {
+        for (idx, (&p, &e)) in pop.iter().zip(expect).enumerate() {
+            assert_eq!(xnor_to_dot(p, k), e, "element ({}, {})", idx / n, idx % n);
+        }
+    }
+
+    #[test]
+    fn u32_matches_float_dot() {
+        for (m, n, k) in [(1, 1, 1), (5, 7, 64), (3, 4, 65), (8, 8, 200)] {
+            let (pa, pb, expect) = setup(m, n, k);
+            check(&gemm_u32(&pa, &pb), &expect, n, k);
+        }
+    }
+
+    #[test]
+    fn u64_matches_float_dot() {
+        for (m, n, k) in [(1, 1, 1), (5, 7, 64), (3, 4, 65), (8, 8, 200), (2, 3, 1000)] {
+            let (pa, pb, expect) = setup(m, n, k);
+            check(&gemm_u64(&pa, &pb), &expect, n, k);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_plain_u64() {
+        for (m, n, k) in [(1, 100, 64), (17, 130, 333), (64, 64, 256)] {
+            let (pa, pb, _) = setup(m, n, k);
+            assert_eq!(gemm_u64_blocked(&pa, &pb), gemm_u64(&pa, &pb), "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn popcount_range_is_zero_to_k() {
+        let (m, n, k) = (6, 6, 97);
+        let (pa, pb, _) = setup(m, n, k);
+        for p in gemm_u64(&pa, &pb) {
+            assert!((0..=k as i32).contains(&p), "pop {p} outside [0, {k}]");
+        }
+    }
+
+    #[test]
+    fn all_match_gives_pop_k() {
+        let ones = vec![1.0f32; 70];
+        let pa = PackedMatrix::pack_rows(&ones, 1, 70, Side::A);
+        let pb = PackedMatrix::pack_cols(&ones, 70, 1);
+        assert_eq!(gemm_u64(&pa, &pb), vec![70]);
+        assert_eq!(gemm_u32(&pa, &pb), vec![70]);
+    }
+
+    #[test]
+    fn all_mismatch_gives_pop_zero() {
+        let plus = vec![1.0f32; 70];
+        let minus = vec![-1.0f32; 70];
+        let pa = PackedMatrix::pack_rows(&plus, 1, 70, Side::A);
+        let pb = PackedMatrix::pack_cols(&minus, 70, 1);
+        assert_eq!(gemm_u64(&pa, &pb), vec![0]);
+    }
+}

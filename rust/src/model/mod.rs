@@ -1,0 +1,19 @@
+//! Model storage: checkpoints, the packed `.bmx` format, the converter
+//! (paper §2.2.3) and exact model-size inventories (Tables 1–2).
+//!
+//! * [`json`] — minimal JSON parser (offline env: no serde) for the
+//!   artifact manifest emitted by `python/compile/aot.py`.
+//! * [`ckpt`] — BMXC f32 checkpoint format shared with the Python side.
+//! * [`bmx`] — the `.bmx` deployment format: Q-layer weights bit-packed to
+//!   1 bit/weight, everything else f32; plus the f32→packed converter.
+//! * [`inventory`] — byte-exact size accounting for LeNet and ResNet-18
+//!   at full precision vs (partially) binarized — the model-size columns
+//!   of Table 1 and Table 2.
+
+pub mod bmx;
+pub mod ckpt;
+pub mod inventory;
+pub mod json;
+
+pub use bmx::{convert, BmxModel, BmxTensor};
+pub use ckpt::{Checkpoint, Dtype, TensorData};

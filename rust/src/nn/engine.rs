@@ -1,0 +1,187 @@
+//! Arch-dispatching inference facade: `.bmx` model in, logits out.
+//!
+//! The `.bmx` metadata JSON names the architecture and its hyperparameters;
+//! `Engine` parses it and routes to the right graph.  This is what the
+//! serving coordinator and the CLI `predict` command use.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::{lenet::Lenet, resnet::Resnet};
+use crate::model::bmx::BmxModel;
+use crate::model::json;
+use crate::tensor::Tensor;
+
+/// A loaded, ready-to-run model.
+pub enum Engine {
+    Lenet(Lenet),
+    Resnet(Resnet),
+}
+
+impl Engine {
+    /// Build from a parsed `.bmx` model using its embedded metadata.
+    pub fn from_bmx(m: &BmxModel) -> Result<Self> {
+        let meta = json::parse(&m.meta)
+            .map_err(|e| anyhow::anyhow!("bad .bmx metadata: {e}"))?;
+        let arch = meta
+            .get("arch")
+            .and_then(|v| v.as_str())
+            .context(".bmx metadata missing \"arch\"")?;
+        match arch {
+            "lenet" => {
+                let binary = matches!(meta.get("binary"), Some(json::Value::Bool(true)));
+                let act_bit = meta
+                    .get("act_bit")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(1) as u32;
+                Ok(Engine::Lenet(Lenet::from_bmx_act_bit(m, binary, act_bit)?))
+            }
+            "resnet18" => {
+                let fp_stages: Vec<usize> = meta
+                    .get("fp_stages")
+                    .and_then(|v| v.as_array())
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_default();
+                Ok(Engine::Resnet(Resnet::from_bmx(m, &fp_stages)?))
+            }
+            other => bail!("unknown architecture {other:?}"),
+        }
+    }
+
+    /// Load a `.bmx` file and build the engine.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_bmx(&BmxModel::load(path)?)
+    }
+
+    /// Forward pass over an NCHW batch.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        match self {
+            Engine::Lenet(n) => n.forward(x),
+            Engine::Resnet(n) => n.forward(x),
+        }
+    }
+
+    /// Expected input shape [C, H, W].
+    pub fn input_shape(&self) -> [usize; 3] {
+        match self {
+            Engine::Lenet(_) => [1, 28, 28],
+            Engine::Resnet(_) => [3, 32, 32],
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            Engine::Lenet(_) => 10,
+            Engine::Resnet(n) => n.classes,
+        }
+    }
+
+    /// Classify a batch: flat images -> (top-1 class, logit) per image.
+    pub fn classify(&self, images: &[f32], batch: usize) -> Result<Vec<(usize, f32)>> {
+        let [c, h, w] = self.input_shape();
+        if images.len() != batch * c * h * w {
+            bail!(
+                "expected {batch}x{c}x{h}x{w} = {} floats, got {}",
+                batch * c * h * w,
+                images.len()
+            );
+        }
+        let x = Tensor::new(vec![batch, c, h, w], images.to_vec());
+        let logits = self.forward(&x)?;
+        let classes = logits.shape()[1];
+        Ok(logits
+            .data()
+            .chunks(classes)
+            .map(|row| {
+                // first occurrence wins on ties (matches jnp.argmax)
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate().skip(1) {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                (best, row[best])
+            })
+            .collect())
+    }
+
+    /// Top-1 accuracy over a dataset slice.
+    pub fn accuracy(&self, images: &[f32], labels: &[i32], batch: usize) -> Result<f64> {
+        let [c, h, w] = self.input_shape();
+        let per = c * h * w;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (chunk, lchunk) in images.chunks(batch * per).zip(labels.chunks(batch)) {
+            let b = lchunk.len();
+            let preds = self.classify(&chunk[..b * per], b)?;
+            correct += preds
+                .iter()
+                .zip(lchunk)
+                .filter(|((p, _), &l)| *p == l as usize)
+                .count();
+            total += b;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bmx::convert;
+    use crate::model::inventory;
+
+    fn lenet_model(binary: bool) -> BmxModel {
+        let ck = super::super::lenet::tests::fake_ckpt(binary);
+        let names = if binary {
+            inventory::lenet(true).binary_names()
+        } else {
+            vec![]
+        };
+        let meta = format!(r#"{{"arch": "lenet", "binary": {binary}}}"#);
+        convert(&ck, &names, &meta).unwrap()
+    }
+
+    #[test]
+    fn dispatches_lenet_from_meta() {
+        let m = lenet_model(true);
+        let e = Engine::from_bmx(&m).unwrap();
+        assert_eq!(e.input_shape(), [1, 28, 28]);
+        assert_eq!(e.classes(), 10);
+    }
+
+    #[test]
+    fn classify_returns_one_pred_per_image() {
+        let m = lenet_model(false);
+        let e = Engine::from_bmx(&m).unwrap();
+        let imgs = vec![0.1f32; 3 * 784];
+        let preds = e.classify(&imgs, 3).unwrap();
+        assert_eq!(preds.len(), 3);
+        assert!(preds.iter().all(|(c, _)| *c < 10));
+    }
+
+    #[test]
+    fn classify_rejects_bad_length() {
+        let m = lenet_model(false);
+        let e = Engine::from_bmx(&m).unwrap();
+        assert!(e.classify(&[0.0; 100], 1).is_err());
+    }
+
+    #[test]
+    fn unknown_arch_rejected() {
+        let mut m = lenet_model(false);
+        m.meta = r#"{"arch": "vgg"}"#.to_string();
+        assert!(Engine::from_bmx(&m).is_err());
+    }
+
+    #[test]
+    fn accuracy_on_constant_labels() {
+        let m = lenet_model(false);
+        let e = Engine::from_bmx(&m).unwrap();
+        let imgs = vec![0.2f32; 4 * 784];
+        let preds = e.classify(&imgs, 4).unwrap();
+        let labels: Vec<i32> = preds.iter().map(|(c, _)| *c as i32).collect();
+        let acc = e.accuracy(&imgs, &labels, 2).unwrap();
+        assert_eq!(acc, 1.0);
+    }
+}

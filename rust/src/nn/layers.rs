@@ -1,0 +1,456 @@
+//! Inference-engine layers.
+//!
+//! Float layers (Conv2d, Dense) run im2col + the blocked f32 GEMM; binary
+//! layers (QConv2d, QDense) run im2col + bit-packing + the xnor GEMM and
+//! map popcounts back to the ±1 dot range (`2*pop − K`).  QConv2d pads
+//! with **+1** (matching `python/compile/layers.py::qconv2d`) because a
+//! zero pad is unrepresentable in the xnor domain.
+
+use crate::gemm::{self, Method, PackedMatrix, Side};
+use crate::quant::{qactivation_bin, xnor_to_dot};
+use crate::tensor::{conv_output_size, im2col, Tensor};
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Full-precision conv: weights (O, C, KH, KW) with optional bias.
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    pub w: Vec<f32>,
+    pub b: Option<Vec<f32>>,
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Transposed weight matrix (K, O) for the f32 GEMM, built once.
+    wt: Vec<f32>,
+}
+
+impl Conv2d {
+    pub fn new(
+        w: Vec<f32>,
+        b: Option<Vec<f32>>,
+        shape: [usize; 4],
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        let [o, c, kh, kw] = shape;
+        assert_eq!(w.len(), o * c * kh * kw);
+        let k = c * kh * kw;
+        let mut wt = vec![0.0f32; k * o];
+        for oi in 0..o {
+            for ki in 0..k {
+                wt[ki * o + oi] = w[oi * k + ki];
+            }
+        }
+        Self { w, b, out_ch: o, in_ch: c, kh, kw, stride, pad, wt }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+        assert_eq!(c, self.in_ch, "channel mismatch");
+        let (cols, rows, k) =
+            im2col(x.data(), n, c, h, w, self.kh, self.kw, self.stride, self.pad);
+        let ho = conv_output_size(h, self.kh, self.stride, self.pad);
+        let wo = conv_output_size(w, self.kw, self.stride, self.pad);
+        // (rows, k) x (k, O) -> (rows, O), rows ordered (n, ho, wo)
+        let out = gemm::blocked::gemm_f32(&cols, &self.wt, rows, self.out_ch, k);
+        let mut y = rows_to_nchw(&out, n, self.out_ch, ho, wo);
+        if let Some(b) = &self.b {
+            add_channel_bias(&mut y, b, self.out_ch, ho * wo);
+        }
+        Tensor::new(vec![n, self.out_ch, ho, wo], y)
+    }
+}
+
+/// Binary conv: weights bit-packed (O rows × C*KH*KW bits).
+/// Input must already be ±1 (post-QActivation).
+#[derive(Debug, Clone)]
+pub struct QConv2d {
+    pub packed: PackedMatrix,
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub method: Method,
+}
+
+impl QConv2d {
+    pub fn new(packed: PackedMatrix, shape: [usize; 4], stride: usize, pad: usize) -> Self {
+        let [o, c, kh, kw] = shape;
+        assert_eq!(packed.rows, o);
+        assert_eq!(packed.k, c * kh * kw);
+        Self { packed, out_ch: o, in_ch: c, kh, kw, stride, pad, method: Method::Xnor64Blocked }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let xp = pad_plus_one(x, self.pad);
+        let [n, c, h, w] = [xp.shape()[0], xp.shape()[1], xp.shape()[2], xp.shape()[3]];
+        assert_eq!(c, self.in_ch, "channel mismatch");
+        let (cols, rows, k) = im2col(xp.data(), n, c, h, w, self.kh, self.kw, self.stride, 0);
+        let ho = conv_output_size(h, self.kh, self.stride, 0);
+        let wo = conv_output_size(w, self.kw, self.stride, 0);
+        let pa = PackedMatrix::pack_rows(&cols, rows, k, Side::A);
+        let pops = gemm::xnor_gemm_prepacked(self.method, &pa, &self.packed);
+        let dots: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
+        let y = rows_to_nchw(&dots, n, self.out_ch, ho, wo);
+        Tensor::new(vec![n, self.out_ch, ho, wo], y)
+    }
+}
+
+/// Full-precision dense layer: w (N, K), optional bias.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub w: Vec<f32>,
+    pub b: Option<Vec<f32>>,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    wt: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(w: Vec<f32>, b: Option<Vec<f32>>, out_dim: usize, in_dim: usize) -> Self {
+        assert_eq!(w.len(), out_dim * in_dim);
+        let mut wt = vec![0.0f32; in_dim * out_dim];
+        for o in 0..out_dim {
+            for k in 0..in_dim {
+                wt[k * out_dim + o] = w[o * in_dim + k];
+            }
+        }
+        Self { w, b, out_dim, in_dim, wt }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (bsz, k) = (x.shape()[0], x.shape()[1]);
+        assert_eq!(k, self.in_dim, "dense input dim mismatch");
+        let mut out = gemm::blocked::gemm_f32(x.data(), &self.wt, bsz, self.out_dim, k);
+        if let Some(b) = &self.b {
+            for r in 0..bsz {
+                for (o, &bv) in b.iter().enumerate() {
+                    out[r * self.out_dim + o] += bv;
+                }
+            }
+        }
+        Tensor::new(vec![bsz, self.out_dim], out)
+    }
+}
+
+/// Binary dense: packed weights (N rows × K bits); ±1 input expected.
+#[derive(Debug, Clone)]
+pub struct QDense {
+    pub packed: PackedMatrix,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub method: Method,
+}
+
+impl QDense {
+    pub fn new(packed: PackedMatrix, out_dim: usize, in_dim: usize) -> Self {
+        assert_eq!(packed.rows, out_dim);
+        assert_eq!(packed.k, in_dim);
+        Self { packed, out_dim, in_dim, method: Method::Xnor64Blocked }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (bsz, k) = (x.shape()[0], x.shape()[1]);
+        assert_eq!(k, self.in_dim, "qdense input dim mismatch");
+        let pa = PackedMatrix::pack_rows(x.data(), bsz, k, Side::A);
+        let pops = gemm::xnor_gemm_prepacked(self.method, &pa, &self.packed);
+        let out: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
+        Tensor::new(vec![bsz, self.out_dim], out)
+    }
+}
+
+/// BatchNorm (inference: running stats), channel axis 1 for 4-D, 1 for 2-D.
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let ch = self.gamma.len();
+        let mut y = x.clone();
+        let spatial: usize = if x.shape().len() == 4 {
+            x.shape()[2] * x.shape()[3]
+        } else {
+            1
+        };
+        assert_eq!(x.shape()[1], ch, "batchnorm channel mismatch");
+        let scale: Vec<f32> = (0..ch)
+            .map(|c| self.gamma[c] / (self.var[c] + BN_EPS).sqrt())
+            .collect();
+        let shift: Vec<f32> =
+            (0..ch).map(|c| self.beta[c] - self.mean[c] * scale[c]).collect();
+        let data = y.data_mut();
+        let n = x.shape()[0];
+        for ni in 0..n {
+            for c in 0..ch {
+                let base = (ni * ch + c) * spatial;
+                for s in 0..spatial {
+                    data[base + s] = data[base + s] * scale[c] + shift[c];
+                }
+            }
+        }
+        y
+    }
+}
+
+/// 2×2 max pooling, stride 2, VALID.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; n * c * ho * wo];
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(x.at4(ni, ci, oy * 2 + dy, ox * 2 + dx));
+                        }
+                    }
+                    out[((ni * c + ci) * ho + oy) * wo + ox] = m;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, c, ho, wo], out)
+}
+
+/// Global average pooling NCHW -> NC.
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let mut out = vec![0.0f32; n * c];
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0;
+            for hy in 0..h {
+                for wx in 0..w {
+                    acc += x.at4(ni, ci, hy, wx);
+                }
+            }
+            out[ni * c + ci] = acc * inv;
+        }
+    }
+    Tensor::new(vec![n, c], out)
+}
+
+/// Elementwise tanh.
+pub fn tanh(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    y.map_inplace(f32::tanh);
+    y
+}
+
+/// Elementwise ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    y.map_inplace(|v| v.max(0.0));
+    y
+}
+
+/// QActivation, k = 1: clip to [-1, 1] then sign.
+pub fn qactivation(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    y.map_inplace(qactivation_bin);
+    y
+}
+
+/// QActivation, arbitrary act_bit (paper §2.1).
+pub fn qactivation_k(x: &Tensor, k: u32) -> Tensor {
+    let mut y = x.clone();
+    y.map_inplace(|v| crate::quant::qactivation_k(v, k));
+    y
+}
+
+/// Flatten NCHW -> (N, C*H*W).
+pub fn flatten(x: &Tensor) -> Tensor {
+    let n = x.shape()[0];
+    let rest: usize = x.shape()[1..].iter().product();
+    x.clone().reshape(vec![n, rest])
+}
+
+/// Elementwise a + b.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "add shape mismatch");
+    let mut y = a.clone();
+    for (v, &bv) in y.data_mut().iter_mut().zip(b.data()) {
+        *v += bv;
+    }
+    y
+}
+
+/// Pad spatial dims with +1.0 (the binary-domain pad value).
+fn pad_plus_one(x: &Tensor, pad: usize) -> Tensor {
+    if pad == 0 {
+        return x.clone();
+    }
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut out = Tensor::full(vec![n, c, hp, wp], 1.0);
+    let data = out.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            for hy in 0..h {
+                let src = ((ni * c + ci) * h + hy) * w;
+                let dst = ((ni * c + ci) * hp + hy + pad) * wp + pad;
+                data[dst..dst + w].copy_from_slice(&x.data()[src..src + w]);
+            }
+        }
+    }
+    out
+}
+
+/// Reorder GEMM output rows (n*ho*wo, O) into NCHW (n, O, ho, wo).
+fn rows_to_nchw(rows: &[f32], n: usize, o: usize, ho: usize, wo: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * o * ho * wo];
+    for ni in 0..n {
+        for y in 0..ho {
+            for x in 0..wo {
+                let row = ((ni * ho) + y) * wo + x;
+                for oi in 0..o {
+                    out[((ni * o + oi) * ho + y) * wo + x] = rows[row * o + oi];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn add_channel_bias(y: &mut [f32], b: &[f32], ch: usize, spatial: usize) {
+    let n = y.len() / (ch * spatial);
+    for ni in 0..n {
+        for (c, &bv) in b.iter().enumerate() {
+            let base = (ni * ch + c) * spatial;
+            for s in 0..spatial {
+                y[base + s] += bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sign_binarize;
+
+    fn lcg(seed: u64, n: usize) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn conv2d_matches_naive_loop() {
+        // 1x1x3x3 input, 1 filter 2x2, stride 1, no pad
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = vec![1.0, 0.0, 0.0, -1.0]; // detects diagonal difference
+        let conv = Conv2d::new(w, Some(vec![0.5]), [1, 1, 2, 2], 1, 0);
+        let y = conv.forward(&x);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // y[0,0] = 1 - 5 + 0.5 = -3.5, etc.
+        assert_eq!(y.data(), &[-3.5, -3.5, -3.5, -3.5]);
+    }
+
+    #[test]
+    fn qconv_equals_float_conv_on_pm1() {
+        let (o, c, kh, kw) = (6, 4, 3, 3);
+        let wf: Vec<f32> = lcg(1, o * c * kh * kw).iter().map(|&v| sign_binarize(v)).collect();
+        let x = Tensor::new(
+            vec![2, c, 8, 8],
+            lcg(2, 2 * c * 64).iter().map(|&v| sign_binarize(v)).collect(),
+        );
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1)] {
+            let fconv = Conv2d::new(wf.clone(), None, [o, c, kh, kw], stride, pad);
+            // float path must also pad with +1 to match the binary domain
+            let xp = pad_plus_one(&x, pad);
+            let fconv_nopad = Conv2d::new(wf.clone(), None, [o, c, kh, kw], stride, 0);
+            let expect = fconv_nopad.forward(&xp);
+            let packed = PackedMatrix::pack_rows(&wf, o, c * kh * kw, Side::B);
+            let qconv = QConv2d::new(packed, [o, c, kh, kw], stride, pad);
+            let got = qconv.forward(&x);
+            assert_eq!(got.shape(), expect.shape(), "stride={stride} pad={pad}");
+            assert_eq!(got.data(), expect.data(), "stride={stride} pad={pad}");
+            let _ = fconv;
+        }
+    }
+
+    #[test]
+    fn qdense_equals_dense_on_pm1() {
+        let (n, k) = (5, 70);
+        let wf: Vec<f32> = lcg(3, n * k).iter().map(|&v| sign_binarize(v)).collect();
+        let x = Tensor::new(
+            vec![3, k],
+            lcg(4, 3 * k).iter().map(|&v| sign_binarize(v)).collect(),
+        );
+        let dense = Dense::new(wf.clone(), None, n, k);
+        let expect = dense.forward(&x);
+        let q = QDense::new(PackedMatrix::pack_rows(&wf, n, k, Side::B), n, k);
+        assert_eq!(q.forward(&x).data(), expect.data());
+    }
+
+    #[test]
+    fn batchnorm_applies_affine() {
+        let bn = BatchNorm {
+            gamma: vec![2.0],
+            beta: vec![1.0],
+            mean: vec![3.0],
+            var: vec![4.0],
+        };
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![3.0, 5.0]);
+        let y = bn.forward(&x);
+        // (3-3)/2*2+1 = 1 ; (5-3)/2*2+1 = 3
+        assert!((y.data()[0] - 1.0).abs() < 1e-4);
+        assert!((y.data()[1] - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(maxpool2(&x).data(), &[4.0]);
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 2., 3., 4., 10., 10., 10., 10.]);
+        let y = global_avgpool(&x);
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.data(), &[2.5, 10.0]);
+    }
+
+    #[test]
+    fn qactivation_pm1() {
+        let x = Tensor::new(vec![1, 4], vec![-2.0, -0.1, 0.0, 3.0]);
+        assert_eq!(qactivation(&x).data(), &[-1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn pad_plus_one_fills_border() {
+        let x = Tensor::new(vec![1, 1, 1, 1], vec![-5.0]);
+        let y = pad_plus_one(&x, 1);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        let sum: f32 = y.data().iter().sum();
+        assert_eq!(sum, 8.0 - 5.0);
+        assert_eq!(y.at4(0, 0, 1, 1), -5.0);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![0.5, -2.0]);
+        assert_eq!(add(&a, &b).data(), &[1.5, 0.0]);
+    }
+}

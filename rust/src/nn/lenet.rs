@@ -1,0 +1,225 @@
+//! LeNet inference graphs (paper Listings 1 and 2) over a `.bmx` model.
+
+use anyhow::{bail, Context, Result};
+
+use super::layers as L;
+use crate::model::bmx::BmxModel;
+use crate::tensor::Tensor;
+
+/// Binary (Listing 2), k-bit quantized (§2.1) or full-precision
+/// (Listing 1) LeNet.
+#[derive(Debug)]
+pub struct Lenet {
+    pub binary: bool,
+    /// act_bit: 1 = xnor path; >1 = Eq. 1 quantized activations with
+    /// pre-quantized f32 weights (the paper's storage for k in [2, 31]).
+    pub act_bit: u32,
+    conv1: L::Conv2d,
+    bn1: L::BatchNorm,
+    conv2_fp: Option<L::Conv2d>,
+    conv2_bin: Option<L::QConv2d>,
+    bn2: L::BatchNorm,
+    fc1_fp: Option<L::Dense>,
+    fc1_bin: Option<L::QDense>,
+    bn3: L::BatchNorm,
+    fc2: L::Dense,
+}
+
+pub(super) fn get_f32(m: &BmxModel, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+    let (shape, data) = m
+        .get_f32(name)
+        .with_context(|| format!("missing f32 tensor {name}"))?;
+    Ok((shape.to_vec(), data.to_vec()))
+}
+
+pub(super) fn get_bn(m: &BmxModel, name: &str) -> Result<L::BatchNorm> {
+    Ok(L::BatchNorm {
+        gamma: get_f32(m, &format!("params.{name}.gamma"))?.1,
+        beta: get_f32(m, &format!("params.{name}.beta"))?.1,
+        mean: get_f32(m, &format!("state.{name}.mean"))?.1,
+        var: get_f32(m, &format!("state.{name}.var"))?.1,
+    })
+}
+
+impl Lenet {
+    /// Build from a converted model; `binary` per the model metadata.
+    pub fn from_bmx(m: &BmxModel, binary: bool) -> Result<Self> {
+        Self::from_bmx_act_bit(m, binary, 1)
+    }
+
+    /// Build with an explicit act_bit (k > 1: quantized f32 weights,
+    /// k-bit QActivation, standard dots — paper §2.1).
+    pub fn from_bmx_act_bit(m: &BmxModel, binary: bool, act_bit: u32) -> Result<Self> {
+        let (s, w) = get_f32(m, "params.conv1.w")?;
+        let conv1 = L::Conv2d::new(
+            w,
+            Some(get_f32(m, "params.conv1.b")?.1),
+            [s[0], s[1], s[2], s[3]],
+            1,
+            0,
+        );
+        let bn1 = get_bn(m, "bn1")?;
+        let bn2 = get_bn(m, "bn2")?;
+        let bn3 = get_bn(m, "bn3")?;
+        let (fs, fw) = get_f32(m, "params.fc2.w")?;
+        let fc2 = L::Dense::new(fw, Some(get_f32(m, "params.fc2.b")?.1), fs[0], fs[1]);
+
+        let (conv2_fp, conv2_bin, fc1_fp, fc1_bin) = if binary && act_bit > 1 {
+            // k-bit mode: weights were Eq.1-quantized by convert_kbit and
+            // stored f32; compute uses the standard float GEMM (§2.1).
+            let (cs, cw) = get_f32(m, "params.conv2.w")?;
+            let c2 = L::Conv2d::new(cw, None, [cs[0], cs[1], cs[2], cs[3]], 1, 0);
+            let (ds, dw) = get_f32(m, "params.fc1.w")?;
+            let d1 = L::Dense::new(dw, None, ds[0], ds[1]);
+            (Some(c2), None, Some(d1), None)
+        } else if binary {
+            let (cs, packed) = m
+                .get_packed("conv2.w")
+                .context("binary lenet: missing packed conv2.w")?;
+            let qc = L::QConv2d::new(packed.clone(), [cs[0], cs[1], cs[2], cs[3]], 1, 0);
+            let (ds, dpacked) = m
+                .get_packed("fc1.w")
+                .context("binary lenet: missing packed fc1.w")?;
+            let qd = L::QDense::new(dpacked.clone(), ds[0], ds[1]);
+            (None, Some(qc), None, Some(qd))
+        } else {
+            let (cs, cw) = get_f32(m, "params.conv2.w")?;
+            let c2 = L::Conv2d::new(
+                cw,
+                Some(get_f32(m, "params.conv2.b")?.1),
+                [cs[0], cs[1], cs[2], cs[3]],
+                1,
+                0,
+            );
+            let (ds, dw) = get_f32(m, "params.fc1.w")?;
+            let d1 = L::Dense::new(dw, Some(get_f32(m, "params.fc1.b")?.1), ds[0], ds[1]);
+            (Some(c2), None, Some(d1), None)
+        };
+        Ok(Self {
+            binary,
+            act_bit,
+            conv1,
+            bn1,
+            conv2_fp,
+            conv2_bin,
+            bn2,
+            fc1_fp,
+            fc1_bin,
+            bn3,
+            fc2,
+        })
+    }
+
+    /// Forward pass: x (B, 1, 28, 28) -> logits (B, 10).
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 4 || x.shape()[1] != 1 || x.shape()[2] != 28 {
+            bail!("lenet expects (B, 1, 28, 28), got {:?}", x.shape());
+        }
+        let h = self.conv1.forward(x); // (B,32,24,24)
+        let h = L::tanh(&h);
+        let h = L::maxpool2(&h); // (B,32,12,12)
+        let h = self.bn1.forward(&h);
+
+        let h = if self.binary && self.act_bit > 1 {
+            let hq = L::qactivation_k(&h, self.act_bit);
+            self.conv2_fp.as_ref().unwrap().forward(&hq)
+        } else if self.binary {
+            let hb = L::qactivation(&h);
+            self.conv2_bin.as_ref().unwrap().forward(&hb) // (B,64,8,8)
+        } else {
+            self.conv2_fp.as_ref().unwrap().forward(&h)
+        };
+        let h = self.bn2.forward(&h);
+        let h = if self.binary { h } else { L::tanh(&h) };
+        let h = L::maxpool2(&h); // (B,64,4,4)
+
+        let h = L::flatten(&h);
+        let h = if self.binary && self.act_bit > 1 {
+            let hq = L::qactivation_k(&h, self.act_bit);
+            self.fc1_fp.as_ref().unwrap().forward(&hq)
+        } else if self.binary {
+            let hb = L::qactivation(&h);
+            self.fc1_bin.as_ref().unwrap().forward(&hb)
+        } else {
+            self.fc1_fp.as_ref().unwrap().forward(&h)
+        };
+        let h = self.bn3.forward(&h);
+        let h = L::tanh(&h);
+        Ok(self.fc2.forward(&h))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::bmx::convert;
+    use crate::model::ckpt::Checkpoint;
+    use crate::model::inventory;
+
+    /// Build a deterministic fake checkpoint matching the LeNet inventory.
+    pub(crate) fn fake_ckpt(binary: bool) -> Checkpoint {
+        let inv = inventory::lenet(binary);
+        let mut ck = Checkpoint::new();
+        let mut s = 1u64;
+        for p in &inv.params {
+            let n = p.numel();
+            let data: Vec<f32> = (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    let v = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                    v * 0.1
+                })
+                .collect();
+            let name = if p.name.starts_with("state.") {
+                p.name.clone()
+            } else {
+                format!("params.{}", p.name)
+            };
+            // variances must be positive
+            let data = if name.contains(".var") {
+                data.iter().map(|v| v.abs() + 0.5).collect()
+            } else {
+                data
+            };
+            ck.push_f32(&name, p.shape.clone(), data);
+        }
+        ck
+    }
+
+    #[test]
+    fn binary_lenet_forward_shape() {
+        let ck = fake_ckpt(true);
+        let names = inventory::lenet(true).binary_names();
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Lenet::from_bmx(&m, true).unwrap();
+        let x = Tensor::full(vec![2, 1, 28, 28], 0.3);
+        let y = net.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fp_lenet_forward_shape() {
+        let ck = fake_ckpt(false);
+        let m = convert(&ck, &[], "{}").unwrap();
+        let net = Lenet::from_bmx(&m, false).unwrap();
+        let x = Tensor::full(vec![1, 1, 28, 28], -0.2);
+        let y = net.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let ck = fake_ckpt(false);
+        let m = convert(&ck, &[], "{}").unwrap();
+        let net = Lenet::from_bmx(&m, false).unwrap();
+        assert!(net.forward(&Tensor::zeros(vec![1, 3, 32, 32])).is_err());
+    }
+
+    #[test]
+    fn binary_model_needs_packed_weights() {
+        let ck = fake_ckpt(true);
+        let m = convert(&ck, &[], "{}").unwrap(); // nothing packed
+        assert!(Lenet::from_bmx(&m, true).is_err());
+    }
+}

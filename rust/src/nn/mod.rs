@@ -1,0 +1,20 @@
+//! The pure-Rust binary inference engine.
+//!
+//! This is the deployment path of the paper (§2.2.2–2.2.3, §4.2): models
+//! train on the AOT/XLA graphs (float dots on ±1 values), then run here
+//! with packed 1-bit weights and the xnor+popcount GEMM family — producing
+//! **the same logits** (Eq. 2 equivalence; verified against the PJRT
+//! artifacts by `rust/tests/engine_vs_artifacts.rs`).
+//!
+//! * [`layers`] — Conv2d / Dense (f32), QConv2d / QDense (packed xnor),
+//!   BatchNorm, pooling and activations.
+//! * [`lenet`] — Listing 1 / Listing 2 graphs over those layers.
+//! * [`resnet`] — CIFAR-style ResNet-18 with stage-wise binarization.
+//! * [`engine`] — arch-dispatching facade: `.bmx` in, logits out.
+
+pub mod engine;
+pub mod layers;
+pub mod lenet;
+pub mod resnet;
+
+pub use engine::Engine;

@@ -1,0 +1,240 @@
+//! CIFAR-style ResNet-18 inference with stage-wise binarization
+//! (paper §3.2 / Table 2), mirroring `python/compile/resnet.py`.
+
+use anyhow::{bail, Context, Result};
+
+use super::layers as L;
+use super::lenet::{get_bn, get_f32};
+use crate::model::bmx::BmxModel;
+use crate::tensor::Tensor;
+
+const NUM_STAGES: usize = 4;
+const BLOCKS_PER_STAGE: usize = 2;
+
+enum BlockConv {
+    Fp(L::Conv2d),
+    Bin(L::QConv2d),
+}
+
+struct Block {
+    binary: bool,
+    conv1: BlockConv,
+    bn1: L::BatchNorm,
+    conv2: BlockConv,
+    bn2: L::BatchNorm,
+    down: Option<(L::Conv2d, L::BatchNorm)>,
+}
+
+/// ResNet-18 engine built from a `.bmx` model.
+pub struct Resnet {
+    pub width: usize,
+    pub classes: usize,
+    pub fp_stages: Vec<usize>,
+    stem: L::Conv2d,
+    stem_bn: L::BatchNorm,
+    blocks: Vec<Block>,
+    fc: L::Dense,
+}
+
+fn load_conv(
+    m: &BmxModel,
+    name: &str,
+    binary: bool,
+    stride: usize,
+    pad: usize,
+) -> Result<BlockConv> {
+    if binary {
+        let (s, packed) = m
+            .get_packed(name)
+            .with_context(|| format!("missing packed conv {name}"))?;
+        Ok(BlockConv::Bin(L::QConv2d::new(
+            packed.clone(),
+            [s[0], s[1], s[2], s[3]],
+            stride,
+            pad,
+        )))
+    } else {
+        let (s, w) = get_f32(m, &format!("params.{name}"))?;
+        Ok(BlockConv::Fp(L::Conv2d::new(w, None, [s[0], s[1], s[2], s[3]], stride, pad)))
+    }
+}
+
+impl Resnet {
+    pub fn from_bmx(m: &BmxModel, fp_stages: &[usize]) -> Result<Self> {
+        let (ss, sw) = get_f32(m, "params.stem.w")?;
+        let width = ss[0];
+        let stem = L::Conv2d::new(sw, None, [ss[0], ss[1], ss[2], ss[3]], 1, 1);
+        let stem_bn = get_bn(m, "stem_bn")?;
+        let mut blocks = Vec::new();
+        let mut in_ch = width;
+        for s in 1..=NUM_STAGES {
+            let out_ch = width * (1 << (s - 1));
+            let binary = !fp_stages.contains(&s);
+            for b in 1..=BLOCKS_PER_STAGE {
+                let stride = if s > 1 && b == 1 { 2 } else { 1 };
+                let name = format!("s{s}b{b}");
+                let conv1 = load_conv(m, &format!("{name}.conv1.w"), binary, stride, 1)?;
+                let conv2 = load_conv(m, &format!("{name}.conv2.w"), binary, 1, 1)?;
+                let bn1 = get_bn(m, &format!("{name}.bn1"))?;
+                let bn2 = get_bn(m, &format!("{name}.bn2"))?;
+                let down = if stride != 1 || in_ch != out_ch {
+                    let (ds, dw) = get_f32(m, &format!("params.{name}.down.w"))?;
+                    let dconv =
+                        L::Conv2d::new(dw, None, [ds[0], ds[1], ds[2], ds[3]], stride, 0);
+                    Some((dconv, get_bn(m, &format!("{name}.down_bn"))?))
+                } else {
+                    None
+                };
+                blocks.push(Block { binary, conv1, bn1, conv2, bn2, down });
+                in_ch = out_ch;
+            }
+        }
+        let (fs, fw) = get_f32(m, "params.fc.w")?;
+        let fc = L::Dense::new(fw, Some(get_f32(m, "params.fc.b")?.1), fs[0], fs[1]);
+        Ok(Self {
+            width,
+            classes: fs[0],
+            fp_stages: fp_stages.to_vec(),
+            stem,
+            stem_bn,
+            blocks,
+            fc,
+        })
+    }
+
+    /// Forward: x (B, 3, 32, 32) -> logits (B, classes).
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 4 || x.shape()[1] != 3 {
+            bail!("resnet expects (B, 3, H, W), got {:?}", x.shape());
+        }
+        let mut h = self.stem.forward(x);
+        h = self.stem_bn.forward(&h);
+        h = L::relu(&h);
+        for blk in &self.blocks {
+            h = block_forward(blk, &h);
+        }
+        let pooled = L::global_avgpool(&h);
+        Ok(self.fc.forward(&pooled))
+    }
+}
+
+fn conv_forward(c: &BlockConv, x: &Tensor, binary_input: bool) -> Tensor {
+    match c {
+        BlockConv::Fp(conv) => conv.forward(x),
+        BlockConv::Bin(qconv) => {
+            debug_assert!(binary_input);
+            qconv.forward(x)
+        }
+    }
+}
+
+fn block_forward(blk: &Block, x: &Tensor) -> Tensor {
+    let mut h;
+    if blk.binary {
+        let hb = L::qactivation(x);
+        h = conv_forward(&blk.conv1, &hb, true);
+        h = blk.bn1.forward(&h);
+        let hb = L::qactivation(&h);
+        h = conv_forward(&blk.conv2, &hb, true);
+        h = blk.bn2.forward(&h);
+    } else {
+        h = conv_forward(&blk.conv1, x, false);
+        h = blk.bn1.forward(&h);
+        h = L::relu(&h);
+        h = conv_forward(&blk.conv2, &h, false);
+        h = blk.bn2.forward(&h);
+    }
+    let skip = match &blk.down {
+        Some((dconv, dbn)) => dbn.forward(&dconv.forward(x)),
+        None => x.clone(),
+    };
+    let out = L::add(&h, &skip);
+    if blk.binary {
+        out
+    } else {
+        L::relu(&out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bmx::convert;
+    use crate::model::ckpt::Checkpoint;
+    use crate::model::inventory::{self, Stem};
+
+    fn fake_ckpt(width: usize, classes: usize, fp_stages: &[usize]) -> (Checkpoint, Vec<String>) {
+        let inv = inventory::resnet18(width, classes, Stem::Cifar, fp_stages);
+        let mut ck = Checkpoint::new();
+        let mut s = 7u64;
+        for p in &inv.params {
+            let data: Vec<f32> = (0..p.numel())
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    (((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0) * 0.2
+                })
+                .collect();
+            let name = if p.name.starts_with("state.") {
+                p.name.clone()
+            } else {
+                format!("params.{}", p.name)
+            };
+            let data = if name.contains(".var") {
+                data.iter().map(|v| v.abs() + 0.5).collect()
+            } else {
+                data
+            };
+            ck.push_f32(&name, p.shape.clone(), data);
+        }
+        (ck, inv.binary_names())
+    }
+
+    #[test]
+    fn fully_binary_forward() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[]).unwrap();
+        let x = Tensor::full(vec![2, 3, 32, 32], 0.1);
+        let y = net.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn partially_binarized_forward() {
+        let (ck, names) = fake_ckpt(8, 100, &[1, 2]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[1, 2]).unwrap();
+        let x = Tensor::full(vec![1, 3, 32, 32], -0.4);
+        let y = net.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 100]);
+    }
+
+    #[test]
+    fn all_fp_forward() {
+        let (ck, names) = fake_ckpt(8, 10, &[1, 2, 3, 4]);
+        assert!(names.is_empty());
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[1, 2, 3, 4]).unwrap();
+        let y = net.forward(&Tensor::full(vec![1, 3, 32, 32], 0.2)).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn spatial_dims_halve_through_stages() {
+        // width 8, input 32x32: stage outputs 32,16,8,4 -> gap over 4x4
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[]).unwrap();
+        // must not panic on shape mismatches anywhere in the graph
+        net.forward(&Tensor::full(vec![1, 3, 32, 32], 0.0)).unwrap();
+    }
+
+    #[test]
+    fn wrong_channels_rejected() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[]).unwrap();
+        assert!(net.forward(&Tensor::zeros(vec![1, 1, 32, 32])).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Quantization math: Eq. 1 (k-bit linear quantization), sign binarization
+//! and the Eq. 2 range maps between the float-dot and xnor-dot domains.
+//!
+//! Semantics are byte-identical to `python/compile/kernels/ref.py`; the
+//! cross-layer equality is enforced by `rust/tests/engine_vs_artifacts.rs`.
+
+/// Sign binarization to {-1, +1}; 0 maps to +1 (paper: `x >= 0`).
+#[inline]
+pub fn sign_binarize(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Eq. 1: quantize a real in [0, 1] to k-bit resolution (k in [1, 31]).
+#[inline]
+pub fn quantize_k(x: f32, k: u32) -> f32 {
+    assert!((1..=31).contains(&k), "act_bit k must be in [1, 31], got {k}");
+    let levels = ((1u64 << k) - 1) as f32;
+    (levels * x).round() / levels
+}
+
+/// QActivation forward for k > 1: clip to [0, 1] then Eq. 1.
+#[inline]
+pub fn clip_quantize(x: f32, k: u32) -> f32 {
+    quantize_k(x.clamp(0.0, 1.0), k)
+}
+
+/// QActivation forward for k = 1: clip to [-1, 1] then sign.
+#[inline]
+pub fn qactivation_bin(x: f32) -> f32 {
+    sign_binarize(x.clamp(-1.0, 1.0))
+}
+
+/// QActivation forward for arbitrary k (paper §2.1): k = 1 binarizes,
+/// k > 1 clips to [0, 1] and applies Eq. 1.
+#[inline]
+pub fn qactivation_k(x: f32, k: u32) -> f32 {
+    if k == 1 {
+        qactivation_bin(x)
+    } else {
+        clip_quantize(x, k)
+    }
+}
+
+/// DoReFa-style k-bit weight quantization (mirrors
+/// `python/compile/layers.py::quantize_weights` for k > 1):
+/// tanh-normalize to [0, 1] by the tensor's max |tanh|, Eq. 1-quantize,
+/// rescale to [-1, 1].  Applied tensor-wide (the max is global).
+pub fn quantize_weights_kbit(w: &[f32], k: u32) -> Vec<f32> {
+    assert!(k > 1, "k = 1 weights are sign-binarized, not Eq.1-quantized");
+    let max_t = w
+        .iter()
+        .map(|v| v.tanh().abs())
+        .fold(0.0f32, f32::max)
+        .max(1e-12);
+    w.iter()
+        .map(|v| {
+            let t01 = v.tanh() / (2.0 * max_t) + 0.5;
+            2.0 * quantize_k(t01, k) - 1.0
+        })
+        .collect()
+}
+
+/// Eq. 2: map a ±1 dot product in [-n, n] to the xnor range [0, n].
+#[inline]
+pub fn dot_to_xnor(dot: f32, n: usize) -> f32 {
+    (dot + n as f32) / 2.0
+}
+
+/// Inverse of Eq. 2: map an xnor popcount in [0, n] to the dot range.
+/// `n` is the true (unpadded) reduction length.
+#[inline]
+pub fn xnor_to_dot(pop: i32, n: usize) -> f32 {
+    (2 * pop - n as i32) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_zero_is_positive() {
+        assert_eq!(sign_binarize(0.0), 1.0);
+        assert_eq!(sign_binarize(-0.0), 1.0); // -0.0 >= 0.0 in IEEE
+        assert_eq!(sign_binarize(1e-30), 1.0);
+        assert_eq!(sign_binarize(-1e-30), -1.0);
+    }
+
+    #[test]
+    fn quantize_endpoints_fixed() {
+        for k in 1..=31 {
+            assert_eq!(quantize_k(0.0, k), 0.0);
+            assert_eq!(quantize_k(1.0, k), 1.0);
+        }
+    }
+
+    #[test]
+    fn quantize_k1_is_threshold() {
+        assert_eq!(quantize_k(0.49, 1), 0.0);
+        assert_eq!(quantize_k(0.51, 1), 1.0);
+    }
+
+    #[test]
+    fn quantize_level_count_k3() {
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..=10_000 {
+            let q = quantize_k(i as f32 / 10_000.0, 3);
+            seen.insert(q.to_bits());
+        }
+        assert_eq!(seen.len(), 8); // 2^3 levels
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        for k in [1, 2, 4, 8, 16] {
+            for i in 0..100 {
+                let x = i as f32 / 99.0;
+                let q = quantize_k(x, k);
+                assert_eq!(quantize_k(q, k), q, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "act_bit")]
+    fn quantize_rejects_k0() {
+        quantize_k(0.5, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "act_bit")]
+    fn quantize_rejects_k32() {
+        quantize_k(0.5, 32);
+    }
+
+    #[test]
+    fn clip_quantize_clips() {
+        assert_eq!(clip_quantize(-3.0, 4), 0.0);
+        assert_eq!(clip_quantize(7.0, 4), 1.0);
+    }
+
+    #[test]
+    fn eq2_roundtrip() {
+        // dot in [-n, n] step 2  <->  pop in [0, n] step 1
+        for n in [1usize, 5, 64, 12800] {
+            for matches in [0usize, 1, n / 2, n] {
+                let dot = (2 * matches) as f32 - n as f32;
+                let pop = dot_to_xnor(dot, n);
+                assert_eq!(pop, matches as f32);
+                assert_eq!(xnor_to_dot(matches as i32, n), dot);
+            }
+        }
+    }
+
+    #[test]
+    fn qactivation_bin_alphabet() {
+        for x in [-5.0f32, -1.0, -0.3, 0.0, 0.7, 9.0] {
+            let y = qactivation_bin(x);
+            assert!(y == 1.0 || y == -1.0);
+        }
+    }
+
+    #[test]
+    fn qactivation_k_dispatch() {
+        assert_eq!(qactivation_k(-0.7, 1), -1.0);
+        assert_eq!(qactivation_k(-0.7, 4), 0.0);
+        assert_eq!(qactivation_k(2.0, 4), 1.0);
+        // k=2: levels {0, 1/3, 2/3, 1}
+        assert!((qactivation_k(0.5, 2) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kbit_weights_in_range_and_level_count() {
+        let w: Vec<f32> = (0..200).map(|i| (i as f32 - 100.0) * 0.03).collect();
+        for k in [2u32, 4, 8] {
+            let q = quantize_weights_kbit(&w, k);
+            let mut levels = std::collections::BTreeSet::new();
+            for v in &q {
+                assert!((-1.0..=1.0).contains(v), "k={k} v={v}");
+                levels.insert(v.to_bits());
+            }
+            assert!(levels.len() <= (1usize << k), "k={k}: {} levels", levels.len());
+            assert!(levels.len() > 2, "k={k}: degenerate quantization");
+        }
+    }
+
+    #[test]
+    fn kbit_weights_preserve_sign_order() {
+        let w = [-2.0f32, -0.5, 0.0, 0.5, 2.0];
+        let q = quantize_weights_kbit(&w, 4);
+        for pair in q.windows(2) {
+            assert!(pair[0] <= pair[1], "not monotone: {q:?}");
+        }
+        assert!(q[0] < 0.0 && q[4] > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sign-binarized")]
+    fn kbit_weights_reject_k1() {
+        quantize_weights_kbit(&[0.5], 1);
+    }
+}

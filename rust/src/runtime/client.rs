@@ -1,0 +1,159 @@
+//! PJRT client/executable wrappers + Literal conversion glue.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`.  All artifacts are lowered with
+//! `return_tuple=True`, so outputs always arrive as one tuple literal that
+//! [`Executable::run`] flattens back into a `Vec<Literal>`.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Wrapper over the PJRT CPU client with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact (no cache).
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+
+    /// Compile-or-reuse an executable, keyed by path.
+    pub fn load_cached(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.lock().unwrap().get(&path) {
+            return Ok(e.clone());
+        }
+        let exe = std::sync::Arc::new(self.load_hlo_text(&path)?);
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given inputs; flatten the output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {:?}", self.path))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer from {:?}", self.path))?
+            .to_literal_sync()?;
+        // return_tuple=True => always a tuple, possibly of arity 1
+        lit.to_tuple().context("decompose output tuple")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal glue
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32: {dims:?} needs {n}, got {}", data.len());
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32: {dims:?} needs {n}, got {}", data.len());
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Build a u32 literal with the given dims.
+pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_u32: {dims:?} needs {n}, got {}", data.len());
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read an i32 literal back to a host vector.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Read a scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Literal-only tests (no PJRT client needed; cheap).
+    #[test]
+    fn lit_f32_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn lit_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0; 3], &[2, 2]).is_err());
+        assert!(lit_i32(&[1; 5], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn lit_i32_roundtrip() {
+        let l = lit_i32(&[-1, 7], &[2]).unwrap();
+        assert_eq!(to_i32_vec(&l).unwrap(), vec![-1, 7]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = lit_scalar_f32(0.125);
+        assert_eq!(scalar_f32(&l).unwrap(), 0.125);
+    }
+
+    // Full PJRT round-trip is covered by rust/tests/runtime_integration.rs
+    // (needs artifacts/ built).
+}

@@ -1,0 +1,305 @@
+//! Typed view over `artifacts/manifest.json` (emitted by aot.py).
+//!
+//! The manifest makes the Rust coordinator fully self-describing: flat
+//! parameter order, shapes, artifact file names, batch sizes and model
+//! hyperparameters all come from here — no hardcoded layouts.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::json::{self, Value};
+
+/// Name + shape of one flat tensor (params/state flattening order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One inference artifact (fixed batch size).
+#[derive(Debug, Clone)]
+pub struct InferEntry {
+    pub file: String,
+    pub batch: usize,
+}
+
+/// One model in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: String,
+    pub params: Vec<TensorSpec>,
+    pub state: Vec<TensorSpec>,
+    pub init_ckpt: String,
+    pub train_file: String,
+    pub train_batch: usize,
+    pub infer: Vec<InferEntry>,
+    pub infer_pallas: Option<InferEntry>,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    /// Raw metadata for arch-specific keys (width, fp_stages, binary, ...).
+    pub raw: Value,
+}
+
+impl ModelEntry {
+    /// Pick the inference artifact with the given batch size.
+    pub fn infer_for_batch(&self, batch: usize) -> Option<&InferEntry> {
+        self.infer.iter().find(|e| e.batch == batch)
+    }
+
+    /// Smallest compiled batch size >= n (for the dynamic batcher).
+    pub fn infer_at_least(&self, n: usize) -> Option<&InferEntry> {
+        self.infer
+            .iter()
+            .filter(|e| e.batch >= n)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// fp_stages list (resnet18) or empty.
+    pub fn fp_stages(&self) -> Vec<usize> {
+        self.raw
+            .get("fp_stages")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default()
+    }
+
+    /// act_bit (paper §2.1); 1 when absent.
+    pub fn act_bit(&self) -> u32 {
+        self.raw
+            .get("act_bit")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(1) as u32
+    }
+
+    /// Compact metadata JSON for embedding into a `.bmx` model.
+    pub fn bmx_meta(&self) -> String {
+        let binary = matches!(self.raw.get("binary"), Some(Value::Bool(true)));
+        let fp: Vec<String> = self.fp_stages().iter().map(|s| s.to_string()).collect();
+        format!(
+            r#"{{"arch": "{}", "binary": {}, "classes": {}, "act_bit": {}, "fp_stages": [{}]}}"#,
+            self.arch,
+            binary,
+            self.classes,
+            self.act_bit(),
+            fp.join(", ")
+        )
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// kernel name -> (file, raw entry)
+    pub kernels: BTreeMap<String, (String, Value)>,
+}
+
+fn specs(v: &Value, key: &str) -> Result<Vec<TensorSpec>> {
+    v.get(key)
+        .and_then(|p| p.as_array())
+        .ok_or_else(|| anyhow!("manifest model missing {key}"))?
+        .iter()
+        .map(|pair| {
+            let a = pair.as_array().ok_or_else(|| anyhow!("bad {key} entry"))?;
+            let name = a[0].as_str().ok_or_else(|| anyhow!("bad name"))?.to_string();
+            let shape = a[1]
+                .as_array()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if root.get("version").and_then(|v| v.as_usize()) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .get("models")
+            .and_then(|v| v.as_object())
+            .context("manifest missing models")?
+        {
+            let train = m.get("train").context("model missing train")?;
+            let infer = m
+                .get("infer")
+                .and_then(|v| v.as_array())
+                .context("model missing infer")?
+                .iter()
+                .map(|e| {
+                    Ok(InferEntry {
+                        file: e
+                            .get("file")
+                            .and_then(|v| v.as_str())
+                            .context("infer missing file")?
+                            .to_string(),
+                        batch: e
+                            .get("batch")
+                            .and_then(|v| v.as_usize())
+                            .context("infer missing batch")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let infer_pallas = m.get("infer_pallas").map(|e| InferEntry {
+                file: e.get("file").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                batch: e.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            });
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    arch: m
+                        .get("arch")
+                        .and_then(|v| v.as_str())
+                        .context("model missing arch")?
+                        .to_string(),
+                    params: specs(m, "params")?,
+                    state: specs(m, "state")?,
+                    init_ckpt: m
+                        .get("init_ckpt")
+                        .and_then(|v| v.as_str())
+                        .context("model missing init_ckpt")?
+                        .to_string(),
+                    train_file: train
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .context("train missing file")?
+                        .to_string(),
+                    train_batch: train
+                        .get("batch")
+                        .and_then(|v| v.as_usize())
+                        .context("train missing batch")?,
+                    infer,
+                    infer_pallas,
+                    input_shape: m
+                        .get("input_shape")
+                        .and_then(|v| v.as_array())
+                        .context("model missing input_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    classes: m.get("classes").and_then(|v| v.as_usize()).unwrap_or(10),
+                    raw: m.clone(),
+                },
+            );
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = root.get("kernels").and_then(|v| v.as_object()) {
+            for (name, k) in ks {
+                let file = k
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .context("kernel missing file")?
+                    .to_string();
+                kernels.insert(name.clone(), (file, k.clone()));
+            }
+        }
+        Ok(Manifest { dir, models, kernels })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m1": {
+          "arch": "lenet", "binary": true, "act_bit": 1, "classes": 10,
+          "input": [1, 28, 28], "input_shape": [1, 28, 28],
+          "params": [["a.w", [4, 3]], ["b.b", [4]]],
+          "state": [["bn.mean", [4]]],
+          "init_ckpt": "m1_init.bmxc",
+          "train": {"file": "m1_train_b64.hlo.txt", "batch": 64},
+          "infer": [{"file": "m1_infer_b1.hlo.txt", "batch": 1},
+                    {"file": "m1_infer_b8.hlo.txt", "batch": 8}]
+        }
+      },
+      "kernels": {"k": {"file": "k.hlo.txt", "m": 4}}
+    }"#;
+
+    fn sample_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::load(sample_dir()).unwrap();
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.arch, "lenet");
+        assert_eq!(e.params.len(), 2);
+        assert_eq!(e.params[0].name, "a.w");
+        assert_eq!(e.params[0].numel(), 12);
+        assert_eq!(e.state[0].shape, vec![4]);
+        assert_eq!(e.train_batch, 64);
+        assert_eq!(e.infer.len(), 2);
+        assert_eq!(m.kernels["k"].0, "k.hlo.txt");
+    }
+
+    #[test]
+    fn infer_batch_selection() {
+        let m = Manifest::load(sample_dir()).unwrap();
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.infer_for_batch(8).unwrap().file, "m1_infer_b8.hlo.txt");
+        assert!(e.infer_for_batch(2).is_none());
+        assert_eq!(e.infer_at_least(2).unwrap().batch, 8);
+        assert_eq!(e.infer_at_least(1).unwrap().batch, 1);
+        assert!(e.infer_at_least(9).is_none());
+    }
+
+    #[test]
+    fn bmx_meta_roundtrips_through_json() {
+        let m = Manifest::load(sample_dir()).unwrap();
+        let meta = m.model("m1").unwrap().bmx_meta();
+        let v = json::parse(&meta).unwrap();
+        assert_eq!(v.get("arch").unwrap().as_str(), Some("lenet"));
+        assert_eq!(v.get("binary"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::load(sample_dir()).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

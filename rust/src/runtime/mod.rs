@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! The interchange format is **HLO text** (never serialized protos — jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns them).  One [`Runtime`] wraps the PJRT CPU
+//! client; [`Executable`]s are compiled once and cached by artifact path.
+//!
+//! * [`manifest`] — typed view over `artifacts/manifest.json`.
+//! * [`client`] — the client/executable wrappers + Literal glue.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{InferEntry, Manifest, ModelEntry, TensorSpec};

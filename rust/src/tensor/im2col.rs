@@ -1,0 +1,117 @@
+//! im2col: unfold NCHW convolution inputs into GEMM rows.
+//!
+//! Matches `jax.lax.conv_general_dilated_patches` with NCHW/OIHW numbers:
+//! output row layout is `(n, ho, wo)` by `(c, kh, kw)`, so a weight tensor
+//! reshaped `(O, C*KH*KW)` multiplies it directly — the exact layout the
+//! L2 Pallas path uses, keeping the two engines bit-comparable.
+
+/// Output spatial size for a conv dimension.
+pub fn conv_output_size(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Unfold `x` (N, C, H, W) into a row-major matrix
+/// (N*Ho*Wo, C*KH*KW); zero padding of `pad` on each spatial side.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    assert_eq!(x.len(), n * c * h * w, "input length mismatch");
+    let ho = conv_output_size(h, kh, stride, pad);
+    let wo = conv_output_size(w, kw, stride, pad);
+    let k = c * kh * kw;
+    let rows = n * ho * wo;
+    let mut out = vec![0.0f32; rows * k];
+
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho) + oy) * wo + ox;
+                let base = row * k;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // zero padding: leave zeros
+                        }
+                        let src = ((ni * c + ci) * h + iy as usize) * w;
+                        let dst = base + (ci * kh + ky) * kw;
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out[dst + kx] = x[src + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, rows, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_size_formula() {
+        assert_eq!(conv_output_size(28, 5, 1, 0), 24);
+        assert_eq!(conv_output_size(32, 3, 1, 1), 32);
+        assert_eq!(conv_output_size(32, 3, 2, 1), 16);
+        assert_eq!(conv_output_size(8, 1, 1, 0), 8);
+    }
+
+    #[test]
+    fn identity_kernel_1x1() {
+        // 1x1 kernel, stride 1, no pad: im2col is a (N*H*W, C) reordering.
+        let x: Vec<f32> = (0..2 * 3 * 2 * 2).map(|i| i as f32).collect();
+        let (m, rows, k) = im2col(&x, 2, 3, 2, 2, 1, 1, 1, 0);
+        assert_eq!((rows, k), (8, 3));
+        // row for (n=0, y=0, x=0) = channels [0, 4, 8]
+        assert_eq!(&m[0..3], &[0.0, 4.0, 8.0]);
+        // row for (n=1, y=1, x=1) = last elements of each channel in img 1
+        assert_eq!(&m[7 * 3..8 * 3], &[15.0, 19.0, 23.0]);
+    }
+
+    #[test]
+    fn manual_3x3_valid() {
+        // 1 channel 4x4 image, 3x3 kernel VALID -> 2x2 output, 9-wide rows.
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let (m, rows, k) = im2col(&x, 1, 1, 4, 4, 3, 3, 1, 0);
+        assert_eq!((rows, k), (4, 9));
+        assert_eq!(&m[0..9], &[0., 1., 2., 4., 5., 6., 8., 9., 10.]);
+        assert_eq!(&m[3 * 9..4 * 9], &[5., 6., 7., 9., 10., 11., 13., 14., 15.]);
+    }
+
+    #[test]
+    fn padding_zeroes_border() {
+        let x = vec![1.0f32; 9]; // 1x1x3x3 of ones
+        let (m, rows, k) = im2col(&x, 1, 1, 3, 3, 3, 3, 1, 1);
+        assert_eq!((rows, k), (9, 9));
+        // top-left output: 4 in-bounds ones, 5 padded zeros
+        let first: f32 = m[0..9].iter().sum();
+        assert_eq!(first, 4.0);
+        // center output: fully in-bounds
+        let center: f32 = m[4 * 9..5 * 9].iter().sum();
+        assert_eq!(center, 9.0);
+    }
+
+    #[test]
+    fn stride_two() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let (m, rows, k) = im2col(&x, 1, 1, 4, 4, 2, 2, 2, 0);
+        assert_eq!((rows, k), (4, 4));
+        assert_eq!(&m[0..4], &[0., 1., 4., 5.]);
+        assert_eq!(&m[12..16], &[10., 11., 14., 15.]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal NCHW tensor substrate for the pure-Rust inference engine.
+//!
+//! Deliberately simple: contiguous `Vec<f32>` row-major storage plus the
+//! few structural ops the BMXNet layers need (im2col, padding, pooling
+//! windows).  All heavy math goes through [`crate::gemm`].
+
+mod im2col;
+
+pub use im2col::{conv_output_size, im2col};
+
+/// Dense f32 tensor, row-major, shape-checked at construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; panics if the element count mismatches.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {shape:?} needs {n} elements, got {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying; total element count must be preserved.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape;
+        self
+    }
+
+    /// Number of images in an NCHW batch (first dim).
+    pub fn batch(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Apply `f` elementwise in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Row-major index helper for 4-D tensors.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (_, cs, hs, ws) = (
+            self.shape[0],
+            self.shape[1],
+            self.shape[2],
+            self.shape[3],
+        );
+        self.data[((n * cs + c) * hs + h) * ws + w]
+    }
+
+    /// argmax over the last axis of a 2-D tensor -> one index per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2, "argmax_rows needs a 2-D tensor");
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        (0..rows)
+            .map(|r| {
+                let row = &self.data[r * cols..(r + 1) * cols];
+                // first occurrence wins on ties (matches jnp.argmax)
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate().skip(1) {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs 6 elements")]
+    fn new_panics_on_mismatch() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.reshape(vec![3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data()[5], 5.0);
+    }
+
+    #[test]
+    fn at4_row_major() {
+        let t = Tensor::new(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.at4(0, 1, 0, 1), 5.0);
+        assert_eq!(t.at4(0, 0, 1, 0), 2.0);
+    }
+
+    #[test]
+    fn argmax_rows_ties_take_first() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 3.0, 3.0, -1.0, -2.0, -0.5]);
+        assert_eq!(t.argmax_rows(), vec![1, 2]);
+    }
+
+    #[test]
+    fn map_inplace_applies() {
+        let mut t = Tensor::new(vec![2], vec![-1.0, 2.0]);
+        t.map_inplace(|v| v * 2.0);
+        assert_eq!(t.data(), &[-2.0, 4.0]);
+    }
+}

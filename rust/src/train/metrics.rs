@@ -1,0 +1,117 @@
+//! Training metrics log: per-step loss/accuracy/lr/wall-time plus eval
+//! points, with CSV export for EXPERIMENTS.md plots.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// One optimization step's metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub ms: f64,
+}
+
+/// Accumulated training log.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub steps: Vec<StepMetrics>,
+    pub evals: Vec<(usize, f64)>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn push_eval(&mut self, step: usize, acc: f64) {
+        self.evals.push((step, acc));
+    }
+
+    /// Mean loss over the first / last `n` steps (loss-decrease checks).
+    pub fn mean_loss_head(&self, n: usize) -> f32 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        let k = n.min(self.steps.len()).max(1);
+        self.steps[..k].iter().map(|m| m.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn mean_loss_tail(&self, n: usize) -> f32 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        let k = n.min(self.steps.len()).max(1);
+        let s = &self.steps[self.steps.len() - k..];
+        s.iter().map(|m| m.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|m| m.ms).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Write `step,loss,acc,lr,ms` rows plus `# eval` comment lines.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,acc,lr,ms")?;
+        for m in &self.steps {
+            writeln!(f, "{},{},{},{},{:.3}", m.step, m.loss, m.acc, m.lr, m.ms)?;
+        }
+        for (step, acc) in &self.evals {
+            writeln!(f, "# eval,{step},{acc}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log3() -> MetricsLog {
+        let mut l = MetricsLog::new();
+        for (i, loss) in [2.0f32, 1.0, 0.5].iter().enumerate() {
+            l.push(StepMetrics { step: i, loss: *loss, acc: 0.5, lr: 0.1, ms: 10.0 });
+        }
+        l
+    }
+
+    #[test]
+    fn head_tail_means() {
+        let l = log3();
+        assert_eq!(l.mean_loss_head(1), 2.0);
+        assert_eq!(l.mean_loss_tail(1), 0.5);
+        assert_eq!(l.mean_loss_head(2), 1.5);
+        assert!((l.mean_loss_tail(10) - 3.5 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut l = log3();
+        l.push_eval(3, 0.9);
+        let path = std::env::temp_dir().join(format!("metrics_{}.csv", std::process::id()));
+        l.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss,acc,lr,ms"));
+        assert!(text.contains("# eval,3,0.9"));
+        assert_eq!(text.lines().count(), 5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_log_safe() {
+        let l = MetricsLog::new();
+        assert_eq!(l.mean_step_ms(), 0.0);
+        assert_eq!(l.mean_loss_head(5), 0.0);
+    }
+}

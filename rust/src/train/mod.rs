@@ -1,0 +1,311 @@
+//! Training orchestrator: drives the AOT `train_step` artifacts through
+//! PJRT with host-side parameter state, LR scheduling, metrics and
+//! checkpointing.  This is the paper's "train with GPU/BLAS dots, deploy
+//! with xnor" pipeline (§2.2.2) with XLA-CPU standing in for CuDNN.
+
+pub mod metrics;
+
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::data::{Dataset, Kind};
+use crate::model::ckpt::Checkpoint;
+use crate::runtime::client::{
+    lit_f32, lit_i32, lit_scalar_f32, scalar_f32, to_f32_vec,
+};
+use crate::runtime::{Manifest, ModelEntry, Runtime};
+pub use metrics::{MetricsLog, StepMetrics};
+
+/// Training configuration (CLI-facing).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest model name (e.g. "lenet_bin").
+    pub model: String,
+    pub dataset: Kind,
+    pub steps: usize,
+    pub lr: f32,
+    /// Multiply lr by `lr_decay` every `lr_decay_steps` (0 = constant).
+    pub lr_decay_steps: usize,
+    pub lr_decay: f32,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Evaluate on the test split every N steps (0 = only at the end).
+    pub eval_every: usize,
+    pub out_ckpt: Option<PathBuf>,
+    pub metrics_csv: Option<PathBuf>,
+}
+
+impl TrainConfig {
+    pub fn quick(model: &str, dataset: Kind, steps: usize) -> Self {
+        Self {
+            model: model.to_string(),
+            dataset,
+            steps,
+            lr: 0.05,
+            lr_decay_steps: 0,
+            lr_decay: 0.5,
+            train_examples: 2048,
+            test_examples: 512,
+            seed: 42,
+            log_every: 10,
+            eval_every: 0,
+            out_ckpt: None,
+            metrics_csv: None,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub metrics: MetricsLog,
+    pub final_train_loss: f32,
+    pub final_eval_acc: f64,
+    pub steps_per_sec: f64,
+    /// Final flat params/state (manifest order) for conversion/eval.
+    pub params: Vec<Vec<f32>>,
+    pub state: Vec<Vec<f32>>,
+}
+
+/// Host-side mirror of the flat training state.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    manifest: &'rt Manifest,
+    pub entry: ModelEntry,
+    pub params: Vec<Vec<f32>>,
+    pub state: Vec<Vec<f32>>,
+    pub momentum: Vec<Vec<f32>>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Load the init checkpoint + train executable for a manifest model.
+    pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest, model: &str) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        let ck = Checkpoint::load(manifest.path(&entry.init_ckpt))?;
+        let mut params = Vec::with_capacity(entry.params.len());
+        for spec in &entry.params {
+            let (shape, data) = ck
+                .get_f32(&format!("params.{}", spec.name))
+                .with_context(|| format!("init ckpt missing params.{}", spec.name))?;
+            ensure!(shape == spec.shape.as_slice(), "shape mismatch for {}", spec.name);
+            params.push(data.to_vec());
+        }
+        let mut state = Vec::with_capacity(entry.state.len());
+        for spec in &entry.state {
+            let (_, data) = ck
+                .get_f32(&format!("state.{}", spec.name))
+                .with_context(|| format!("init ckpt missing state.{}", spec.name))?;
+            state.push(data.to_vec());
+        }
+        let momentum = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        Ok(Self { rt, manifest, entry, params, state, momentum })
+    }
+
+    /// Restore params/state from a trained checkpoint (momentum reset).
+    pub fn load_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        for (spec, slot) in self.entry.params.iter().zip(self.params.iter_mut()) {
+            let (_, data) = ck
+                .get_f32(&format!("params.{}", spec.name))
+                .with_context(|| format!("ckpt missing params.{}", spec.name))?;
+            *slot = data.to_vec();
+        }
+        for (spec, slot) in self.entry.state.iter().zip(self.state.iter_mut()) {
+            let (_, data) = ck
+                .get_f32(&format!("state.{}", spec.name))
+                .with_context(|| format!("ckpt missing state.{}", spec.name))?;
+            *slot = data.to_vec();
+        }
+        for m in &mut self.momentum {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+        Ok(())
+    }
+
+    /// Flat params+state as a BMXC checkpoint.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        for (spec, data) in self.entry.params.iter().zip(&self.params) {
+            ck.push_f32(&format!("params.{}", spec.name), spec.shape.clone(), data.clone());
+        }
+        for (spec, data) in self.entry.state.iter().zip(&self.state) {
+            ck.push_f32(&format!("state.{}", spec.name), spec.shape.clone(), data.clone());
+        }
+        ck
+    }
+
+    /// Run one train step; returns (loss, accuracy).
+    pub fn step(
+        &mut self,
+        exe: &crate::runtime::Executable,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let b = self.entry.train_batch;
+        let mut dims = vec![b];
+        dims.extend(&self.entry.input_shape);
+        let mut inputs = Vec::with_capacity(
+            self.params.len() + self.state.len() + self.momentum.len() + 3,
+        );
+        for (spec, data) in self.entry.params.iter().zip(&self.params) {
+            inputs.push(lit_f32(data, &spec.shape)?);
+        }
+        for (spec, data) in self.entry.state.iter().zip(&self.state) {
+            inputs.push(lit_f32(data, &spec.shape)?);
+        }
+        for (spec, data) in self.entry.params.iter().zip(&self.momentum) {
+            inputs.push(lit_f32(data, &spec.shape)?);
+        }
+        inputs.push(lit_f32(images, &dims)?);
+        inputs.push(lit_i32(labels, &[b])?);
+        inputs.push(lit_scalar_f32(lr));
+
+        let out = exe.run(&inputs)?;
+        let n_p = self.params.len();
+        let n_s = self.state.len();
+        ensure!(out.len() == 2 * n_p + n_s + 2, "train_step output arity {}", out.len());
+        for (slot, lit) in self.params.iter_mut().zip(&out[..n_p]) {
+            *slot = to_f32_vec(lit)?;
+        }
+        for (slot, lit) in self.state.iter_mut().zip(&out[n_p..n_p + n_s]) {
+            *slot = to_f32_vec(lit)?;
+        }
+        for (slot, lit) in self.momentum.iter_mut().zip(&out[n_p + n_s..2 * n_p + n_s]) {
+            *slot = to_f32_vec(lit)?;
+        }
+        let loss = scalar_f32(&out[2 * n_p + n_s])?;
+        let acc = scalar_f32(&out[2 * n_p + n_s + 1])?;
+        Ok((loss, acc))
+    }
+
+    /// Evaluate top-1 accuracy with a PJRT inference artifact.
+    pub fn evaluate(&self, dataset: &Dataset) -> Result<f64> {
+        let entry = self
+            .entry
+            .infer
+            .iter()
+            .max_by_key(|e| e.batch)
+            .context("model has no inference artifacts")?;
+        let exe = self.rt.load_cached(self.manifest.path(&entry.file))?;
+        let b = entry.batch;
+        let per: usize = self.entry.input_shape.iter().product();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n_batches = dataset.len().div_ceil(b);
+        for bi in 0..n_batches {
+            let idx: Vec<usize> = (bi * b..(bi + 1) * b).collect();
+            let batch = dataset.gather(&idx);
+            let mut inputs = Vec::new();
+            for (spec, data) in self.entry.params.iter().zip(&self.params) {
+                inputs.push(lit_f32(data, &spec.shape)?);
+            }
+            for (spec, data) in self.entry.state.iter().zip(&self.state) {
+                inputs.push(lit_f32(data, &spec.shape)?);
+            }
+            let mut dims = vec![b];
+            dims.extend(&self.entry.input_shape);
+            inputs.push(lit_f32(&batch.images, &dims)?);
+            let out = exe.run(&inputs)?;
+            let logits = to_f32_vec(&out[0])?;
+            let classes = logits.len() / b;
+            // only the first `valid` rows are real examples (rest wrapped)
+            let valid = (dataset.len() - bi * b).min(b);
+            for r in 0..valid {
+                let row = &logits[r * classes..(r + 1) * classes];
+                // first occurrence wins on ties (matches jnp.argmax)
+                let mut pred = 0usize;
+                for (i, &v) in row.iter().enumerate().skip(1) {
+                    if v > row[pred] {
+                        pred = i;
+                    }
+                }
+                if pred == batch.labels[r] as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+            let _ = per;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+/// Full training run per the config; the end-to-end driver calls this.
+pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<TrainReport> {
+    let mut trainer = Trainer::new(rt, manifest, &cfg.model)?;
+    let exe = rt.load_cached(manifest.path(&trainer.entry.train_file))?;
+    let all = cfg.dataset.generate(cfg.train_examples + cfg.test_examples, cfg.seed);
+    let frac = cfg.test_examples as f32 / (cfg.train_examples + cfg.test_examples) as f32;
+    let (train_set, test_set) = all.split(frac);
+    let b = trainer.entry.train_batch;
+
+    let mut metrics = MetricsLog::new();
+    let mut last_loss = f32::NAN;
+    let start = Instant::now();
+    let mut step_idx = 0usize;
+    'outer: for epoch in 0.. {
+        for batch in train_set.epoch(b, cfg.seed.wrapping_add(epoch)) {
+            if step_idx >= cfg.steps {
+                break 'outer;
+            }
+            let lr = if cfg.lr_decay_steps > 0 {
+                cfg.lr * cfg.lr_decay.powi((step_idx / cfg.lr_decay_steps) as i32)
+            } else {
+                cfg.lr
+            };
+            let t0 = Instant::now();
+            let (loss, acc) = trainer.step(&exe, &batch.images, &batch.labels, lr)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            last_loss = loss;
+            metrics.push(StepMetrics { step: step_idx, loss, acc, lr, ms });
+            if cfg.log_every > 0 && step_idx % cfg.log_every == 0 {
+                println!(
+                    "step {step_idx:>5}  loss {loss:.4}  batch-acc {acc:.3}  lr {lr:.4}  {ms:.0}ms"
+                );
+            }
+            if cfg.eval_every > 0 && step_idx > 0 && step_idx % cfg.eval_every == 0 {
+                let acc = trainer.evaluate(&test_set)?;
+                println!("step {step_idx:>5}  EVAL acc {acc:.4}");
+                metrics.push_eval(step_idx, acc);
+            }
+            step_idx += 1;
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let final_eval_acc = trainer.evaluate(&test_set)?;
+    metrics.push_eval(step_idx, final_eval_acc);
+
+    if let Some(path) = &cfg.out_ckpt {
+        trainer.to_checkpoint().save(path)?;
+        println!("checkpoint -> {path:?}");
+    }
+    if let Some(path) = &cfg.metrics_csv {
+        metrics.write_csv(path)?;
+    }
+    Ok(TrainReport {
+        final_train_loss: last_loss,
+        final_eval_acc,
+        steps_per_sec: step_idx as f64 / wall.max(1e-9),
+        params: trainer.params.clone(),
+        state: trainer.state.clone(),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_config_sane() {
+        let cfg = TrainConfig::quick("lenet_bin", Kind::Digits, 100);
+        assert_eq!(cfg.steps, 100);
+        assert!(cfg.lr > 0.0);
+        assert!(cfg.train_examples > cfg.test_examples);
+    }
+
+    // PJRT-backed trainer tests live in rust/tests/runtime_integration.rs.
+}

@@ -1,0 +1,116 @@
+//! Model converter integration (paper §2.2.3): convert the real init
+//! checkpoints, verify bit-exactness, file roundtrips and the size
+//! accounting against the inventory predictions.
+
+use repro::model::bmx::{convert, BmxModel};
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory::{self, Stem};
+use repro::quant::sign_binarize;
+use repro::runtime::Manifest;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(repro::ARTIFACTS_DIR) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn lenet_bin_conversion_bit_exact_and_compresses() {
+    let Some(man) = manifest() else { return };
+    let entry = man.model("lenet_bin").unwrap();
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let names = inventory::lenet(true).binary_names();
+    let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+
+    // every packed bit equals the sign of the original f32 weight
+    for name in &names {
+        let (_, packed) = bmx.get_packed(name).unwrap();
+        let (_, orig) = ck.get_f32(&format!("params.{name}")).unwrap();
+        let unpacked = packed.unpack();
+        assert_eq!(unpacked.len(), orig.len(), "{name}");
+        for (u, o) in unpacked.iter().zip(orig) {
+            assert_eq!(*u, sign_binarize(*o), "{name}");
+        }
+    }
+
+    // size accounting matches the inventory prediction exactly
+    let inv = inventory::lenet(true);
+    assert_eq!(bmx.payload_bytes(), inv.bmx_bytes(), "payload bytes");
+    let fp_bytes: usize = ck
+        .tensors
+        .iter()
+        .map(|(_, s, _)| 4 * s.iter().product::<usize>())
+        .sum();
+    assert_eq!(fp_bytes, inv.fp32_bytes(), "fp bytes");
+    let ratio = fp_bytes as f64 / bmx.payload_bytes() as f64;
+    assert!(ratio > 3.0, "LeNet compression only {ratio:.1}x");
+}
+
+#[test]
+fn bmx_file_roundtrip_preserves_everything() {
+    let Some(man) = manifest() else { return };
+    let entry = man.model("lenet_bin").unwrap();
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let names = inventory::lenet(true).binary_names();
+    let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+
+    let path = std::env::temp_dir().join(format!("it_lenet_{}.bmx", std::process::id()));
+    bmx.save(&path).unwrap();
+    let back = BmxModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.meta, bmx.meta);
+    assert_eq!(back.tensors.len(), bmx.tensors.len());
+    for ((n1, t1), (n2, t2)) in bmx.tensors.iter().zip(&back.tensors) {
+        assert_eq!(n1, n2);
+        assert_eq!(t1.shape(), t2.shape());
+        assert_eq!(t1.payload_bytes(), t2.payload_bytes());
+    }
+    let (_, p1) = bmx.get_packed("fc1.w").unwrap();
+    let (_, p2) = back.get_packed("fc1.w").unwrap();
+    assert_eq!(p1.words, p2.words);
+}
+
+#[test]
+fn resnet_mini_partial_conversions_order_by_size() {
+    let Some(man) = manifest() else { return };
+    // Table 2 ordering on the *trained-size* axis, via the real artifacts
+    let configs = ["none", "fp1", "fp2", "fp3", "fp4", "fp12", "all"];
+    let mut sizes = Vec::new();
+    for cfg in configs {
+        let name = format!("resnet_mini_img_{cfg}");
+        let entry = man.model(&name).unwrap();
+        let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+        let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap();
+        let names = inventory::resnet18(width, entry.classes, Stem::Cifar, &entry.fp_stages())
+            .binary_names();
+        let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+        sizes.push(bmx.payload_bytes());
+    }
+    // none < fp1 < fp2 < fp3 < fp4 < all ; fp12 between fp2 and fp4
+    assert!(sizes[0] < sizes[1], "{sizes:?}");
+    assert!(sizes[1] < sizes[2], "{sizes:?}");
+    assert!(sizes[2] < sizes[3], "{sizes:?}");
+    assert!(sizes[3] < sizes[4], "{sizes:?}");
+    assert!(sizes[4] < sizes[6], "{sizes:?}");
+    assert!(sizes[5] > sizes[2] && sizes[5] < sizes[4], "{sizes:?}");
+}
+
+#[test]
+fn resnet18_real_inventory_reproduces_paper_sizes() {
+    // Table 1: 44.7 MB -> 1.5 MB (29x); Table 2: 3.6 .. 47 MB — exact
+    // accounting, no artifacts needed (pure inventory).
+    const MB: f64 = 1024.0 * 1024.0;
+    let fp = inventory::resnet18(64, 10, Stem::Cifar, &[1, 2, 3, 4]);
+    let bin = inventory::resnet18(64, 10, Stem::Cifar, &[]);
+    let fp_mb = fp.fp32_bytes() as f64 / MB;
+    let bin_mb = bin.bmx_bytes() as f64 / MB;
+    assert!((40.0..47.0).contains(&fp_mb), "cifar fp {fp_mb:.1} MB");
+    assert!((1.0..2.2).contains(&bin_mb), "cifar binary {bin_mb:.1} MB");
+    let ratio = fp.fp32_bytes() as f64 / bin.bmx_bytes() as f64;
+    assert!((20.0..32.0).contains(&ratio), "compression {ratio:.1}x (paper: 29x)");
+}

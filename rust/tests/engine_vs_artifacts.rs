@@ -1,0 +1,243 @@
+//! The paper's central equivalence (§2.2.2): the Rust xnor inference
+//! engine must produce the same logits as the float-dot AOT graphs, for
+//! LeNet and for (partially binarized) ResNet-18 — and the Pallas-composed
+//! inference artifact must agree with both.
+
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::nn::Engine;
+use repro::runtime::client::{lit_f32, to_f32_vec};
+use repro::runtime::{Manifest, ModelEntry, Runtime};
+use repro::tensor::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(repro::ARTIFACTS_DIR) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e:#}");
+            None
+        }
+    }
+}
+
+/// Binary weight names for a model entry (mirrors the CLI's logic).
+fn binary_names(entry: &ModelEntry) -> Vec<String> {
+    use repro::model::inventory::{self, Stem};
+    match entry.arch.as_str() {
+        "lenet" => {
+            if matches!(entry.raw.get("binary"), Some(repro::model::json::Value::Bool(true))) {
+                inventory::lenet(true).binary_names()
+            } else {
+                vec![]
+            }
+        }
+        "resnet18" => {
+            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap_or(64);
+            inventory::resnet18(width, entry.classes, Stem::Cifar, &entry.fp_stages())
+                .binary_names()
+        }
+        _ => vec![],
+    }
+}
+
+/// Run a PJRT inference artifact on a batch with the init-ckpt params.
+fn pjrt_logits(
+    rt: &Runtime,
+    man: &Manifest,
+    entry: &ModelEntry,
+    file: &str,
+    batch: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let exe = rt.load_cached(man.path(file)).unwrap();
+    let mut inputs = Vec::new();
+    for spec in &entry.params {
+        let (_, data) = ck.get_f32(&format!("params.{}", spec.name)).unwrap();
+        inputs.push(lit_f32(data, &spec.shape).unwrap());
+    }
+    for spec in &entry.state {
+        let (_, data) = ck.get_f32(&format!("state.{}", spec.name)).unwrap();
+        inputs.push(lit_f32(data, &spec.shape).unwrap());
+    }
+    let mut dims = vec![batch];
+    dims.extend(&entry.input_shape);
+    inputs.push(lit_f32(x, &dims).unwrap());
+    let out = exe.run(&inputs).unwrap();
+    to_f32_vec(&out[0]).unwrap()
+}
+
+/// Build the Rust engine from the same init checkpoint.
+fn rust_engine(man: &Manifest, entry: &ModelEntry) -> Engine {
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let bmx = convert(&ck, &binary_names(entry), &entry.bmx_meta()).unwrap();
+    Engine::from_bmx(&bmx).unwrap()
+}
+
+fn test_batch(entry: &ModelEntry, batch: usize, seed: u64) -> Vec<f32> {
+    let per: usize = entry.input_shape.iter().product();
+    let mut rng = repro::data::Rng::new(seed);
+    (0..batch * per).map(|_| rng.normal() * 0.5).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}: logit {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn lenet_bin_engine_matches_pjrt_infer() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = man.model("lenet_bin").unwrap();
+    let batch = 8;
+    let x = test_batch(entry, batch, 31);
+    let inf = entry.infer_for_batch(batch).unwrap();
+    let expect = pjrt_logits(&rt, &man, entry, &inf.file, batch, &x);
+
+    let engine = rust_engine(&man, entry);
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    assert_close(got.data(), &expect, 2e-4, "lenet_bin rust-engine vs PJRT");
+}
+
+#[test]
+fn lenet_bin_pallas_artifact_matches_engine_and_plain() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = man.model("lenet_bin").unwrap();
+    let pallas = entry.infer_pallas.as_ref().expect("pallas artifact missing");
+    let batch = pallas.batch;
+    let x = test_batch(entry, batch, 77);
+
+    let plain = pjrt_logits(
+        &rt,
+        &man,
+        entry,
+        &entry.infer_for_batch(batch).unwrap().file,
+        batch,
+        &x,
+    );
+    let via_pallas = pjrt_logits(&rt, &man, entry, &pallas.file, batch, &x);
+    assert_close(&via_pallas, &plain, 2e-4, "pallas-composed vs plain HLO");
+
+    let engine = rust_engine(&man, entry);
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    assert_close(got.data(), &via_pallas, 2e-4, "rust engine vs pallas artifact");
+}
+
+#[test]
+fn lenet_fp_engine_matches_pjrt_infer() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = man.model("lenet_fp").unwrap();
+    let batch = entry.infer[0].batch;
+    let x = test_batch(entry, batch, 13);
+    let expect = pjrt_logits(&rt, &man, entry, &entry.infer[0].file, batch, &x);
+    let engine = rust_engine(&man, entry);
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    // fp path has more float accumulation divergence than the binary path
+    assert_close(got.data(), &expect, 1e-3, "lenet_fp rust-engine vs PJRT");
+}
+
+#[test]
+fn lenet_q2_kbit_engine_matches_pjrt_infer() {
+    // paper §2.1: act_bit = 2 — quantized f32 weights, standard dots.
+    let Some(man) = manifest() else { return };
+    let Ok(entry) = man.model("lenet_q2") else {
+        eprintln!("SKIP (lenet_q2 artifacts not built)");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let batch = entry.infer[0].batch;
+    let x = test_batch(entry, batch, 41);
+    let expect = pjrt_logits(&rt, &man, entry, &entry.infer[0].file, batch, &x);
+
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let names = repro::model::inventory::lenet(true).binary_names();
+    let bmx =
+        repro::model::bmx::convert_kbit(&ck, &names, entry.act_bit(), &entry.bmx_meta())
+            .unwrap();
+    let engine = Engine::from_bmx(&bmx).unwrap();
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    assert_close(got.data(), &expect, 1e-3, "lenet_q2 rust-engine vs PJRT");
+}
+
+#[test]
+fn resnet_mini_bin_engine_matches_pjrt_infer() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = man.model("resnet_mini_bin").unwrap();
+    let batch = entry.infer[0].batch;
+    let x = test_batch(entry, batch, 99);
+    let expect = pjrt_logits(&rt, &man, entry, &entry.infer[0].file, batch, &x);
+    let engine = rust_engine(&man, entry);
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    assert_close(got.data(), &expect, 1e-3, "resnet_mini_bin vs PJRT");
+}
+
+#[test]
+fn resnet_mini_partial_engine_matches_pjrt_infer() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    // fp12: stages 1-2 full precision, 3-4 binary — exercises both paths
+    let entry = man.model("resnet_mini_img_fp12").unwrap();
+    let batch = entry.infer[0].batch;
+    let x = test_batch(entry, batch, 55);
+    let expect = pjrt_logits(&rt, &man, entry, &entry.infer[0].file, batch, &x);
+    let engine = rust_engine(&man, entry);
+    let t = Tensor::new(
+        {
+            let mut d = vec![batch];
+            d.extend(&entry.input_shape);
+            d
+        },
+        x,
+    );
+    let got = engine.forward(&t).unwrap();
+    assert_close(got.data(), &expect, 1e-3, "resnet_mini_img_fp12 vs PJRT");
+}

@@ -1,0 +1,226 @@
+//! Property-based tests (hand-rolled; the proptest crate is unavailable
+//! offline).  Each property runs over a few hundred randomized cases from
+//! a seeded splitmix64 generator, with the failing seed printed on panic.
+
+use repro::coordinator::BatchPolicy;
+use repro::data::Rng;
+use repro::gemm::{binary_gemm_f32, naive, Method, PackedMatrix, Side};
+use repro::model::ckpt::Checkpoint;
+use repro::model::json;
+use repro::quant::{dot_to_xnor, quantize_k, sign_binarize, xnor_to_dot};
+use std::time::{Duration, Instant};
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, Rng)> {
+    (0..n as u64).map(|seed| (seed, Rng::new(seed * 7919 + 13)))
+}
+
+// ---------------------------------------------------------------------------
+// GEMM family equivalence  (the paper's Eq. 2 contract, ∀ shapes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_gemm_variants_agree() {
+    for (seed, mut rng) in cases(150) {
+        let m = 1 + rng.below(12);
+        let n = 1 + rng.below(20);
+        let k = 1 + rng.below(300);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let ab: Vec<f32> = a.iter().map(|&x| sign_binarize(x)).collect();
+        let bb: Vec<f32> = b.iter().map(|&x| sign_binarize(x)).collect();
+        let expect = naive::gemm_f32(&ab, &bb, m, n, k);
+        for method in Method::all() {
+            let got = binary_gemm_f32(*method, &a, &b, m, n, k);
+            assert_eq!(got, expect, "seed={seed} method={method:?} m={m} n={n} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_xnor_popcount_in_range_and_parity() {
+    // pop in [0, k]; dot = 2*pop - k has the same parity as k
+    for (seed, mut rng) in cases(100) {
+        let m = 1 + rng.below(6);
+        let n = 1 + rng.below(6);
+        let k = 1 + rng.below(200);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+        let pb = PackedMatrix::pack_cols(&b, k, n);
+        for pop in repro::gemm::xnor_gemm_prepacked(Method::Xnor64, &pa, &pb) {
+            assert!((0..=k as i32).contains(&pop), "seed={seed} pop={pop} k={k}");
+            let dot = xnor_to_dot(pop, k) as i64;
+            assert_eq!((dot + k as i64) % 2, 0, "seed={seed} parity");
+        }
+    }
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for (seed, mut rng) in cases(200) {
+        let rows = 1 + rng.below(8);
+        let k = 1 + rng.below(260);
+        let data: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+        let side = if rng.below(2) == 0 { Side::A } else { Side::B };
+        let p = PackedMatrix::pack_rows(&data, rows, k, side);
+        let back = p.unpack();
+        for (u, o) in back.iter().zip(&data) {
+            assert_eq!(*u, sign_binarize(*o), "seed={seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eq. 1 / Eq. 2 quantization properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantize_idempotent_monotone_bounded() {
+    for (seed, mut rng) in cases(200) {
+        let k = 1 + rng.below(31) as u32;
+        let x1 = rng.uniform();
+        let x2 = rng.uniform();
+        let (lo, hi) = if x1 <= x2 { (x1, x2) } else { (x2, x1) };
+        let (qlo, qhi) = (quantize_k(lo, k), quantize_k(hi, k));
+        assert!(qlo <= qhi, "seed={seed} monotonicity k={k}");
+        assert!((0.0..=1.0).contains(&qlo), "seed={seed} bounds");
+        assert_eq!(quantize_k(qlo, k), qlo, "seed={seed} idempotence");
+        // quantization error bounded by half a level
+        let levels = ((1u64 << k) - 1) as f32;
+        assert!((qlo - lo).abs() <= 0.5 / levels + 1e-6, "seed={seed} error bound");
+    }
+}
+
+#[test]
+fn prop_eq2_maps_are_inverse_bijections() {
+    for (seed, mut rng) in cases(300) {
+        let n = 1 + rng.below(20_000);
+        let matches = rng.below(n + 1);
+        let dot = (2 * matches) as f32 - n as f32;
+        let pop = dot_to_xnor(dot, n);
+        assert_eq!(pop, matches as f32, "seed={seed}");
+        assert_eq!(xnor_to_dot(matches as i32, n), dot, "seed={seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint + JSON formats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ckpt_roundtrip_random_tensors() {
+    for (seed, mut rng) in cases(60) {
+        let mut ck = Checkpoint::new();
+        let count = 1 + rng.below(6);
+        for t in 0..count {
+            let ndim = rng.below(4);
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5)).collect();
+            let n: usize = shape.iter().product();
+            if rng.below(2) == 0 {
+                ck.push_f32(
+                    &format!("t{t}.x"),
+                    shape,
+                    (0..n).map(|_| rng.normal()).collect(),
+                );
+            } else {
+                ck.push_u32(
+                    &format!("t{t}.x"),
+                    shape,
+                    (0..n).map(|_| rng.next_u64() as u32).collect(),
+                );
+            }
+        }
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.len(), ck.len(), "seed={seed}");
+        for ((n1, s1, d1), (n2, s2, d2)) in ck.tensors.iter().zip(&back.tensors) {
+            assert_eq!(n1, n2, "seed={seed}");
+            assert_eq!(s1, s2, "seed={seed}");
+            assert_eq!(d1, d2, "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_parses_generated_numbers() {
+    for (seed, mut rng) in cases(300) {
+        let v = (rng.normal() as f64) * 10f64.powi(rng.below(7) as i32 - 3);
+        let text = format!("{v}");
+        let parsed = json::parse(&text).unwrap_or_else(|e| panic!("seed={seed} {text}: {e}"));
+        let got = parsed.as_f64().unwrap();
+        assert!(
+            (got - v).abs() <= 1e-9 * v.abs().max(1.0),
+            "seed={seed}: {text} -> {got}"
+        );
+    }
+}
+
+#[test]
+fn prop_json_string_escaping_roundtrip() {
+    for (seed, mut rng) in cases(100) {
+        let len = rng.below(20);
+        let s: String = (0..len)
+            .map(|_| {
+                let c = rng.below(96) as u8 + 32;
+                c as char
+            })
+            .collect();
+        let escaped = s.replace('\\', "\\\\").replace('"', "\\\"");
+        let parsed = json::parse(&format!("\"{escaped}\""))
+            .unwrap_or_else(|e| panic!("seed={seed} {escaped:?}: {e}"));
+        assert_eq!(parsed.as_str(), Some(s.as_str()), "seed={seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batching policy invariants (routing/batching/state per DESIGN.md)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_policy_never_exceeds_max_and_never_starves() {
+    let t0 = Instant::now();
+    for (seed, mut rng) in cases(200) {
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(64),
+            window: Duration::from_micros(1 + rng.below(5000) as u64),
+        };
+        let queued = rng.below(200);
+        let age = Duration::from_micros(rng.below(10_000) as u64);
+        let now = t0 + age;
+        let dispatch = policy.should_dispatch(queued, t0, now);
+        if queued >= policy.max_batch {
+            assert!(dispatch, "seed={seed}: full batch must dispatch");
+        }
+        if age >= policy.window && queued > 0 {
+            assert!(dispatch, "seed={seed}: expired window must dispatch (no starvation)");
+        }
+        if !dispatch {
+            assert!(
+                queued < policy.max_batch && age < policy.window,
+                "seed={seed}: held batch must be under both limits"
+            );
+        }
+        // remaining() is consistent with should_dispatch on the time axis
+        if policy.remaining(t0, now) == Duration::ZERO && queued > 0 {
+            assert!(dispatch, "seed={seed}: zero budget but no dispatch");
+        }
+    }
+}
+
+#[test]
+fn prop_dataset_epochs_partition_examples() {
+    for (seed, mut rng) in cases(40) {
+        let n = 4 + rng.below(60);
+        let batch = 1 + rng.below(8);
+        let ds = repro::data::Kind::Digits.generate(n, seed);
+        let epochs = ds.epoch(batch, seed);
+        // every batch full-sized; total coverage >= n
+        let mut count = 0;
+        for b in &epochs {
+            assert_eq!(b.labels.len(), batch, "seed={seed}");
+            count += batch;
+        }
+        assert!(count >= n, "seed={seed}");
+        assert!(count < n + batch, "seed={seed}: over-padded");
+        let _ = rng.next_u64();
+    }
+}

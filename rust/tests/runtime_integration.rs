@@ -1,0 +1,182 @@
+//! PJRT runtime integration: load every artifact kind, execute, and check
+//! numerics against the Rust substrates.  Requires `make artifacts`.
+
+use repro::data::Rng;
+use repro::gemm::{PackedMatrix, Side};
+use repro::runtime::client::{lit_f32, lit_u32, scalar_f32, to_f32_vec, to_i32_vec};
+use repro::runtime::{Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(repro::ARTIFACTS_DIR) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_xnor_gemm_artifact_matches_rust_gemm() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (file, entry) = &man.kernels["xnor_gemm"];
+    let (m, n, w) = (
+        entry.get("m").and_then(|v| v.as_usize()).unwrap(),
+        entry.get("n").and_then(|v| v.as_usize()).unwrap(),
+        entry.get("words").and_then(|v| v.as_usize()).unwrap(),
+    );
+    let exe = rt.load_hlo_text(man.path(file)).unwrap();
+
+    let mut rng = Rng::new(3);
+    let aw: Vec<u32> = (0..m * w).map(|_| rng.next_u64() as u32).collect();
+    let bw: Vec<u32> = (0..n * w).map(|_| rng.next_u64() as u32).collect();
+    let out = exe
+        .run(&[lit_u32(&aw, &[m, w]).unwrap(), lit_u32(&bw, &[n, w]).unwrap()])
+        .unwrap();
+    let pjrt_pops = to_i32_vec(&out[0]).unwrap();
+
+    // direct popcount reference over the same u32 words
+    let mut expect = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0u32;
+            for k in 0..w {
+                acc += (!(aw[i * w + k] ^ bw[j * w + k])).count_ones();
+            }
+            expect[i * n + j] = acc as i32;
+        }
+    }
+    assert_eq!(pjrt_pops, expect, "Pallas xnor GEMM != Rust popcount");
+}
+
+#[test]
+fn kernel_pack_artifact_matches_rust_pack() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (file, entry) = &man.kernels["pack"];
+    let (m, k) = (
+        entry.get("m").and_then(|v| v.as_usize()).unwrap(),
+        entry.get("k").and_then(|v| v.as_usize()).unwrap(),
+    );
+    let exe = rt.load_hlo_text(man.path(file)).unwrap();
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let out = exe.run(&[lit_f32(&x, &[m, k]).unwrap()]).unwrap();
+    let packed: Vec<u32> = out[0].to_vec::<u32>().unwrap();
+
+    // Rust pack (u64 words) -> u32 lanes, same LSB-first convention.
+    let p = PackedMatrix::pack_rows(&x, m, k, Side::B);
+    let rust_u32 = p.words_u32();
+    let lanes = k / 32;
+    for r in 0..m {
+        for l in 0..lanes {
+            assert_eq!(
+                packed[r * lanes + l],
+                rust_u32[r * p.words_per_row * 2 + l],
+                "row {r} lane {l}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_quantize_artifact_matches_rust_quant() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (file, entry) = &man.kernels["quantize_k4"];
+    let (m, n) = (
+        entry.get("m").and_then(|v| v.as_usize()).unwrap(),
+        entry.get("n").and_then(|v| v.as_usize()).unwrap(),
+    );
+    let exe = rt.load_hlo_text(man.path(file)).unwrap();
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+    let out = exe.run(&[lit_f32(&x, &[m, n]).unwrap()]).unwrap();
+    let got = to_f32_vec(&out[0]).unwrap();
+    for (g, x) in got.iter().zip(&x) {
+        let expect = repro::quant::clip_quantize(*x, 4);
+        assert!((g - expect).abs() < 1e-6, "{x} -> {g} vs {expect}");
+    }
+}
+
+#[test]
+fn lenet_train_step_decreases_loss() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = repro::train::Trainer::new(&rt, &man, "lenet_bin").unwrap();
+    let exe = rt.load_cached(man.path(&trainer.entry.train_file)).unwrap();
+    let b = trainer.entry.train_batch;
+    let ds = repro::data::Kind::Digits.generate(b * 4, 5);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 0..12 {
+        let batch =
+            ds.gather(&(0..b).map(|i| (step * 7 + i) % ds.len()).collect::<Vec<_>>());
+        let (loss, _acc) = trainer.step(&exe, &batch.images, &batch.labels, 0.05).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(last < first.unwrap(), "loss did not decrease: {first:?} -> {last}");
+}
+
+#[test]
+fn lenet_infer_artifacts_consistent_across_batch_sizes() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = repro::train::Trainer::new(&rt, &man, "lenet_bin").unwrap();
+    let entry = &trainer.entry;
+    let per: usize = entry.input_shape.iter().product();
+    let mut rng = Rng::new(21);
+    let img: Vec<f32> = (0..per).map(|_| rng.normal() * 0.3).collect();
+
+    let mut logits_by_batch = Vec::new();
+    for inf in &entry.infer {
+        let exe = rt.load_cached(man.path(&inf.file)).unwrap();
+        let mut inputs = Vec::new();
+        for (spec, data) in entry.params.iter().zip(&trainer.params) {
+            inputs.push(lit_f32(data, &spec.shape).unwrap());
+        }
+        for (spec, data) in entry.state.iter().zip(&trainer.state) {
+            inputs.push(lit_f32(data, &spec.shape).unwrap());
+        }
+        let mut x = Vec::with_capacity(inf.batch * per);
+        for _ in 0..inf.batch {
+            x.extend_from_slice(&img);
+        }
+        let mut dims = vec![inf.batch];
+        dims.extend(&entry.input_shape);
+        inputs.push(lit_f32(&x, &dims).unwrap());
+        let out = exe.run(&inputs).unwrap();
+        let logits = to_f32_vec(&out[0]).unwrap();
+        logits_by_batch.push((inf.batch, logits[..entry.classes].to_vec()));
+    }
+    let (b0, base) = &logits_by_batch[0];
+    for (b, logits) in &logits_by_batch[1..] {
+        for (l, r) in base.iter().zip(logits) {
+            assert!(
+                (l - r).abs() < 1e-4,
+                "logits differ between batch {b0} and {b}: {l} vs {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = man.model("lenet_bin").unwrap();
+    let p = man.path(&entry.infer[0].file);
+    let a = rt.load_cached(&p).unwrap();
+    let b = rt.load_cached(&p).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "cache miss on identical path");
+}
+
+#[test]
+fn scalar_lr_literal_roundtrip() {
+    // guards the lr input convention of train_step
+    let l = repro::runtime::client::lit_scalar_f32(0.025);
+    assert_eq!(scalar_f32(&l).unwrap(), 0.025);
+}

@@ -1,0 +1,124 @@
+//! Serving integration: the coordinator over the real binary engine,
+//! under concurrent load, answers exactly what the engine answers directly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::coordinator::{BatchPolicy, Server, ServerConfig};
+use repro::data::Kind;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::Manifest;
+
+fn engine() -> Option<Arc<Engine>> {
+    let man = match Manifest::load(repro::ARTIFACTS_DIR) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e:#}");
+            return None;
+        }
+    };
+    let entry = man.model("lenet_bin").unwrap();
+    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+    let names = inventory::lenet(true).binary_names();
+    let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+    Some(Arc::new(Engine::from_bmx(&bmx).unwrap()))
+}
+
+#[test]
+fn served_answers_equal_direct_engine_calls() {
+    let Some(eng) = engine() else { return };
+    let ds = Kind::Digits.generate(24, 17);
+    // ground truth: direct engine classification one-by-one
+    let direct: Vec<usize> = (0..ds.len())
+        .map(|i| eng.classify(ds.image(i), 1).unwrap()[0].0)
+        .collect();
+
+    let server = Server::start(
+        eng.clone(),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(4) },
+            queue_cap: 64,
+        },
+    );
+    let client = server.client();
+    let handles: Vec<_> = (0..ds.len())
+        .map(|i| {
+            let c = client.clone();
+            let img = ds.image(i).to_vec();
+            std::thread::spawn(move || c.classify(img).unwrap().class)
+        })
+        .collect();
+    let served: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    drop(client);
+    let snap = server.shutdown();
+
+    assert_eq!(served, direct, "served classes differ from direct engine");
+    assert_eq!(snap.requests, ds.len() as u64);
+    assert!(snap.p50 > Duration::ZERO);
+}
+
+#[test]
+fn batching_reduces_batch_count_under_load() {
+    let Some(eng) = engine() else { return };
+    let ds = Kind::Digits.generate(32, 3);
+    let server = Server::start(
+        eng,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 16, window: Duration::from_millis(10) },
+            queue_cap: 64,
+        },
+    );
+    let client = server.client();
+    // submit all requests asynchronously, then collect
+    let pending: Vec<_> = (0..ds.len())
+        .map(|i| client.submit(ds.image(i).to_vec()).unwrap())
+        .collect();
+    let mut max_batch_seen = 0;
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        max_batch_seen = max_batch_seen.max(resp.batch_size);
+    }
+    drop(client);
+    let snap = server.shutdown();
+    assert!(
+        snap.batches < snap.requests,
+        "no batching: {} batches for {} requests",
+        snap.batches,
+        snap.requests
+    );
+    assert!(max_batch_seen > 1, "never saw a batched response");
+    assert!(max_batch_seen <= 16, "exceeded max_batch");
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let Some(eng) = engine() else { return };
+    let server = Server::start(
+        eng,
+        ServerConfig {
+            // tiny queue + long window: the queue must overflow
+            policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(50) },
+            queue_cap: 2,
+        },
+    );
+    let client = server.client();
+    let img = vec![0.0f32; 784];
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for _ in 0..64 {
+        match client.submit(img.clone()) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue_cap=2 never rejected under burst of 64");
+    // accepted requests still complete
+    for rx in receivers {
+        rx.recv().unwrap();
+    }
+    drop(client);
+    server.shutdown();
+}
