@@ -1,0 +1,31 @@
+# Developer/CI entry points.  `make verify` is the tier-1 gate plus docs
+# and bench compilation — exactly what .github/workflows/ci.yml runs.
+
+CARGO ?= cargo
+PYTHON ?= python
+
+.PHONY: build test doc bench-compile verify artifacts clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Docs must build warning-free (broken intra-doc links fail CI).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+# Compile (but do not run) all 7 bench targets.
+bench-compile:
+	$(CARGO) bench --no-run
+
+verify: build test doc bench-compile
+
+# Emit the AOT HLO-text artifacts + manifest (optional; needs JAX).
+# The Rust side skips artifact-driven tests when this has not run.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean

@@ -36,6 +36,14 @@ impl Method {
     }
 
     /// Figure-1 legend name.
+    ///
+    /// **API contract** (EXPERIMENTS.md §Perf): these exact strings key
+    /// the recorded bench results (`BENCH_*.json`) and the CLI/bench
+    /// table columns, and [`Method::from_label`] must round-trip every
+    /// one of them — `Method::from_label(m.label()) == Some(m)` for all
+    /// variants (enforced by unit tests here and in
+    /// `rust/tests/cli_smoke.rs`).  Renaming a label is a breaking
+    /// change to every stored benchmark record.
     pub fn label(&self) -> &'static str {
         match self {
             Method::NaiveF32 => "naive",
@@ -51,6 +59,9 @@ impl Method {
         !matches!(self, Method::NaiveF32 | Method::BlockedF32)
     }
 
+    /// Inverse of [`Method::label`]; `None` for unknown strings.  Stable
+    /// round-trip with `label()` is part of the public API contract (see
+    /// [`Method::label`]).
     pub fn from_label(s: &str) -> Option<Method> {
         Method::all().iter().copied().find(|m| m.label() == s)
     }

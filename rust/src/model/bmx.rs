@@ -20,16 +20,28 @@
 //!     payload: f32 LE  |  u64 LE words (rows * words_per_row)
 //! ```
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+use super::checked_numel;
 use super::ckpt::Checkpoint;
 use crate::gemm::{PackedMatrix, Side};
 
 const MAGIC: &[u8; 4] = b"BMX1";
 const VERSION: u32 = 1;
+
+/// Bounds-checked cursor advance over the raw `.bmx` bytes.  The length
+/// comparison is overflow-proof: `n` comes from untrusted size fields.
+fn take<'a>(data: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if n > data.len().saturating_sub(*pos) {
+        bail!("truncated .bmx at byte {pos}");
+    }
+    let s = &data[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
 
 /// One tensor in a `.bmx` model.
 #[derive(Debug, Clone)]
@@ -129,40 +141,36 @@ impl BmxModel {
 
     pub fn from_bytes(data: &[u8]) -> Result<Self> {
         let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > data.len() {
-                bail!("truncated .bmx at byte {pos}");
-            }
-            let s = &data[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        if take(&mut pos, 4)? != MAGIC {
+        if take(data, &mut pos, 4)? != MAGIC {
             bail!("bad .bmx magic");
         }
-        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let version = u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap());
         if version != VERSION {
             bail!("unsupported .bmx version {version}");
         }
-        let mlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-        let meta = String::from_utf8(take(&mut pos, mlen)?.to_vec())
+        let mlen = u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap()) as usize;
+        let meta = String::from_utf8(take(data, &mut pos, mlen)?.to_vec())
             .context("metadata not UTF-8")?;
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let count = u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap()) as usize;
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
-            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
-            let name =
-                String::from_utf8(take(&mut pos, nlen)?.to_vec()).context("name not UTF-8")?;
-            let kind = take(&mut pos, 1)?[0];
-            let ndim = take(&mut pos, 1)?[0] as usize;
+            let nlen = u16::from_le_bytes(take(data, &mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(data, &mut pos, nlen)?.to_vec())
+                .context("name not UTF-8")?;
+            let kind = take(data, &mut pos, 1)?[0];
+            let ndim = take(data, &mut pos, 1)?[0] as usize;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+                shape.push(
+                    u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap()) as usize,
+                );
             }
             match kind {
                 0 => {
-                    let n: usize = shape.iter().product();
-                    let raw = take(&mut pos, 4 * n)?;
+                    let nbytes = checked_numel(&shape)
+                        .and_then(|n| n.checked_mul(4))
+                        .ok_or_else(|| anyhow!("{name}: tensor size overflows"))?;
+                    let raw = take(data, &mut pos, nbytes)?;
                     let v = raw
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -171,10 +179,20 @@ impl BmxModel {
                 }
                 1 => {
                     let wpr =
-                        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-                    let rows = shape[0];
-                    let k: usize = shape[1..].iter().product();
-                    let raw = take(&mut pos, 8 * rows * wpr)?;
+                        u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap()) as usize;
+                    let rows = *shape
+                        .first()
+                        .ok_or_else(|| anyhow!("{name}: packed tensor needs >= 1 dim"))?;
+                    let k = checked_numel(&shape[1..])
+                        .ok_or_else(|| anyhow!("{name}: tensor size overflows"))?;
+                    if wpr != k.div_ceil(crate::gemm::pack::WORD_BITS) {
+                        bail!("{name}: words_per_row {wpr} inconsistent with k = {k}");
+                    }
+                    let nbytes = rows
+                        .checked_mul(wpr)
+                        .and_then(|w| w.checked_mul(8))
+                        .ok_or_else(|| anyhow!("{name}: packed payload overflows"))?;
+                    let raw = take(data, &mut pos, nbytes)?;
                     let words = raw
                         .chunks_exact(8)
                         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
@@ -346,6 +364,54 @@ mod tests {
         let m = convert(&ck, &["conv.w".into(), "fc.w".into()], "{}").unwrap();
         let fp: usize = ck.tensors.iter().map(|(_, s, _)| 4 * s.iter().product::<usize>()).sum();
         assert!(m.payload_bytes() * 4 < fp, "{} vs {fp}", m.payload_bytes());
+    }
+
+    /// Header for a crafted single-tensor file: magic, version, empty
+    /// meta, count 1, name "w", the given kind byte.
+    fn crafted_header(kind: u8) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"BMX1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes()); // meta len 0
+        b.extend_from_slice(&1u32.to_le_bytes()); // 1 tensor
+        b.extend_from_slice(&1u16.to_le_bytes()); // name len
+        b.push(b'w');
+        b.push(kind);
+        b
+    }
+
+    #[test]
+    fn packed_tensor_without_dims_rejected() {
+        // kind=1, ndim=0: must be a clean Err, not a shape[0] panic
+        let mut b = crafted_header(1);
+        b.push(0); // ndim = 0
+        b.extend_from_slice(&1u32.to_le_bytes()); // words_per_row
+        assert!(BmxModel::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn overflowing_shape_rejected_not_wrapped() {
+        // dims whose product overflows usize must error, not wrap into a
+        // tiny bogus payload length that silently misparses
+        let mut b = crafted_header(0);
+        b.push(4); // ndim = 4
+        for _ in 0..4 {
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(BmxModel::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn packed_words_per_row_mismatch_rejected() {
+        // k = 70 needs 2 words/row; a file claiming 1 would build a
+        // PackedMatrix whose row() slices lie about their length
+        let mut b = crafted_header(1);
+        b.push(2); // ndim = 2
+        b.extend_from_slice(&1u32.to_le_bytes()); // rows
+        b.extend_from_slice(&70u32.to_le_bytes()); // k
+        b.extend_from_slice(&1u32.to_le_bytes()); // words_per_row (wrong)
+        b.extend_from_slice(&[0u8; 8]); // 1 row x 1 word payload
+        assert!(BmxModel::from_bytes(&b).is_err());
     }
 
     #[test]

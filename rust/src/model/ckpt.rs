@@ -4,7 +4,7 @@
 //! tensor: u16 name-len + UTF-8 name, u8 dtype (0 = f32, 1 = u32), u8 ndim,
 //! u32 dims, raw row-major data.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -160,10 +160,13 @@ impl Checkpoint {
             for _ in 0..ndim {
                 shape.push(r.u32()? as usize);
             }
-            let n: usize = shape.iter().product();
+            // untrusted sizes: reject overflow instead of wrapping
+            let nbytes = super::checked_numel(&shape)
+                .and_then(|n| n.checked_mul(4))
+                .ok_or_else(|| anyhow!("tensor {name} size overflows"))?;
             match code {
                 0 => {
-                    let raw = r.take(n * 4)?;
+                    let raw = r.take(nbytes)?;
                     let v = raw
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -171,7 +174,7 @@ impl Checkpoint {
                     ck.tensors.push((name, shape, TensorData::F32(v)));
                 }
                 1 => {
-                    let raw = r.take(n * 4)?;
+                    let raw = r.take(nbytes)?;
                     let v = raw
                         .chunks_exact(4)
                         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -207,7 +210,8 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.data.len() {
+        // overflow-proof bounds check: n comes from untrusted size fields
+        if n > self.data.len().saturating_sub(self.pos) {
             bail!("truncated BMXC file at byte {}", self.pos);
         }
         let s = &self.data[self.pos..self.pos + n];

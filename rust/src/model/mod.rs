@@ -17,3 +17,10 @@ pub mod json;
 
 pub use bmx::{convert, BmxModel, BmxTensor};
 pub use ckpt::{Checkpoint, Dtype, TensorData};
+
+/// Element count of an untrusted shape; `None` on usize overflow.
+/// Shared by the BMXC ([`ckpt`]) and `.bmx` ([`bmx`]) wire-format
+/// parsers so hardening fixes cannot drift between them.
+pub(crate) fn checked_numel(shape: &[usize]) -> Option<usize> {
+    shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}

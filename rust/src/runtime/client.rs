@@ -1,134 +1,317 @@
 //! PJRT client/executable wrappers + Literal conversion glue.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`.  All artifacts are lowered with
-//! `return_tuple=True`, so outputs always arrive as one tuple literal that
-//! [`Executable::run`] flattens back into a `Vec<Literal>`.
+//! Two implementations share one API surface, selected by the `pjrt`
+//! cargo feature, so [`crate::train`], the integration tests and the
+//! examples compile identically either way:
+//!
+//! * **`pjrt` enabled** — the real thing, over the external `xla`
+//!   bindings (xla-rs + xla_extension).  Pattern follows
+//!   /opt/xla-example/load_hlo: HLO text -> `HloModuleProto::from_text_file`
+//!   -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//!   All artifacts are lowered with `return_tuple=True`, so outputs always
+//!   arrive as one tuple literal that [`Executable::run`] flattens back
+//!   into a `Vec<Literal>`.
+//! * **`pjrt` disabled (default)** — a stub: [`Runtime::cpu`] returns a
+//!   descriptive error so every artifact-driven path (training, the
+//!   runtime integration tests, `bmxnet train`) fails fast or skips,
+//!   while the [`Literal`] container and the `lit_*` / `to_*` conversion
+//!   helpers stay fully functional.  The pure-Rust xnor engine, the
+//!   converter and the serving coordinator never touch PJRT and are
+//!   unaffected.  See DESIGN.md §PJRT runtime gating.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-/// Wrapper over the PJRT CPU client with an executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
-}
+    /// Literal type of the real backend.
+    pub use xla::Literal;
 
-impl Runtime {
-    /// Create a CPU runtime (the only backend in this environment).
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    /// Wrapper over the PJRT CPU client with an executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile an HLO-text artifact (no cache).
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {path:?}"))?;
-        Ok(Executable { exe, path: path.to_path_buf() })
-    }
-
-    /// Compile-or-reuse an executable, keyed by path.
-    pub fn load_cached(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(e) = self.cache.lock().unwrap().get(&path) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Create a CPU runtime (the only backend in this environment).
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self { client, cache: Mutex::new(HashMap::new()) })
         }
-        let exe = std::sync::Arc::new(self.load_hlo_text(&path)?);
-        self.cache.lock().unwrap().insert(path, exe.clone());
-        Ok(exe)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an HLO-text artifact (no cache).
+        pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {path:?}"))?;
+            Ok(Executable { exe, path: path.to_path_buf() })
+        }
+
+        /// Compile-or-reuse an executable, keyed by path.
+        pub fn load_cached(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+            let path = path.as_ref().to_path_buf();
+            if let Some(e) = self.cache.lock().unwrap().get(&path) {
+                return Ok(e.clone());
+            }
+            let exe = std::sync::Arc::new(self.load_hlo_text(&path)?);
+            self.cache.lock().unwrap().insert(path, exe.clone());
+            Ok(exe)
+        }
+    }
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: PathBuf,
+    }
+
+    impl Executable {
+        /// Execute with the given inputs; flatten the output tuple.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("execute {:?}", self.path))?;
+            let lit = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("no output buffer from {:?}", self.path))?
+                .to_literal_sync()?;
+            // return_tuple=True => always a tuple, possibly of arity 1
+            lit.to_tuple().context("decompose output tuple")
+        }
+    }
+
+    /// Build an f32 literal with the given dims.
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "lit_f32: {dims:?} needs {n}, got {}", data.len());
+        let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&d)?)
+    }
+
+    /// Build an i32 literal with the given dims.
+    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "lit_i32: {dims:?} needs {n}, got {}", data.len());
+        let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&d)?)
+    }
+
+    /// Build a u32 literal with the given dims.
+    pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "lit_u32: {dims:?} needs {n}, got {}", data.len());
+        let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&d)?)
+    }
+
+    /// Scalar f32 literal.
+    pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Read an f32 literal back to a host vector.
+    pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Read an i32 literal back to a host vector.
+    pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+        Ok(lit.to_vec::<i32>()?)
+    }
+
+    /// Read a scalar f32 from a literal.
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        Ok(lit.get_first_element::<f32>()?)
     }
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{anyhow, bail, Result};
+    use std::path::{Path, PathBuf};
 
-impl Executable {
-    /// Execute with the given inputs; flatten the output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("execute {:?}", self.path))?;
-        let lit = result
+    /// Host-side literal: typed data + dims.  The stub's stand-in for
+    /// `xla::Literal`, API-compatible with the subset this crate uses
+    /// (`to_vec`, `element_count`), so all callers compile unchanged.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Literal {
+        F32 { data: Vec<f32>, dims: Vec<usize> },
+        I32 { data: Vec<i32>, dims: Vec<usize> },
+        U32 { data: Vec<u32>, dims: Vec<usize> },
+    }
+
+    /// Element types a [`Literal`] can be read back as.
+    pub trait LiteralElem: Sized {
+        fn read(lit: &Literal) -> Result<Vec<Self>>;
+    }
+
+    impl LiteralElem for f32 {
+        fn read(lit: &Literal) -> Result<Vec<f32>> {
+            match lit {
+                Literal::F32 { data, .. } => Ok(data.clone()),
+                other => bail!("literal is not f32: {other:?}"),
+            }
+        }
+    }
+
+    impl LiteralElem for i32 {
+        fn read(lit: &Literal) -> Result<Vec<i32>> {
+            match lit {
+                Literal::I32 { data, .. } => Ok(data.clone()),
+                other => bail!("literal is not i32: {other:?}"),
+            }
+        }
+    }
+
+    impl LiteralElem for u32 {
+        fn read(lit: &Literal) -> Result<Vec<u32>> {
+            match lit {
+                Literal::U32 { data, .. } => Ok(data.clone()),
+                other => bail!("literal is not u32: {other:?}"),
+            }
+        }
+    }
+
+    impl Literal {
+        pub fn element_count(&self) -> usize {
+            match self {
+                Literal::F32 { data, .. } => data.len(),
+                Literal::I32 { data, .. } => data.len(),
+                Literal::U32 { data, .. } => data.len(),
+            }
+        }
+
+        pub fn dims(&self) -> &[usize] {
+            match self {
+                Literal::F32 { dims, .. }
+                | Literal::I32 { dims, .. }
+                | Literal::U32 { dims, .. } => dims,
+            }
+        }
+
+        /// Read the payload back as a typed host vector.
+        pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+            T::read(self)
+        }
+    }
+
+    fn unavailable(what: &str) -> anyhow::Error {
+        anyhow!(
+            "{what}: PJRT runtime unavailable — this build has the `pjrt` cargo \
+             feature disabled (no XLA bindings in this environment). The pure-Rust \
+             xnor engine, converter and serving coordinator are unaffected; \
+             artifact-driven paths (train, runtime integration tests) skip. \
+             See DESIGN.md §PJRT runtime gating."
+        )
+    }
+
+    /// Stub runtime: construction always fails with a descriptive error.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        /// Always errors in stub builds; enable the `pjrt` feature (and
+        /// provide the `xla` bindings) for the real CPU client.
+        pub fn cpu() -> Result<Self> {
+            Err(unavailable("Runtime::cpu"))
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        /// Unreachable in stub builds ([`Runtime::cpu`] never succeeds).
+        pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            Err(unavailable(&format!("load_hlo_text {:?}", path.as_ref())))
+        }
+
+        /// Unreachable in stub builds ([`Runtime::cpu`] never succeeds).
+        pub fn load_cached(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+            Err(unavailable(&format!("load_cached {:?}", path.as_ref())))
+        }
+    }
+
+    /// Stub executable (never constructed; [`Runtime::cpu`] always errors).
+    pub struct Executable {
+        pub path: PathBuf,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            Err(unavailable(&format!("execute {:?}", self.path)))
+        }
+    }
+
+    fn check_len(kind: &str, dims: &[usize], len: usize) -> Result<()> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == len, "{kind}: {dims:?} needs {n}, got {len}");
+        Ok(())
+    }
+
+    /// Build an f32 literal with the given dims.
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        check_len("lit_f32", dims, data.len())?;
+        Ok(Literal::F32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Build an i32 literal with the given dims.
+    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+        check_len("lit_i32", dims, data.len())?;
+        Ok(Literal::I32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Build a u32 literal with the given dims.
+    pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<Literal> {
+        check_len("lit_u32", dims, data.len())?;
+        Ok(Literal::U32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Scalar f32 literal.
+    pub fn lit_scalar_f32(v: f32) -> Literal {
+        Literal::F32 { data: vec![v], dims: vec![] }
+    }
+
+    /// Read an f32 literal back to a host vector.
+    pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+    }
+
+    /// Read an i32 literal back to a host vector.
+    pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+        lit.to_vec::<i32>()
+    }
+
+    /// Read a scalar f32 from a literal.
+    pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+        lit.to_vec::<f32>()?
             .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffer from {:?}", self.path))?
-            .to_literal_sync()?;
-        // return_tuple=True => always a tuple, possibly of arity 1
-        lit.to_tuple().context("decompose output tuple")
+            .copied()
+            .ok_or_else(|| anyhow!("empty literal has no scalar"))
     }
 }
 
-// ---------------------------------------------------------------------------
-// Literal glue
-// ---------------------------------------------------------------------------
-
-/// Build an f32 literal with the given dims.
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "lit_f32: {dims:?} needs {n}, got {}", data.len());
-    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&d)?)
-}
-
-/// Build an i32 literal with the given dims.
-pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "lit_i32: {dims:?} needs {n}, got {}", data.len());
-    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&d)?)
-}
-
-/// Build a u32 literal with the given dims.
-pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "lit_u32: {dims:?} needs {n}, got {}", data.len());
-    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&d)?)
-}
-
-/// Scalar f32 literal.
-pub fn lit_scalar_f32(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Read an f32 literal back to a host vector.
-pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Read an i32 literal back to a host vector.
-pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(lit.to_vec::<i32>()?)
-}
-
-/// Read a scalar f32 from a literal.
-pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.get_first_element::<f32>()?)
-}
+pub use imp::*;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Literal-only tests (no PJRT client needed; cheap).
+    // Literal-only tests (no PJRT client needed; run in both modes).
     #[test]
     fn lit_f32_roundtrip() {
         let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
@@ -149,11 +332,42 @@ mod tests {
     }
 
     #[test]
+    fn lit_u32_roundtrip() {
+        let l = lit_u32(&[5, u32::MAX], &[2]).unwrap();
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![5, u32::MAX]);
+    }
+
+    #[test]
     fn scalar_roundtrip() {
         let l = lit_scalar_f32(0.125);
         assert_eq!(scalar_f32(&l).unwrap(), 0.125);
     }
 
     // Full PJRT round-trip is covered by rust/tests/runtime_integration.rs
-    // (needs artifacts/ built).
+    // (needs artifacts/ built and the `pjrt` feature).
+
+    #[cfg(not(feature = "pjrt"))]
+    mod stub {
+        use super::super::*;
+
+        #[test]
+        fn runtime_cpu_fails_with_descriptive_error() {
+            let err = Runtime::cpu().err().expect("stub Runtime::cpu must error");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+        }
+
+        #[test]
+        fn typed_reads_reject_wrong_dtype() {
+            let l = lit_f32(&[1.0], &[1]).unwrap();
+            assert!(to_i32_vec(&l).is_err());
+            assert!(l.to_vec::<u32>().is_err());
+        }
+
+        #[test]
+        fn dims_preserved() {
+            let l = lit_u32(&[0; 6], &[2, 3]).unwrap();
+            assert_eq!(l.dims(), &[2, 3]);
+        }
+    }
 }

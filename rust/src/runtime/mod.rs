@@ -7,6 +7,11 @@
 //!
 //! * [`manifest`] — typed view over `artifacts/manifest.json`.
 //! * [`client`] — the client/executable wrappers + Literal glue.
+//!
+//! The XLA bindings are optional: without the `pjrt` cargo feature the
+//! [`client`] module compiles as an API-compatible stub whose
+//! [`Runtime::cpu`] returns a descriptive error, and every
+//! artifact-driven test skips.  See DESIGN.md §PJRT runtime gating.
 
 pub mod client;
 pub mod manifest;

@@ -1,0 +1,106 @@
+//! CLI-surface smoke tests (no artifacts needed): `Engine::load` must turn
+//! every bad-input path into a clean `Err` — never a panic — because the
+//! serving coordinator and the `bmxnet predict/serve` commands feed it
+//! user-supplied paths.  Also pins the `Method` label round-trip, the
+//! stable-string API contract documented on [`repro::gemm::Method::label`].
+
+use repro::gemm::Method;
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cli_smoke_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn engine_load_missing_path_is_clean_error() {
+    let err = Engine::load("definitely/not/here.bmx");
+    assert!(err.is_err(), "missing file must be an Err, not a panic");
+    let msg = format!("{:#}", err.err().expect("expected an Err"));
+    assert!(msg.contains("here.bmx"), "error does not name the path: {msg}");
+}
+
+#[test]
+fn engine_load_garbage_file_is_clean_error() {
+    let path = tmp_path("garbage.bmx");
+    std::fs::write(&path, b"this is not a bmx model at all, not even close")
+        .unwrap();
+    let err = Engine::load(&path);
+    std::fs::remove_file(&path).ok();
+    assert!(err.is_err(), "garbage bytes must be an Err, not a panic");
+    let msg = format!("{:#}", err.err().expect("expected an Err"));
+    assert!(msg.contains("magic"), "expected a bad-magic parse error: {msg}");
+}
+
+#[test]
+fn engine_load_truncated_model_is_clean_error() {
+    // Build a real, loadable binary-LeNet .bmx, then cut it short.
+    let inv = inventory::lenet(true);
+    let mut ck = Checkpoint::new();
+    for p in &inv.params {
+        let name = if p.name.starts_with("state.") {
+            p.name.clone()
+        } else {
+            format!("params.{}", p.name)
+        };
+        let data = vec![if name.contains(".var") { 1.0 } else { 0.25 }; p.numel()];
+        ck.push_f32(&name, p.shape.clone(), data);
+    }
+    let bmx = convert(&ck, &inv.binary_names(), r#"{"arch": "lenet", "binary": true}"#)
+        .unwrap();
+    let bytes = bmx.to_bytes();
+
+    let path = tmp_path("truncated.bmx");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = Engine::load(&path);
+    std::fs::remove_file(&path).ok();
+    assert!(err.is_err(), "truncated model must be an Err, not a panic");
+    let msg = format!("{:#}", err.err().expect("expected an Err"));
+    assert!(msg.contains("truncated"), "expected a truncation error: {msg}");
+
+    // sanity: the untruncated bytes do load
+    let path = tmp_path("whole.bmx");
+    std::fs::write(&path, &bytes).unwrap();
+    let ok = Engine::load(&path);
+    std::fs::remove_file(&path).ok();
+    ok.expect("untruncated model must load");
+}
+
+#[test]
+fn engine_load_metadata_without_arch_is_clean_error() {
+    let mut ck = Checkpoint::new();
+    ck.push_f32("params.w", vec![2, 2], vec![0.0; 4]);
+    let bmx = convert(&ck, &[], "{}").unwrap();
+    let path = tmp_path("noarch.bmx");
+    bmx.save(&path).unwrap();
+    let err = Engine::load(&path);
+    std::fs::remove_file(&path).ok();
+    let msg = format!("{:#}", err.err().expect("expected an Err"));
+    assert!(msg.contains("arch"), "expected a missing-arch error: {msg}");
+}
+
+#[test]
+fn method_labels_roundtrip_for_all_variants() {
+    for m in Method::all() {
+        assert_eq!(
+            Method::from_label(m.label()),
+            Some(*m),
+            "label round-trip broken for {m:?}"
+        );
+    }
+    assert_eq!(Method::from_label("not-a-method"), None);
+}
+
+#[test]
+fn method_labels_are_the_pinned_strings() {
+    // The exact strings are an API contract: they key BENCH_*.json
+    // records and bench-table columns (see Method::label docs and
+    // EXPERIMENTS.md §Perf).  Changing one must fail a test, not slip by.
+    let labels: Vec<&str> = Method::all().iter().map(|m| m.label()).collect();
+    assert_eq!(
+        labels,
+        ["naive", "cblas", "xnor_32", "xnor_64", "xnor_64_blk", "xnor_64_omp"]
+    );
+}
