@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test doc bench-compile verify artifacts clean
+.PHONY: build test doc bench-compile serve-smoke fmt-check verify artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -16,11 +16,19 @@ test:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-# Compile (but do not run) all 7 bench targets.
+# Compile (but do not run) all 8 bench targets.
 bench-compile:
 	$(CARGO) bench --no-run
 
-verify: build test doc bench-compile
+# Start the serving gateway on an ephemeral port, curl /v1/models plus one
+# classify per acceptance model, assert 200s and a /metrics request count.
+serve-smoke: build
+	sh scripts/serve_smoke.sh
+
+fmt-check:
+	$(CARGO) fmt --check
+
+verify: build test doc bench-compile serve-smoke
 
 # Emit the AOT HLO-text artifacts + manifest (optional; needs JAX).
 # The Rust side skips artifact-driven tests when this has not run.

@@ -1,0 +1,45 @@
+//! Serving-gateway scaling: offered load (closed-loop producers) swept
+//! against pool worker count over the converted binary LeNet.
+//!
+//!     cargo bench --bench serve_scaling
+//!
+//! Falls back to a synthetic spin-loop backend when `make artifacts` has
+//! not run, so the sweep is runnable anywhere.  Record results in
+//! EXPERIMENTS.md §Serve scaling (`BENCH_serve_scaling.json`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::bench::{run_serve_scaling, serve_scaling_workloads, SyntheticBackend};
+use repro::coordinator::{Backend, BatchPolicy};
+use repro::model::bmx::convert;
+use repro::model::ckpt::Checkpoint;
+use repro::model::inventory;
+use repro::nn::Engine;
+use repro::runtime::Manifest;
+
+fn main() {
+    let requests: usize = std::env::var("BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let backend: Arc<dyn Backend> = match Manifest::load(repro::ARTIFACTS_DIR) {
+        Ok(man) => {
+            let entry = man.model("lenet_bin").unwrap();
+            let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
+            let names = inventory::lenet(true).binary_names();
+            let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
+            Arc::new(Engine::from_bmx(&bmx).unwrap())
+        }
+        Err(_) => {
+            println!("(artifacts not built: sweeping over the synthetic spin backend)");
+            Arc::new(SyntheticBackend { cost_per_image: Duration::from_micros(200) })
+        }
+    };
+    let policy = BatchPolicy { max_batch: 32, window: Duration::from_millis(2) };
+    run_serve_scaling(backend, &serve_scaling_workloads(requests), policy, 4096);
+    println!(
+        "(closed-loop: each producer waits for its reply before sending the next; \
+         req/s at fixed producers is the scaling signal as workers grow)"
+    );
+}

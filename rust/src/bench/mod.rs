@@ -6,11 +6,18 @@
 //! * [`workloads`] — the exact GEMM shapes of Figures 1–3 (and a reduced
 //!   variant: batch 20 instead of 200, so the naive baseline finishes in
 //!   seconds on this 1-core box; `--full` restores paper-exact shapes).
+//! * [`serve_scaling`] — the serving-gateway scaling sweep (offered load ×
+//!   pool worker count) shared by `cargo bench --bench serve_scaling`.
 
 pub mod figures;
 pub mod harness;
+pub mod serve_scaling;
 pub mod workloads;
 
 pub use figures::{measure_workload, run_gemm_figure, FigureRow};
 pub use harness::{time_best_of, BenchTable};
+pub use serve_scaling::{
+    measure_serve_workload, run_serve_scaling, serve_scaling_workloads, ServeScalingRow,
+    ServeWorkload, SyntheticBackend,
+};
 pub use workloads::{fig1_workloads, fig2_workloads, fig3_workloads, GemmWorkload};

@@ -1,0 +1,200 @@
+//! Serve-scaling workload: offered load (closed-loop producer count)
+//! swept against pool worker count — the scaling question the gateway
+//! exists to answer (EXPERIMENTS.md §Serve scaling).
+//!
+//! Shared by `cargo bench --bench serve_scaling` and tests, in the same
+//! pattern as [`super::figures`] for the GEMM figures: the workload grid
+//! and measurement live in the library, the bench target is a thin driver.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::harness::BenchTable;
+use crate::coordinator::{Backend, BatchPolicy, MetricsSnapshot};
+use crate::serve::{ModelPool, PoolConfig};
+
+/// One measurement point of the sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeWorkload {
+    /// Pool shards (batcher threads).
+    pub workers: usize,
+    /// Closed-loop producers (each waits for its reply before re-sending).
+    pub producers: usize,
+    /// Total requests across all producers.
+    pub requests: usize,
+}
+
+/// The default grid: workers × offered load.
+pub fn serve_scaling_workloads(requests: usize) -> Vec<ServeWorkload> {
+    let mut ws = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        for &producers in &[1usize, 4, 16] {
+            ws.push(ServeWorkload { workers, producers, requests });
+        }
+    }
+    ws
+}
+
+/// One measured row of the sweep.
+#[derive(Debug, Clone)]
+pub struct ServeScalingRow {
+    pub workload: ServeWorkload,
+    pub wall: Duration,
+    /// Requests answered (closed-loop: equals sent minus rejections).
+    pub served: usize,
+    /// Requests refused at submit (all shard queues full).
+    pub rejected: usize,
+    /// Merged pool metrics at shutdown.
+    pub snapshot: MetricsSnapshot,
+}
+
+impl ServeScalingRow {
+    pub fn req_per_sec(&self) -> f64 {
+        self.served as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Deterministic stand-in engine for artifact-free runs: LeNet input
+/// geometry, `cost_per_image` of busy-spin compute per image (spinning,
+/// not sleeping, so worker scaling contends for CPU like a real engine).
+pub struct SyntheticBackend {
+    pub cost_per_image: Duration,
+}
+
+impl Backend for SyntheticBackend {
+    fn input_shape(&self) -> [usize; 3] {
+        [1, 28, 28]
+    }
+
+    fn classify_batch(&self, images: &[f32], batch: usize) -> anyhow::Result<Vec<(usize, f32)>> {
+        let budget = self.cost_per_image * batch as u32;
+        let t0 = Instant::now();
+        while t0.elapsed() < budget {
+            std::hint::spin_loop();
+        }
+        Ok(images
+            .chunks(images.len() / batch.max(1))
+            .take(batch)
+            .map(|img| {
+                let mut best = 0usize;
+                for (i, &v) in img.iter().enumerate().skip(1) {
+                    if v > img[best] {
+                        best = i;
+                    }
+                }
+                (best % 10, img[best])
+            })
+            .collect())
+    }
+}
+
+/// Closed-loop drive of one workload over a fresh pool.
+pub fn measure_serve_workload(
+    backend: Arc<dyn Backend>,
+    w: &ServeWorkload,
+    policy: BatchPolicy,
+    queue_cap: usize,
+) -> ServeScalingRow {
+    let pool = ModelPool::start(backend, &PoolConfig { workers: w.workers, policy, queue_cap });
+    let image_len = pool.image_len();
+    let t0 = Instant::now();
+    let (served, rejected) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for p in 0..w.producers {
+            let pool = &pool;
+            handles.push(s.spawn(move || {
+                let mut img = vec![0.0f32; image_len];
+                let mut ok = 0usize;
+                let mut rej = 0usize;
+                for i in (p..w.requests).step_by(w.producers.max(1)) {
+                    // vary the hot pixel so argmax answers differ
+                    img[(i * 37) % image_len] = 1.0;
+                    match pool.classify(img.clone()) {
+                        Ok(_) => ok += 1,
+                        Err(_) => rej += 1,
+                    }
+                    img[(i * 37) % image_len] = 0.0;
+                }
+                (ok, rej)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |a, b| (a.0 + b.0, a.1 + b.1))
+    });
+    let wall = t0.elapsed();
+    let snapshot = pool.shutdown();
+    ServeScalingRow { workload: *w, wall, served, rejected, snapshot }
+}
+
+/// Run the grid and print a paper-style table; returns the raw rows.
+pub fn run_serve_scaling(
+    backend: Arc<dyn Backend>,
+    workloads: &[ServeWorkload],
+    policy: BatchPolicy,
+    queue_cap: usize,
+) -> Vec<ServeScalingRow> {
+    let mut table = BenchTable::new(
+        "Serve scaling: offered load vs worker count",
+        &["workers", "producers", "req/s", "mean_batch", "p50", "p95", "rejected"],
+    );
+    let mut rows = Vec::new();
+    for w in workloads {
+        let row = measure_serve_workload(backend.clone(), w, policy, queue_cap);
+        table.row(vec![
+            row.workload.workers.to_string(),
+            row.workload.producers.to_string(),
+            format!("{:.0}", row.req_per_sec()),
+            format!("{:.1}", row.snapshot.mean_batch),
+            format!("{:.1}ms", row.snapshot.p50.as_secs_f64() * 1e3),
+            format!("{:.1}ms", row.snapshot.p95.as_secs_f64() * 1e3),
+            row.rejected.to_string(),
+        ]);
+        rows.push(row);
+    }
+    table.print();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_workers_and_producers() {
+        let ws = serve_scaling_workloads(64);
+        assert_eq!(ws.len(), 9);
+        assert!(ws.iter().any(|w| w.workers == 4 && w.producers == 16));
+        assert!(ws.iter().all(|w| w.requests == 64));
+    }
+
+    #[test]
+    fn closed_loop_accounts_for_every_request() {
+        let backend = Arc::new(SyntheticBackend { cost_per_image: Duration::from_micros(20) });
+        let w = ServeWorkload { workers: 2, producers: 4, requests: 24 };
+        let row = measure_serve_workload(
+            backend,
+            &w,
+            BatchPolicy { max_batch: 8, window: Duration::from_millis(1) },
+            1024,
+        );
+        assert_eq!(row.served + row.rejected, 24);
+        assert_eq!(row.rejected, 0, "closed loop under queue_cap must not reject");
+        assert_eq!(row.snapshot.requests, row.served as u64);
+        let hist: u64 = row.snapshot.batch_hist.iter().map(|&(s, c)| s as u64 * c).sum();
+        assert_eq!(hist, row.snapshot.requests);
+        assert!(row.req_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn synthetic_backend_is_deterministic_argmax() {
+        let b = SyntheticBackend { cost_per_image: Duration::ZERO };
+        let mut imgs = vec![0.0f32; 2 * 784];
+        imgs[5] = 1.0; // image 0 -> class 5
+        imgs[784 + 13] = 1.0; // image 1 -> class 3 (13 % 10)
+        let preds = b.classify_batch(&imgs, 2).unwrap();
+        assert_eq!(preds[0].0, 5);
+        assert_eq!(preds[1].0, 3);
+    }
+}

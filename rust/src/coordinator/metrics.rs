@@ -1,7 +1,23 @@
-//! Serving metrics: request/batch counters and latency percentiles.
+//! Serving metrics: request/batch counters, a batch-size histogram and
+//! latency percentiles.
+//!
+//! Snapshots are self-contained (they carry the sorted raw latencies and
+//! the histogram), so per-shard snapshots can be merged losslessly into a
+//! per-model view — see [`MetricsSnapshot::merge`], used by the serving
+//! gateway's `/metrics` endpoint to aggregate across pool shards.
+//!
+//! The raw latency store is a bounded ring ([`LATENCY_WINDOW`] samples per
+//! sink): the gateway runs indefinitely, so an unbounded vector would grow
+//! ~8 bytes/request forever and make every `/metrics` scrape clone+sort
+//! all history.  Percentiles therefore describe the most recent window —
+//! what a live dashboard wants anyway; counters remain all-time.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Per-sink cap on retained raw latency samples (512 KiB at u64 each).
+pub const LATENCY_WINDOW: usize = 65_536;
 
 /// Shared, thread-safe metrics sink.
 #[derive(Debug, Default)]
@@ -15,7 +31,12 @@ struct Inner {
     batches: u64,
     batch_size_sum: u64,
     rejected: u64,
+    /// batch size -> number of batches dispatched at that size.
+    batch_hist: BTreeMap<usize, u64>,
+    /// Ring of the most recent [`LATENCY_WINDOW`] latency samples (µs).
     latencies_us: Vec<u64>,
+    /// Next overwrite position once the ring is full.
+    lat_cursor: usize,
 }
 
 /// Point-in-time summary.
@@ -29,6 +50,22 @@ pub struct MetricsSnapshot {
     pub p95: Duration,
     pub p99: Duration,
     pub max: Duration,
+    /// (batch size, batches dispatched at that size), ascending by size.
+    /// Invariant: sum(size * count) == requests.
+    pub batch_hist: Vec<(usize, u64)>,
+    /// Sorted per-request latencies in microseconds (the percentile
+    /// basis) — the most recent [`LATENCY_WINDOW`] samples.
+    pub latencies_us: Vec<u64>,
+}
+
+/// Nearest-rank percentile over sorted microsecond latencies:
+/// idx = ceil(p * N) - 1.
+fn percentile(sorted_us: &[u64], p: f64) -> Duration {
+    if sorted_us.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (p * sorted_us.len() as f64).ceil() as usize;
+    Duration::from_micros(sorted_us[rank.clamp(1, sorted_us.len()) - 1])
 }
 
 impl ServerMetrics {
@@ -41,8 +78,16 @@ impl ServerMetrics {
         g.requests += latencies.len() as u64;
         g.batches += 1;
         g.batch_size_sum += batch_size as u64;
+        *g.batch_hist.entry(batch_size).or_insert(0) += 1;
         for l in latencies {
-            g.latencies_us.push(l.as_micros() as u64);
+            let us = l.as_micros() as u64;
+            if g.latencies_us.len() < LATENCY_WINDOW {
+                g.latencies_us.push(us);
+            } else {
+                let at = g.lat_cursor;
+                g.latencies_us[at] = us;
+                g.lat_cursor = (at + 1) % LATENCY_WINDOW;
+            }
         }
     }
 
@@ -54,14 +99,6 @@ impl ServerMetrics {
         let g = self.inner.lock().unwrap();
         let mut ls = g.latencies_us.clone();
         ls.sort_unstable();
-        // nearest-rank percentile: idx = ceil(p * N) - 1
-        let pct = |p: f64| -> Duration {
-            if ls.is_empty() {
-                return Duration::ZERO;
-            }
-            let rank = (p * ls.len() as f64).ceil() as usize;
-            Duration::from_micros(ls[rank.clamp(1, ls.len()) - 1])
-        };
         MetricsSnapshot {
             requests: g.requests,
             batches: g.batches,
@@ -71,15 +108,69 @@ impl ServerMetrics {
             } else {
                 g.batch_size_sum as f64 / g.batches as f64
             },
-            p50: pct(0.50),
-            p95: pct(0.95),
-            p99: pct(0.99),
+            p50: percentile(&ls, 0.50),
+            p95: percentile(&ls, 0.95),
+            p99: percentile(&ls, 0.99),
             max: ls.last().map_or(Duration::ZERO, |&u| Duration::from_micros(u)),
+            batch_hist: g.batch_hist.iter().map(|(&s, &c)| (s, c)).collect(),
+            latencies_us: ls,
         }
     }
 }
 
 impl MetricsSnapshot {
+    /// An empty snapshot (identity element for [`MetricsSnapshot::merge`]).
+    pub fn empty() -> Self {
+        MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            rejected: 0,
+            mean_batch: 0.0,
+            p50: Duration::ZERO,
+            p95: Duration::ZERO,
+            p99: Duration::ZERO,
+            max: Duration::ZERO,
+            batch_hist: Vec::new(),
+            latencies_us: Vec::new(),
+        }
+    }
+
+    /// Losslessly merge per-shard snapshots into one aggregate: counters
+    /// add, histograms add bucket-wise, and percentiles are recomputed
+    /// over the pooled raw latencies (averaging per-shard percentiles
+    /// would be wrong).
+    pub fn merge<'a>(snaps: impl IntoIterator<Item = &'a MetricsSnapshot>) -> MetricsSnapshot {
+        let mut requests = 0u64;
+        let mut batches = 0u64;
+        let mut rejected = 0u64;
+        let mut size_sum = 0u64;
+        let mut hist: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut ls: Vec<u64> = Vec::new();
+        for s in snaps {
+            requests += s.requests;
+            batches += s.batches;
+            rejected += s.rejected;
+            for &(size, count) in &s.batch_hist {
+                size_sum += size as u64 * count;
+                *hist.entry(size).or_insert(0) += count;
+            }
+            ls.extend_from_slice(&s.latencies_us);
+        }
+        ls.sort_unstable();
+        MetricsSnapshot {
+            requests,
+            batches,
+            rejected,
+            mean_batch: if batches == 0 { 0.0 } else { size_sum as f64 / batches as f64 },
+            p50: percentile(&ls, 0.50),
+            p95: percentile(&ls, 0.95),
+            p99: percentile(&ls, 0.99),
+            max: ls.last().map_or(Duration::ZERO, |&u| Duration::from_micros(u)),
+            batch_hist: hist.into_iter().collect(),
+            latencies_us: ls,
+        }
+    }
+
     /// Human-readable one-liner for logs and benches.
     pub fn summary(&self) -> String {
         format!(
@@ -114,6 +205,8 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50, Duration::ZERO);
         assert_eq!(s.mean_batch, 0.0);
+        assert!(s.batch_hist.is_empty());
+        assert!(s.latencies_us.is_empty());
     }
 
     #[test]
@@ -127,5 +220,118 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.mean_batch, 3.0);
+    }
+
+    #[test]
+    fn single_sample_percentiles_all_equal_it() {
+        let m = ServerMetrics::new();
+        m.record_batch(1, &[Duration::from_micros(42)]);
+        let s = m.snapshot();
+        assert_eq!(s.p50, Duration::from_micros(42));
+        assert_eq!(s.p95, Duration::from_micros(42));
+        assert_eq!(s.p99, Duration::from_micros(42));
+        assert_eq!(s.max, Duration::from_micros(42));
+    }
+
+    #[test]
+    fn snapshots_are_monotone() {
+        let m = ServerMetrics::new();
+        let mut prev = m.snapshot();
+        for round in 1..=5u64 {
+            m.record_batch(2, &[Duration::from_micros(round); 2]);
+            if round % 2 == 0 {
+                m.record_rejected();
+            }
+            let s = m.snapshot();
+            assert!(s.requests >= prev.requests, "requests went backwards");
+            assert!(s.batches >= prev.batches, "batches went backwards");
+            assert!(s.rejected >= prev.rejected, "rejected went backwards");
+            assert!(s.max >= prev.max, "max latency went backwards");
+            assert_eq!(s.requests, 2 * round);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_requests() {
+        let m = ServerMetrics::new();
+        m.record_batch(1, &[Duration::from_micros(1); 1]);
+        m.record_batch(3, &[Duration::from_micros(2); 3]);
+        m.record_batch(3, &[Duration::from_micros(3); 3]);
+        m.record_batch(8, &[Duration::from_micros(4); 8]);
+        let s = m.snapshot();
+        assert_eq!(s.batch_hist, vec![(1, 1), (3, 2), (8, 1)]);
+        let total: u64 = s.batch_hist.iter().map(|&(size, n)| size as u64 * n).sum();
+        assert_eq!(total, s.requests);
+    }
+
+    #[test]
+    fn concurrent_increments_all_land() {
+        let m = std::sync::Arc::new(ServerMetrics::new());
+        let threads = 8;
+        let per_thread = 50;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        m.record_batch(2, &[Duration::from_micros((t * i) as u64 + 1); 2]);
+                        if i % 10 == 0 {
+                            m.record_rejected();
+                        }
+                    }
+                });
+            }
+        });
+        let s = m.snapshot();
+        assert_eq!(s.requests, (threads * per_thread * 2) as u64);
+        assert_eq!(s.batches, (threads * per_thread) as u64);
+        assert_eq!(s.rejected, (threads * per_thread / 10) as u64);
+        assert_eq!(s.latencies_us.len(), s.requests as usize);
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let m = ServerMetrics::new();
+        let lats = vec![Duration::from_micros(7); 1000];
+        for _ in 0..(LATENCY_WINDOW / 1000 + 2) {
+            m.record_batch(1000, &lats);
+        }
+        let s = m.snapshot();
+        // counters are all-time; the raw sample store is capped
+        assert!(s.requests as usize > LATENCY_WINDOW);
+        assert_eq!(s.latencies_us.len(), LATENCY_WINDOW);
+        assert_eq!(s.p99, Duration::from_micros(7));
+    }
+
+    #[test]
+    fn merge_pools_raw_latencies() {
+        let a = ServerMetrics::new();
+        let b = ServerMetrics::new();
+        // shard a sees the fast half, shard b the slow half
+        let fast: Vec<Duration> = (1..=50).map(Duration::from_micros).collect();
+        let slow: Vec<Duration> = (51..=100).map(Duration::from_micros).collect();
+        a.record_batch(50, &fast);
+        b.record_batch(50, &slow);
+        b.record_rejected();
+        let merged = MetricsSnapshot::merge([&a.snapshot(), &b.snapshot()]);
+        assert_eq!(merged.requests, 100);
+        assert_eq!(merged.batches, 2);
+        assert_eq!(merged.rejected, 1);
+        assert_eq!(merged.mean_batch, 50.0);
+        // identical to recording everything into one sink
+        assert_eq!(merged.p50, Duration::from_micros(50));
+        assert_eq!(merged.p99, Duration::from_micros(99));
+        assert_eq!(merged.max, Duration::from_micros(100));
+        assert_eq!(merged.batch_hist, vec![(50, 2)]);
+    }
+
+    #[test]
+    fn merge_of_nothing_is_empty() {
+        let merged = MetricsSnapshot::merge([]);
+        assert_eq!(merged.requests, 0);
+        assert_eq!(merged.p50, Duration::ZERO);
+        let e = MetricsSnapshot::empty();
+        assert_eq!(e.requests, merged.requests);
     }
 }

@@ -4,23 +4,28 @@
 //! carries its own response channel (the std stand-in for a oneshot).
 //! Backpressure: the ingress channel is bounded (`queue_cap`); when it is
 //! full, `Client::try_classify` fails fast instead of queueing unboundedly.
+//!
+//! Shutdown uses an in-band `Stop` sentinel rather than a polled flag: the
+//! idle batcher blocks in `recv()` (zero idle wakeups), and the straggler
+//! wait inside a forming batch is `recv_timeout(policy.remaining(..))`, so
+//! sub-millisecond batching windows are honored exactly.  FIFO ordering
+//! guarantees every request enqueued before `shutdown()` is served.
 
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// How often the idle batcher re-checks the shutdown flag.
-const IDLE_POLL: Duration = Duration::from_millis(20);
 
 use super::batcher::BatchPolicy;
 use super::metrics::{MetricsSnapshot, ServerMetrics};
 
 /// Anything that can classify a batch of flat NCHW images.
 ///
-/// The production impl is [`crate::nn::Engine`]; tests use mocks.
+/// The production impl is [`crate::nn::Engine`]; tests use mocks.  The
+/// trait is object-safe on purpose: the server and the serving pool hold
+/// `Arc<dyn Backend>`, so N pool shards can share one loaded engine
+/// without re-loading it per shard.
 pub trait Backend: Send + Sync + 'static {
     /// Expected per-image shape [C, H, W].
     fn input_shape(&self) -> [usize; 3];
@@ -43,6 +48,12 @@ pub struct Request {
     pub image: Vec<f32>,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Response>,
+}
+
+/// What flows through the ingress channel: work, or the shutdown sentinel.
+enum Msg {
+    Req(Request),
+    Stop,
 }
 
 /// The server's answer.
@@ -73,7 +84,7 @@ impl Default for ServerConfig {
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::SyncSender<Request>,
+    tx: mpsc::SyncSender<Msg>,
     image_len: usize,
 }
 
@@ -92,20 +103,40 @@ impl Client {
             self.image_len,
             image.len()
         );
+        self.try_submit(image).map_err(|(_, why)| anyhow!("{why}"))
+    }
+
+    /// Non-blocking submit that hands the image back on failure, so a
+    /// multi-shard caller (the serving pool) can retry another shard
+    /// without cloning the pixels.
+    pub fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Response>, (Vec<f32>, &'static str)> {
+        if image.len() != self.image_len {
+            return Err((image, "wrong image length"));
+        }
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .try_send(Request { image, submitted: Instant::now(), reply })
-            .map_err(|e| anyhow!("queue full or server down: {e}"))?;
-        Ok(rx)
+        match self.tx.try_send(Msg::Req(Request { image, submitted: Instant::now(), reply })) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(Msg::Req(r))) => Err((r.image, "queue full")),
+            Err(mpsc::TrySendError::Disconnected(Msg::Req(r))) => Err((r.image, "server down")),
+            // we only ever send Msg::Req here
+            Err(_) => Err((Vec::new(), "server down")),
+        }
+    }
+
+    /// Expected flat image length (C*H*W) for this server.
+    pub fn image_len(&self) -> usize {
+        self.image_len
     }
 }
 
 /// A running server (batcher + worker thread).
 pub struct Server {
-    tx: Option<mpsc::SyncSender<Request>>,
+    tx: Option<mpsc::SyncSender<Msg>>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<ServerMetrics>,
-    stop: Arc<AtomicBool>,
     image_len: usize,
 }
 
@@ -114,17 +145,15 @@ impl Server {
     pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Server {
         let [c, h, w] = backend.input_shape();
         let image_len = c * h * w;
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
         let metrics = Arc::new(ServerMetrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
-        let s = stop.clone();
         let policy = cfg.policy;
         let handle = std::thread::Builder::new()
             .name("bmxnet-batcher".into())
-            .spawn(move || batcher_loop(rx, backend, policy, m, s))
+            .spawn(move || batcher_loop(rx, backend, policy, m))
             .expect("spawn batcher thread");
-        Server { tx: Some(tx), handle: Some(handle), metrics, stop, image_len }
+        Server { tx: Some(tx), handle: Some(handle), metrics, image_len }
     }
 
     pub fn client(&self) -> Client {
@@ -135,72 +164,88 @@ impl Server {
         self.metrics.snapshot()
     }
 
-    /// Stop accepting requests, drain the queue, join the worker and return
-    /// final metrics.  Safe to call with outstanding `Client` clones: the
-    /// batcher also watches a stop flag, not just sender disconnection.
+    /// Send the stop sentinel, let the batcher serve everything queued
+    /// before it (FIFO), join the worker and return final metrics.  Safe
+    /// to call with outstanding `Client` clones: the sentinel travels
+    /// in-band, so no flag polling and no reliance on sender disconnection.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.stop.store(true, Ordering::SeqCst);
-        self.tx.take(); // close our ingress handle
+        self.stop_and_join();
+        self.metrics.snapshot()
+    }
+
+    fn stop_and_join(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // Blocking send: if the queue is momentarily full the batcher
+            // is actively draining it, so space opens up; if the batcher
+            // is already gone the send fails — both are fine.
+            let _ = tx.send(Msg::Stop);
+        }
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
-        self.metrics.snapshot()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
 fn batcher_loop(
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Msg>,
     backend: Arc<dyn Backend>,
     policy: BatchPolicy,
     metrics: Arc<ServerMetrics>,
-    stop: Arc<AtomicBool>,
 ) {
     let [c, h, w] = backend.input_shape();
     let per = c * h * w;
+    let mut batch: Vec<Request> = Vec::new();
     loop {
-        // Wait for the first request of the next batch, polling the stop
-        // flag so shutdown works even while Client clones keep the channel
-        // alive.
-        let first = loop {
-            match rx.recv_timeout(IDLE_POLL) {
-                Ok(r) => break r,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::SeqCst) {
-                        // drain anything that raced in, then exit
-                        while let Ok(r) = rx.try_recv() {
-                            let mut batch = vec![r];
-                            dispatch(&backend, per, &mut batch, &metrics);
-                        }
-                        return;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
+        // Idle: block until the first request of the next batch arrives.
+        // No timeout and no flag polling — shutdown arrives in-band.
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Stop) | Err(_) => break,
         };
         let first_arrival = Instant::now();
-        let mut batch = vec![first];
-        // Coalesce until the policy says dispatch.
+        batch.push(first);
+        let mut stopping = false;
+        // Coalesce until the policy says dispatch; the straggler wait is
+        // exactly the remaining window, so sub-ms windows are honored.
         loop {
             let now = Instant::now();
             if policy.should_dispatch(batch.len(), first_arrival, now) {
                 break;
             }
             match rx.recv_timeout(policy.remaining(first_arrival, now)) {
-                Ok(r) => batch.push(r),
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Stop) => {
+                    stopping = true;
+                    break;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
             }
         }
+        dispatch(&backend, per, &mut batch, &metrics);
+        if stopping {
+            break;
+        }
+    }
+    // Drain requests that raced in behind the sentinel, in max_batch bites.
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Req(r) = msg {
+            batch.push(r);
+            if batch.len() >= policy.max_batch.max(1) {
+                dispatch(&backend, per, &mut batch, &metrics);
+            }
+        }
+    }
+    if !batch.is_empty() {
         dispatch(&backend, per, &mut batch, &metrics);
     }
 }
@@ -360,5 +405,37 @@ mod tests {
         }
         drop(client);
         server.shutdown();
+    }
+
+    #[test]
+    fn requests_submitted_before_shutdown_all_answered() {
+        // FIFO guarantee: everything enqueued ahead of the sentinel is
+        // served, even when shutdown() races with in-flight submissions.
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::from_micros(100) }),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+                queue_cap: 64,
+            },
+        );
+        let c = server.client();
+        let pending: Vec<_> = (0..12).map(|i| c.submit(img(i % 4)).unwrap()).collect();
+        drop(c);
+        let snap = server.shutdown();
+        for (i, rx) in pending.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().class, i % 4, "request {i} lost in shutdown");
+        }
+        assert_eq!(snap.requests, 12);
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::ZERO }),
+            ServerConfig::default(),
+        );
+        let rx = server.client().submit(img(3)).unwrap();
+        drop(server); // Drop path must also send the sentinel and join
+        assert_eq!(rx.recv().unwrap().class, 3);
     }
 }

@@ -19,8 +19,12 @@
 //!   `python/compile/aot.py` emits and executes them on the XLA CPU client.
 //! * [`train`] — the training orchestrator driving AOT `train_step`
 //!   artifacts (L2 graphs) with checkpoints, LR schedule and metrics.
-//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
-//!   worker, latency/throughput metrics.
+//! * [`coordinator`] — the in-process serving core: request router,
+//!   dynamic batcher, worker, latency/throughput metrics.
+//! * [`serve`] — the network-facing gateway: multi-model registry (lazy
+//!   load, LRU eviction, hot-swap), sharded engine pools with admission
+//!   control, and a std-only HTTP/1.1 server with Prometheus-style
+//!   `/metrics`.
 //!
 //! Python never runs on the request path: `make artifacts` emits HLO text +
 //! manifest once, and everything else is this crate.
@@ -43,6 +47,7 @@ pub mod model;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 

@@ -6,7 +6,8 @@
 //!   train    --model M [...]      drive the AOT train_step via PJRT
 //!   convert  --model M --ckpt F   f32 checkpoint -> packed .bmx (§2.2.3)
 //!   predict  --bmx F [...]        run the Rust xnor engine on synth data
-//!   serve    --bmx F [...]        demo serving loop under synthetic load
+//!   serve    --models-dir D [...] multi-model HTTP gateway (sharded pools)
+//!   synth-models --out D          write synthetic .bmx models (smoke/demo)
 //!   bench-gemm --figure 1|2|3     reproduce the paper's GEMM figures
 //!
 //! Run `bmxnet <cmd> --help` for per-command flags.
@@ -21,13 +22,13 @@ use repro::bench::harness::fmt_ms;
 use repro::bench::{
     fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure, GemmWorkload,
 };
-use repro::coordinator::{BatchPolicy, Server, ServerConfig};
+use repro::coordinator::BatchPolicy;
 use repro::data::Kind;
 use repro::model::bmx::{convert, BmxModel};
 use repro::model::ckpt::Checkpoint;
-use repro::model::inventory::{self, Stem};
 use repro::nn::Engine;
 use repro::runtime::{Manifest, Runtime};
+use repro::serve::{binary_names_for, Gateway, ModelRegistry, PoolConfig, RegistryConfig};
 use repro::train::{train, TrainConfig};
 
 fn main() {
@@ -47,6 +48,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "convert" => cmd_convert(&flags),
         "predict" => cmd_predict(&flags),
         "serve" => cmd_serve(&flags),
+        "synth-models" => cmd_synth_models(&flags),
         "bench-gemm" => cmd_bench_gemm(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -66,7 +68,10 @@ fn print_help() {
          \x20         [--out-ckpt F] [--metrics-csv F] [--seed S]\n\
          \x20 convert --model M --ckpt F --out F.bmx  pack Q-weights to 1 bit\n\
          \x20 predict --bmx F [--n N] [--batch B]     xnor engine accuracy+speed\n\
-         \x20 serve   --bmx F [--requests N] [--max-batch B] [--window-ms W]\n\
+         \x20 serve   [--models-dir D] [--workers N] [--port P] [--host H]\n\
+         \x20         [--max-batch B] [--window-us U] [--queue-cap Q]\n\
+         \x20         [--mem-budget-mb M]             multi-model HTTP gateway\n\
+         \x20 synth-models --out D [--seed S]         synthetic lenet_bin/_q4 .bmx\n\
          \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\n\
          common: --artifacts DIR (default ./artifacts)"
     );
@@ -121,6 +126,21 @@ impl Flags {
 
     fn bool(&self, key: &str) -> bool {
         matches!(self.str(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on flags this command does not read — otherwise a typo (or a
+    /// flag from an older CLI, e.g. the pre-gateway `serve --bmx`) would
+    /// be silently ignored.
+    fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.map.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for this command (allowed: {})",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        Ok(())
     }
 
     fn artifacts(&self) -> PathBuf {
@@ -188,32 +208,6 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Binary weight names for a manifest model (arch + metadata driven).
-fn binary_names_for(manifest: &Manifest, model: &str) -> Result<(Vec<String>, String)> {
-    let entry = manifest.model(model)?;
-    let meta = entry.bmx_meta();
-    let names = match entry.arch.as_str() {
-        "lenet" => {
-            let binary = matches!(
-                entry.raw.get("binary"),
-                Some(repro::model::json::Value::Bool(true))
-            );
-            if binary {
-                inventory::lenet(true).binary_names()
-            } else {
-                vec![]
-            }
-        }
-        "resnet18" => {
-            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap_or(64);
-            let fp = entry.fp_stages();
-            inventory::resnet18(width, entry.classes, Stem::Cifar, &fp).binary_names()
-        }
-        other => bail!("unknown arch {other}"),
-    };
-    Ok((names, meta))
-}
-
 fn cmd_convert(flags: &Flags) -> Result<()> {
     let model = flags.req("model")?;
     let ckpt_path = flags.req("ckpt")?;
@@ -272,43 +266,83 @@ fn cmd_predict(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// The multi-model HTTP serving gateway (DESIGN.md §Serving architecture).
+///
+/// Serves every model resolvable from `--models-dir` (packed `<name>.bmx`
+/// files and/or artifact-manifest entries), each sharded over `--workers`
+/// batcher threads, until the process is killed.
 fn cmd_serve(flags: &Flags) -> Result<()> {
-    let bmx = BmxModel::load(flags.req("bmx")?)?;
-    let engine = Arc::new(Engine::from_bmx(&bmx)?);
-    let requests = flags.usize("requests", 256)?;
-    let cfg = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: flags.usize("max-batch", 32)?,
-            window: Duration::from_millis(flags.usize("window-ms", 2)? as u64),
+    flags.reject_unknown(&[
+        "models-dir",
+        "workers",
+        "port",
+        "host",
+        "max-batch",
+        "window-us",
+        "queue-cap",
+        "mem-budget-mb",
+        "artifacts",
+    ])?;
+    let models_dir = flags
+        .str("models-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| flags.artifacts());
+    let cfg = RegistryConfig {
+        pool: PoolConfig {
+            workers: flags.usize("workers", 2)?,
+            policy: BatchPolicy {
+                max_batch: flags.usize("max-batch", 32)?,
+                window: Duration::from_micros(flags.usize("window-us", 2000)? as u64),
+            },
+            queue_cap: flags.usize("queue-cap", 256)?,
         },
-        queue_cap: flags.usize("queue-cap", 1024)?,
+        max_resident_bytes: flags.usize("mem-budget-mb", 0)? * (1 << 20),
+        ..RegistryConfig::new(models_dir)
     };
-    let [c, h, w] = engine.input_shape();
-    let kind = if [c, h, w] == [1, 28, 28] { Kind::Digits } else { Kind::Cifar };
-    let ds = kind.generate(requests, 11);
-    let server = Server::start(engine, cfg);
-    let client = server.client();
-    let t0 = Instant::now();
-    let pending: Vec<_> = (0..requests)
-        .map(|i| client.submit(ds.image(i).to_vec()).unwrap())
-        .collect();
-    let mut correct = 0usize;
-    for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv()?;
-        if resp.class == ds.labels[i] as usize {
-            correct += 1;
-        }
-    }
-    let wall = t0.elapsed();
-    drop(client);
-    let snap = server.shutdown();
+    let host = flags.str("host").unwrap_or("127.0.0.1").to_string();
+    let port = flags.usize("port", 8080)?;
+    let registry = Arc::new(ModelRegistry::new(cfg.clone()));
+    let available = registry.list();
+    let gateway = Gateway::start(registry, &format!("{host}:{port}"))?;
+    println!("listening on http://{}", gateway.addr());
     println!(
-        "{requests} requests in {}ms  ({:.0} req/s, acc {:.3})",
-        fmt_ms(wall),
-        requests as f64 / wall.as_secs_f64(),
-        correct as f64 / requests as f64
+        "models dir {:?}: {} available ({} workers/model, max_batch {}, window {:?})",
+        cfg.models_dir,
+        available.len(),
+        cfg.pool.workers.max(1),
+        cfg.pool.policy.max_batch,
+        cfg.pool.policy.window,
     );
-    println!("{}", snap.summary());
+    for m in &available {
+        println!("  {:<24} [{}]", m.name, m.source);
+    }
+    println!("try: curl http://{}/v1/models", gateway.addr());
+    // Models load lazily on first request; serve until the process dies.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// Write synthetic-weight `.bmx` models (a packed 1-bit LeNet and a 4-bit
+/// quantized one) so the serving gateway can be smoke-tested on checkouts
+/// without trained artifacts — `artifacts/` is gitignored, but
+/// `scripts/serve_smoke.sh` must run anywhere, CI included.
+fn cmd_synth_models(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["out", "seed"])?;
+    let out = PathBuf::from(flags.req("out")?);
+    std::fs::create_dir_all(&out).with_context(|| format!("create {out:?}"))?;
+    let seed = flags.usize("seed", 1)? as u64;
+    let bin = repro::model::bmx::synth_lenet(seed, 1)?;
+    bin.save(out.join("lenet_bin.bmx"))?;
+    let q4 = repro::model::bmx::synth_lenet(seed + 1, 4)?;
+    q4.save(out.join("lenet_q4.bmx"))?;
+    println!(
+        "wrote {:?} ({} B) and {:?} ({} B)",
+        out.join("lenet_bin.bmx"),
+        bin.payload_bytes(),
+        out.join("lenet_q4.bmx"),
+        q4.payload_bytes(),
+    );
     Ok(())
 }
 

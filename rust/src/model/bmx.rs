@@ -227,6 +227,24 @@ impl BmxModel {
     }
 }
 
+/// Build a loadable synthetic-weight LeNet model: 1-bit packed when
+/// `act_bit == 1`, else Eq. 1 `act_bit`-bit quantized (stored f32).
+///
+/// This is the one generator behind `bmxnet synth-models`, the registry
+/// unit tests and the gateway integration test — the meta JSON and the
+/// conversion call live here so the copies cannot drift.
+pub fn synth_lenet(seed: u64, act_bit: u32) -> Result<BmxModel> {
+    let inv = crate::model::inventory::lenet(true);
+    let names = inv.binary_names();
+    let ck = inv.synthetic_checkpoint(seed);
+    let meta = format!(r#"{{"arch": "lenet", "binary": true, "act_bit": {act_bit}}}"#);
+    if act_bit > 1 {
+        convert_kbit(&ck, &names, act_bit, &meta)
+    } else {
+        convert(&ck, &names, &meta)
+    }
+}
+
 /// The model converter (paper §2.2.3): pack the weights named in
 /// `binary_names` (Q-layer weights, first dim = output channels) to 1
 /// bit/weight; pass every other tensor through as f32.

@@ -81,6 +81,41 @@ impl Inventory {
     }
 }
 
+impl Inventory {
+    /// Deterministic synthetic checkpoint matching this inventory: every
+    /// parameter filled from a splitmix-style LCG of `seed`, with BN
+    /// variances forced positive and the `params.`/`state.` name prefixes
+    /// the converter expects.  This is how tests, benches and the serving
+    /// smoke path build loadable models without trained artifacts.
+    pub fn synthetic_checkpoint(&self, seed: u64) -> super::ckpt::Checkpoint {
+        let mut ck = super::ckpt::Checkpoint::new();
+        let mut s = seed.max(1);
+        for p in &self.params {
+            let n = p.numel();
+            let data: Vec<f32> = (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    let v = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                    v * 0.1
+                })
+                .collect();
+            let name = if p.name.starts_with("state.") {
+                p.name.clone()
+            } else {
+                format!("params.{}", p.name)
+            };
+            // variances must be positive
+            let data = if name.contains(".var") {
+                data.iter().map(|v| v.abs() + 0.5).collect()
+            } else {
+                data
+            };
+            ck.push_f32(&name, p.shape.clone(), data);
+        }
+        ck
+    }
+}
+
 fn bn(v: &mut Vec<ParamSpec>, name: &str, ch: usize) {
     v.push(ParamSpec::fp(format!("{name}.gamma"), vec![ch]));
     v.push(ParamSpec::fp(format!("{name}.beta"), vec![ch]));
@@ -223,6 +258,33 @@ mod tests {
     fn binary_packing_rounds_to_words() {
         let p = ParamSpec::bin("w", vec![3, 70]); // 70 bits -> 2 words
         assert_eq!(p.bmx_bytes(), 3 * 2 * 8);
+    }
+
+    #[test]
+    fn synthetic_checkpoint_is_deterministic_and_complete() {
+        let inv = lenet(true);
+        let a = inv.synthetic_checkpoint(7);
+        let b = inv.synthetic_checkpoint(7);
+        let c = inv.synthetic_checkpoint(8);
+        assert_eq!(a.len(), inv.params.len());
+        for ((na, sa, da), (nb, _, db)) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(na, nb);
+            assert_eq!(da.as_f32(), db.as_f32(), "{na} not deterministic");
+            assert_eq!(sa.iter().product::<usize>(), da.len());
+        }
+        let same: usize = a
+            .tensors
+            .iter()
+            .zip(&c.tensors)
+            .filter(|((_, _, da), (_, _, dc))| da.as_f32() == dc.as_f32())
+            .count();
+        assert!(same < a.len(), "seed ignored: all tensors identical");
+        // BN variances are strictly positive
+        for (name, _, data) in &a.tensors {
+            if name.contains(".var") {
+                assert!(data.as_f32().unwrap().iter().all(|&v| v > 0.0), "{name}");
+            }
+        }
     }
 
     #[test]

@@ -157,33 +157,10 @@ pub(crate) mod tests {
     use crate::model::inventory;
 
     /// Build a deterministic fake checkpoint matching the LeNet inventory.
+    /// (Thin wrapper over the public generator so artifact-free integration
+    /// tests can build the same models — see `Inventory::synthetic_checkpoint`.)
     pub(crate) fn fake_ckpt(binary: bool) -> Checkpoint {
-        let inv = inventory::lenet(binary);
-        let mut ck = Checkpoint::new();
-        let mut s = 1u64;
-        for p in &inv.params {
-            let n = p.numel();
-            let data: Vec<f32> = (0..n)
-                .map(|_| {
-                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
-                    let v = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
-                    v * 0.1
-                })
-                .collect();
-            let name = if p.name.starts_with("state.") {
-                p.name.clone()
-            } else {
-                format!("params.{}", p.name)
-            };
-            // variances must be positive
-            let data = if name.contains(".var") {
-                data.iter().map(|v| v.abs() + 0.5).collect()
-            } else {
-                data
-            };
-            ck.push_f32(&name, p.shape.clone(), data);
-        }
-        ck
+        inventory::lenet(binary).synthetic_checkpoint(1)
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Minimal HTTP/1.1 gateway over `std::net::TcpListener` (offline
+//! environment: no hyper/tokio — hand-rolled request parsing, keep-alive,
+//! thread-per-connection).
+//!
+//! Routes:
+//!
+//! * `POST /v1/models/{name}:classify` — body `{"image": [f32; C*H*W]}`;
+//!   200 with `{"model", "class", "score", "latency_us", "batch_size",
+//!   "shard"}`, 400 on malformed input, 404 on unknown model, **429 when
+//!   every pool shard's bounded queue is full** (admission control).
+//! * `GET /v1/models` — available + resident models.
+//! * `GET /metrics` — Prometheus-style text (see [`super::prom`]).
+//! * `GET /healthz` — liveness.
+//!
+//! Limits: bodies over [`MAX_BODY`] are rejected, chunked transfer
+//! encoding is not supported (501-adjacent 400), at most
+//! [`MAX_CONNECTIONS`] handler threads run at once (then immediate 503),
+//! and idle keep-alive connections are reaped on shutdown via a read
+//! timeout + stop flag.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::prom;
+use super::registry::ModelRegistry;
+use crate::model::json;
+
+/// Request body cap (a 3×32×32 image in long-form JSON is ~40 kB).
+pub const MAX_BODY: usize = 8 << 20;
+
+/// Cap on one request-line or header line — without it a client
+/// streaming newline-free bytes would grow the line buffer unboundedly.
+pub const MAX_LINE: usize = 8 << 10;
+
+/// How long a connection handler waits for the *first byte* of the next
+/// request before re-checking the gateway stop flag (bounds shutdown
+/// latency for idle keep-alive connections).
+const IDLE_TIMEOUT: Duration = Duration::from_millis(200);
+
+/// Read-timeout once a request has started arriving: a slow client may
+/// stall this long between segments of the request line, headers or body
+/// before the connection is dropped.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Cap on concurrent connection-handler threads ("bounded everything":
+/// past this, new connections get an immediate 503 instead of a thread).
+pub const MAX_CONNECTIONS: usize = 256;
+
+/// Decrements the live-connection gauge even if the handler panics.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A running gateway: accept loop + per-connection handler threads.
+pub struct Gateway {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Gateway {
+    /// Bind and start serving.  `addr` is `host:port`; port 0 picks an
+    /// ephemeral port — read the real one back from [`Gateway::addr`].
+    pub fn start(registry: Arc<ModelRegistry>, addr: &str) -> Result<Gateway> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conn_handles = Arc::new(Mutex::new(Vec::new()));
+        let s = stop.clone();
+        let ch = conn_handles.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("bmxnet-accept".into())
+            .spawn(move || accept_loop(listener, registry, s, ch))
+            .context("spawn accept thread")?;
+        Ok(Gateway { addr: local, stop, accept_handle: Some(accept_handle), conn_handles })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the listener, join every handler thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conn_handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        if self.accept_handle.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let active = Arc::new(AtomicUsize::new(0));
+    for incoming in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = incoming else { continue };
+        // connection-level admission: shed load before spawning a thread
+        if active.load(Ordering::Acquire) >= MAX_CONNECTIONS {
+            let mut s = stream;
+            let resp = HttpResponse::error(503, "connection limit reached, retry");
+            let _ = write_response(&mut s, &resp, false);
+            continue;
+        }
+        active.fetch_add(1, Ordering::AcqRel);
+        let guard = ConnGuard(active.clone());
+        let registry = registry.clone();
+        let stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("bmxnet-conn".into())
+            .spawn(move || {
+                let _guard = guard;
+                let _ = handle_connection(stream, &registry, &stop);
+            });
+        let mut g = conns.lock().unwrap();
+        if let Ok(h) = handle {
+            g.push(h);
+        }
+        // spawn failure: `guard` was moved into the closure only on
+        // success; on Err the closure is dropped, releasing the slot.
+        // reap finished handlers so the vec stays bounded under churn
+        g.retain(|h| !h.is_finished());
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    registry: &ModelRegistry,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // reader and writer are dup'd fds over one socket, so a timeout set on
+    // `writer` governs `reader`'s reads too.
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        // Idle gap between requests: short timeout, poll the stop flag.
+        writer.set_read_timeout(Some(IDLE_TIMEOUT))?;
+        match reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => return Ok(()), // clean EOF
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(_) => return Ok(()),
+        }
+        // A request has started: allow slow clients the full budget.
+        writer.set_read_timeout(Some(REQUEST_TIMEOUT))?;
+        match read_request(&mut reader) {
+            Ok(Some(req)) => {
+                let keep_alive = req.keep_alive;
+                let resp = route(registry, &req);
+                write_response(&mut writer, &resp, keep_alive)?;
+                if !keep_alive {
+                    return Ok(());
+                }
+            }
+            Ok(None) => return Ok(()), // clean EOF between requests
+            Err(ReadError::Idle) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Err(ReadError::Bad(msg)) => {
+                let _ = write_response(&mut writer, &HttpResponse::error(400, &msg), false);
+                return Ok(());
+            }
+            Err(ReadError::Io(_)) => return Ok(()),
+        }
+    }
+}
+
+/// Why reading one request off the wire failed.
+enum ReadError {
+    /// Read timeout with no bytes consumed — poll the stop flag and retry.
+    Idle,
+    /// Client spoke malformed or unsupported HTTP (answer 400, close).
+    Bad(String),
+    /// Connection-level failure (close silently).
+    Io(std::io::Error),
+}
+
+struct HttpRequest {
+    method: String,
+    /// Path with any query string stripped.
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// `Ok(None)` = clean EOF before a request; see [`ReadError`] otherwise.
+type ReadResult = std::result::Result<Option<HttpRequest>, ReadError>;
+
+/// `read_line` bounded by [`MAX_LINE`]: errors with `InvalidData` when a
+/// line (sans terminator) would exceed the cap, instead of growing the
+/// buffer for as long as the peer keeps sending newline-free bytes.
+fn read_line_capped<R: BufRead>(reader: &mut R, line: &mut String) -> std::io::Result<usize> {
+    let n = (&mut *reader).take((MAX_LINE + 2) as u64).read_line(line)?;
+    if line.len() > MAX_LINE && !line.ends_with('\n') {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "line exceeds MAX_LINE"));
+    }
+    Ok(n)
+}
+
+/// Parse one request (request line, headers, Content-Length body).
+/// Generic over the reader so the parser is unit-testable off-socket.
+fn read_request<R: BufRead>(reader: &mut R) -> ReadResult {
+    let mut line = String::new();
+    match read_line_capped(reader, &mut line) {
+        Ok(0) => return Ok(None), // EOF before a request
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::InvalidData => {
+            return Err(ReadError::Bad("request line too long".to_string()))
+        }
+        Err(e) if is_timeout(&e) && line.is_empty() => return Err(ReadError::Idle),
+        Err(e) => return Err(ReadError::Io(e)),
+    }
+    let line_t = line.trim_end();
+    let mut parts = line_t.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1").to_string();
+    if method.is_empty() || target.is_empty() {
+        return Err(ReadError::Bad(format!("malformed request line {line_t:?}")));
+    }
+    let mut headers: BTreeMap<String, String> = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        match read_line_capped(reader, &mut h) {
+            Ok(0) => return Err(ReadError::Bad("unexpected EOF in headers".to_string())),
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::InvalidData => {
+                return Err(ReadError::Bad("header line too long".to_string()))
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+        if headers.len() > 100 {
+            return Err(ReadError::Bad("too many headers".to_string()));
+        }
+    }
+    if headers
+        .get("transfer-encoding")
+        .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(ReadError::Bad("chunked transfer encoding not supported".to_string()));
+    }
+    let content_len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| ReadError::Bad(format!("bad content-length {v:?}")))?,
+    };
+    if content_len > MAX_BODY {
+        return Err(ReadError::Bad(format!("body of {content_len} bytes exceeds cap {MAX_BODY}")));
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body).map_err(ReadError::Io)?;
+    }
+    let http10 = version.eq_ignore_ascii_case("HTTP/1.0");
+    let keep_alive = match headers.get("connection").map(|s| s.to_ascii_lowercase()).as_deref() {
+        Some("close") => false,
+        Some("keep-alive") => true,
+        _ => !http10,
+    };
+    let path = target.split('?').next().unwrap_or("").to_string();
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+}
+
+struct HttpResponse {
+    status: u16,
+    content_type: &'static str,
+    body: Vec<u8>,
+    retry_after: bool,
+}
+
+impl HttpResponse {
+    fn json(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            retry_after: false,
+        }
+    }
+
+    fn text(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+            retry_after: false,
+        }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, format!("{{\"error\": {}}}", json_string(msg)))
+    }
+}
+
+fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+fn write_response(w: &mut TcpStream, r: &HttpResponse, keep_alive: bool) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
+        r.status,
+        status_reason(r.status),
+        r.content_type,
+        r.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    if r.retry_after {
+        head.push_str("retry-after: 1\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&r.body)?;
+    w.flush()
+}
+
+/// Serialize a string as a JSON string literal (quotes included).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+const CLASSIFY_PREFIX: &str = "/v1/models/";
+const CLASSIFY_SUFFIX: &str = ":classify";
+
+fn route(registry: &ModelRegistry, req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/models") => list_models(registry),
+        ("GET", "/metrics") => HttpResponse::text(200, prom::render(registry)),
+        ("GET", "/healthz") => HttpResponse::json(200, "{\"status\": \"ok\"}".to_string()),
+        ("POST", path)
+            if path.starts_with(CLASSIFY_PREFIX) && path.ends_with(CLASSIFY_SUFFIX) =>
+        {
+            let name = &path[CLASSIFY_PREFIX.len()..path.len() - CLASSIFY_SUFFIX.len()];
+            classify(registry, name, &req.body)
+        }
+        ("GET" | "POST", _) => {
+            HttpResponse::error(404, &format!("no route for {} {}", req.method, req.path))
+        }
+        _ => HttpResponse::error(405, &format!("method {} not allowed", req.method)),
+    }
+}
+
+fn list_models(registry: &ModelRegistry) -> HttpResponse {
+    let items: Vec<String> = registry
+        .list()
+        .iter()
+        .map(|m| {
+            format!(
+                "{{\"name\": {}, \"source\": {}, \"loaded\": {}, \"resident_bytes\": {}}}",
+                json_string(&m.name),
+                json_string(m.source),
+                m.loaded,
+                m.resident_bytes,
+            )
+        })
+        .collect();
+    HttpResponse::json(200, format!("{{\"models\": [{}]}}", items.join(", ")))
+}
+
+fn classify(registry: &ModelRegistry, name: &str, body: &[u8]) -> HttpResponse {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return HttpResponse::error(400, "body is not UTF-8");
+    };
+    let parsed = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return HttpResponse::error(400, &format!("bad JSON body: {e}")),
+    };
+    let Some(image_v) = parsed.get("image").and_then(|v| v.as_array()) else {
+        return HttpResponse::error(400, "body must be {\"image\": [f32; C*H*W]}");
+    };
+    let mut image = Vec::with_capacity(image_v.len());
+    for v in image_v {
+        match v.as_f64() {
+            Some(f) => image.push(f as f32),
+            None => return HttpResponse::error(400, "\"image\" must contain only numbers"),
+        }
+    }
+    let model = match registry.get(name) {
+        Ok(m) => m,
+        Err(e) => {
+            // a name the registry could resolve but failed to load is a
+            // server-side fault (500), not a client-side unknown (404)
+            let known = registry.list().iter().any(|m| m.name == name);
+            let status = if known { 500 } else { 404 };
+            return HttpResponse::error(
+                status,
+                &format!("model {name:?} unavailable: {e:#}"),
+            );
+        }
+    };
+    if image.len() != model.pool.image_len() {
+        return HttpResponse::error(
+            400,
+            &format!(
+                "model {name:?} expects {} floats, got {}",
+                model.pool.image_len(),
+                image.len()
+            ),
+        );
+    }
+    let pending = match model.pool.submit(image) {
+        Ok(p) => p,
+        Err(_) => {
+            // every shard queue full: bounded-queue fast rejection
+            let mut r = HttpResponse::error(429, &format!("model {name:?} at capacity, retry"));
+            r.retry_after = true;
+            return r;
+        }
+    };
+    let shard = pending.shard();
+    match pending.wait() {
+        Ok(resp) => HttpResponse::json(
+            200,
+            format!(
+                "{{\"model\": {}, \"class\": {}, \"score\": {:.6}, \"latency_us\": {}, \
+                 \"batch_size\": {}, \"shard\": {}}}",
+                json_string(name),
+                resp.class,
+                resp.score,
+                resp.latency.as_micros(),
+                resp.batch_size,
+                shard,
+            ),
+        ),
+        Err(e) => HttpResponse::error(500, &format!("engine dropped the request: {e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> ReadResult {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_keepalive_default() {
+        let r = req("GET /v1/models HTTP/1.1\r\nhost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/models");
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_and_connection_close() {
+        let r = req(
+            "POST /v1/models/m:classify HTTP/1.1\r\ncontent-length: 4\r\n\
+             connection: close\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"abcd");
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn query_string_is_stripped() {
+        let r = req("GET /metrics?x=1 HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.path, "/metrics");
+    }
+
+    #[test]
+    fn eof_is_none_and_garbage_is_bad() {
+        assert!(matches!(req(""), Ok(None)));
+        assert!(matches!(req("\r\n\r\n"), Err(ReadError::Bad(_))));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
+            Err(ReadError::Bad(_))
+        ));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            Err(ReadError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_body_rejected_before_reading() {
+        let r = req(&format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1));
+        assert!(matches!(r, Err(ReadError::Bad(_))));
+    }
+
+    #[test]
+    fn overlong_lines_rejected() {
+        let long_target = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE));
+        assert!(matches!(req(&long_target), Err(ReadError::Bad(_))));
+        let long_header = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "b".repeat(MAX_LINE));
+        assert!(matches!(req(&long_header), Err(ReadError::Bad(_))));
+        // a line just under the cap still parses
+        let ok_header = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "c".repeat(1024));
+        assert!(req(&ok_header).unwrap().is_some());
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("plain"), "\"plain\"");
+        assert_eq!(json_string("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn classify_path_name_extraction() {
+        let path = "/v1/models/lenet_bin:classify";
+        assert!(path.starts_with(CLASSIFY_PREFIX) && path.ends_with(CLASSIFY_SUFFIX));
+        let name = &path[CLASSIFY_PREFIX.len()..path.len() - CLASSIFY_SUFFIX.len()];
+        assert_eq!(name, "lenet_bin");
+    }
+}

@@ -1,0 +1,38 @@
+//! The network-facing serving gateway: multi-model, multi-worker, real TCP.
+//!
+//! Where [`crate::coordinator`] is one in-process batching loop over one
+//! engine, this subsystem is the deployment story the paper motivates
+//! (§4.2, binary models under real-world load on commodity CPUs):
+//!
+//! ```text
+//!   HTTP/1.1 over TcpListener          [`http::Gateway`]
+//!        │  POST /v1/models/{name}:classify
+//!        ▼
+//!   name → model resolution            [`registry::ModelRegistry`]
+//!        │  lazy load · LRU byte budget · hot-swap on file change
+//!        ▼
+//!   least-depth shard routing          [`pool::ModelPool`]
+//!        │  bounded queues → fast 429 rejection
+//!        ▼
+//!   dynamic batcher × N shards         [`crate::coordinator::Server`]
+//!        │  one shared Arc<Engine>
+//!        ▼
+//!   xnor/popcount engine forward       [`crate::nn::Engine`]
+//! ```
+//!
+//! Everything is std-only (threads + `TcpListener`; no tokio/hyper in the
+//! offline environment).  `GET /metrics` exposes per-model request counts,
+//! batch-size histograms and latency quantiles aggregated across shards
+//! ([`prom`]); `GET /v1/models` lists what the registry can serve.
+//! Architecture rationale: DESIGN.md §Serving architecture.
+
+pub mod http;
+pub mod pool;
+pub mod prom;
+pub mod registry;
+
+pub use http::Gateway;
+pub use pool::{ModelPool, PendingResponse, PoolConfig};
+pub use registry::{
+    binary_names_for, LoadedModel, ModelInfo, ModelRegistry, ModelStatus, RegistryConfig,
+};

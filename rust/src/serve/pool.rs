@@ -1,0 +1,324 @@
+//! Sharded engine pool: one model, N independent batcher workers.
+//!
+//! Every shard is a [`crate::coordinator::Server`] (its own bounded ingress
+//! queue + batcher thread) over **one shared** `Arc<dyn Backend>` — the
+//! engine is loaded once and referenced by all shards, which is exactly why
+//! [`crate::coordinator::Backend`] is object-safe.  Routing is least-queue-
+//! depth with a round-robin tiebreak; admission control is the per-shard
+//! bounded queue: when every shard is full the pool rejects immediately
+//! (the gateway turns that into HTTP 429) instead of queueing unboundedly.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::{
+    Backend, BatchPolicy, Client, MetricsSnapshot, Response, Server, ServerConfig,
+};
+
+/// Pool construction parameters.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker shards (each owns a batcher thread); clamped to >= 1.
+    pub workers: usize,
+    /// Batch formation policy, applied per shard.
+    pub policy: BatchPolicy,
+    /// Ingress queue bound per shard (admission control).
+    pub queue_cap: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { workers: 2, policy: BatchPolicy::default(), queue_cap: 256 }
+    }
+}
+
+struct Shard {
+    server: Server,
+    client: Client,
+    /// Requests accepted by this shard and not yet delivered to a waiter.
+    depth: Arc<AtomicUsize>,
+}
+
+/// A model sharded across N batcher workers.
+pub struct ModelPool {
+    shards: Vec<Shard>,
+    cursor: AtomicUsize,
+    image_len: usize,
+    /// Requests refused at admission (every shard queue full).
+    rejected: AtomicU64,
+}
+
+/// An accepted request: the response channel plus the shard bookkeeping.
+/// Dropping it (with or without waiting) releases the queue-depth slot.
+pub struct PendingResponse {
+    rx: mpsc::Receiver<Response>,
+    depth: Arc<AtomicUsize>,
+    shard: usize,
+}
+
+impl PendingResponse {
+    /// Which shard accepted the request (routing observability).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+}
+
+impl Drop for PendingResponse {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl ModelPool {
+    /// Start `cfg.workers` shards over one shared backend.
+    pub fn start(backend: Arc<dyn Backend>, cfg: &PoolConfig) -> ModelPool {
+        let workers = cfg.workers.max(1);
+        let [c, h, w] = backend.input_shape();
+        let image_len = c * h * w;
+        let shards = (0..workers)
+            .map(|_| {
+                let server = Server::start(
+                    backend.clone(),
+                    ServerConfig { policy: cfg.policy, queue_cap: cfg.queue_cap.max(1) },
+                );
+                let client = server.client();
+                Shard { server, client, depth: Arc::new(AtomicUsize::new(0)) }
+            })
+            .collect();
+        ModelPool { shards, cursor: AtomicUsize::new(0), image_len, rejected: AtomicU64::new(0) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Expected flat image length (C*H*W).
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    /// Requests currently accepted but not yet delivered, across shards.
+    pub fn depth(&self) -> usize {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Route a request: shards ordered by queue depth (round-robin cursor
+    /// breaks ties), first shard with queue space wins.  Errs immediately
+    /// when the image is malformed or every shard queue is full.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse> {
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "image must have {} floats, got {}",
+            self.image_len,
+            image.len()
+        );
+        let n = self.shards.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        let mut order: Vec<usize> = (0..n).map(|i| (start + i) % n).collect();
+        // stable sort: equal depths keep round-robin order
+        order.sort_by_key(|&i| self.shards[i].depth.load(Ordering::Acquire));
+        let mut img = image;
+        for &idx in &order {
+            let shard = &self.shards[idx];
+            match shard.client.try_submit(img) {
+                Ok(rx) => {
+                    shard.depth.fetch_add(1, Ordering::AcqRel);
+                    return Ok(PendingResponse { rx, depth: shard.depth.clone(), shard: idx });
+                }
+                Err((back, _why)) => img = back,
+            }
+        }
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(anyhow!("model at capacity: all {n} shard queues full"))
+    }
+
+    /// Blocking classify through the router.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
+        self.submit(image)?.wait()
+    }
+
+    /// Aggregate metrics across shards (losslessly merged percentiles),
+    /// with admission rejections folded into `rejected`.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let snaps: Vec<MetricsSnapshot> = self.shard_snapshots();
+        let mut merged = MetricsSnapshot::merge(snaps.iter());
+        merged.rejected += self.rejected.load(Ordering::Relaxed);
+        merged
+    }
+
+    /// Per-shard metrics, in shard order.
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|s| s.server.metrics()).collect()
+    }
+
+    /// Stop every shard (each drains its queue first) and return the
+    /// merged final metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        let rejected = self.rejected.load(Ordering::Relaxed);
+        let snaps: Vec<MetricsSnapshot> = self
+            .shards
+            .into_iter()
+            .map(|s| {
+                let Shard { server, client, depth: _ } = s;
+                drop(client);
+                server.shutdown()
+            })
+            .collect();
+        let mut merged = MetricsSnapshot::merge(snaps.iter());
+        merged.rejected += rejected;
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Mock backend: class = index of max pixel value; counts forwards.
+    struct Mock {
+        delay: Duration,
+        calls: AtomicUsize,
+    }
+
+    impl Mock {
+        fn slow(ms: u64) -> Self {
+            Mock { delay: Duration::from_millis(ms), calls: AtomicUsize::new(0) }
+        }
+    }
+
+    impl Backend for Mock {
+        fn input_shape(&self) -> [usize; 3] {
+            [1, 2, 2]
+        }
+
+        fn classify_batch(&self, images: &[f32], batch: usize) -> Result<Vec<(usize, f32)>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.delay);
+            Ok(images
+                .chunks(4)
+                .take(batch)
+                .map(|img| {
+                    let (i, &v) = img
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .unwrap();
+                    (i, v)
+                })
+                .collect())
+        }
+    }
+
+    fn img(hot: usize) -> Vec<f32> {
+        let mut v = vec![0.0; 4];
+        v[hot] = 1.0;
+        v
+    }
+
+    #[test]
+    fn shards_share_one_backend_without_reloading() {
+        let backend = Arc::new(Mock::slow(0));
+        let before = Arc::strong_count(&backend);
+        let cfg = PoolConfig { workers: 3, ..Default::default() };
+        let pool = ModelPool::start(backend.clone(), &cfg);
+        // 3 shards hold the same Arc — no per-shard copy of the engine
+        assert_eq!(Arc::strong_count(&backend), before + 3);
+        for i in 0..4 {
+            assert_eq!(pool.classify(img(i % 4)).unwrap().class, i % 4);
+        }
+        assert!(backend.calls.load(Ordering::Relaxed) >= 1, "shared backend never invoked");
+        let snap = pool.shutdown();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(Arc::strong_count(&backend), before);
+    }
+
+    #[test]
+    fn least_depth_routing_spreads_load() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(20)),
+            &PoolConfig {
+                workers: 2,
+                policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+                queue_cap: 8,
+            },
+        );
+        let a = pool.submit(img(0)).unwrap();
+        let b = pool.submit(img(1)).unwrap();
+        // the second submit must route away from the busy shard
+        assert_ne!(a.shard(), b.shard(), "least-depth routing sent both to one shard");
+        assert_eq!(pool.depth(), 2);
+        assert_eq!(a.wait().unwrap().class, 0);
+        assert_eq!(b.wait().unwrap().class, 1);
+        assert_eq!(pool.depth(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn rejects_when_every_shard_queue_is_full() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(30)),
+            &PoolConfig {
+                workers: 2,
+                policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+                queue_cap: 1,
+            },
+        );
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..16 {
+            match pool.submit(img(i % 4)) {
+                Ok(p) => accepted.push((i % 4, p)),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "16-burst over 2 shards with queue_cap=1 never rejected");
+        assert!(accepted.len() >= 2, "admission rejected everything");
+        // accepted requests still complete correctly
+        let n_accepted = accepted.len();
+        for (want, p) in accepted {
+            assert_eq!(p.wait().unwrap().class, want);
+        }
+        let snap = pool.shutdown();
+        assert_eq!(snap.rejected, rejected as u64, "admission rejects must be counted");
+        assert_eq!(snap.requests, n_accepted as u64);
+    }
+
+    #[test]
+    fn wrong_image_length_is_rejected_up_front() {
+        let pool = ModelPool::start(Arc::new(Mock::slow(0)), &PoolConfig::default());
+        assert!(pool.submit(vec![0.0; 3]).is_err());
+        let snap = pool.shutdown();
+        assert_eq!(snap.requests, 0);
+    }
+
+    #[test]
+    fn snapshot_merges_across_shards() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(5)),
+            &PoolConfig {
+                workers: 2,
+                policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(2) },
+                queue_cap: 64,
+            },
+        );
+        let pending: Vec<_> = (0..12).map(|i| pool.submit(img(i % 4)).unwrap()).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let per_shard = pool.shard_snapshots();
+        assert!(per_shard.iter().all(|s| s.requests > 0), "a shard sat idle: {per_shard:?}");
+        let merged = pool.snapshot();
+        assert_eq!(merged.requests, 12);
+        let hist_total: u64 =
+            merged.batch_hist.iter().map(|&(size, count)| size as u64 * count).sum();
+        assert_eq!(hist_total, merged.requests);
+        pool.shutdown();
+    }
+}

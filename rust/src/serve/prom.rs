@@ -1,0 +1,144 @@
+//! Prometheus-style text rendering of per-model serving metrics.
+//!
+//! One sample family per line group, all labels `model="<name>"` (plus
+//! `size=` for the batch histogram and `quantile=` for latencies).  The
+//! invariant consumers can rely on: for every model,
+//! `sum over size of (size * bmxnet_batch_size_total)` equals
+//! `bmxnet_requests_total` — asserted by `tests/serve_gateway.rs`.
+
+use crate::coordinator::MetricsSnapshot;
+
+use super::registry::{ModelInfo, ModelRegistry};
+
+fn push_family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Escape a label value per the Prometheus text exposition format.
+fn label_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render the whole registry: per-model counters, batch-size histogram
+/// and latency quantiles, aggregated across each model's pool shards.
+pub fn render(registry: &ModelRegistry) -> String {
+    let loaded = registry.loaded_models();
+    let rows: Vec<(ModelInfo, MetricsSnapshot, usize)> = loaded
+        .iter()
+        .map(|m| (m.info.clone(), m.pool.snapshot(), m.pool.workers()))
+        .collect();
+
+    let mut out = String::new();
+    push_family(&mut out, "bmxnet_models_loaded", "gauge", "Resident models in the registry.");
+    out.push_str(&format!("bmxnet_models_loaded {}\n", rows.len()));
+
+    push_family(
+        &mut out,
+        "bmxnet_resident_bytes",
+        "gauge",
+        "Packed payload bytes of a resident model.",
+    );
+    for (info, _, _) in &rows {
+        out.push_str(&format!(
+            "bmxnet_resident_bytes{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            info.resident_bytes
+        ));
+    }
+
+    push_family(&mut out, "bmxnet_pool_workers", "gauge", "Shards serving a model.");
+    for (info, _, workers) in &rows {
+        out.push_str(&format!(
+            "bmxnet_pool_workers{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            workers
+        ));
+    }
+
+    push_family(&mut out, "bmxnet_requests_total", "counter", "Requests answered per model.");
+    for (info, snap, _) in &rows {
+        out.push_str(&format!(
+            "bmxnet_requests_total{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            snap.requests
+        ));
+    }
+
+    push_family(
+        &mut out,
+        "bmxnet_rejected_total",
+        "counter",
+        "Requests dropped by admission control or engine failure.",
+    );
+    for (info, snap, _) in &rows {
+        out.push_str(&format!(
+            "bmxnet_rejected_total{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            snap.rejected
+        ));
+    }
+
+    push_family(&mut out, "bmxnet_batches_total", "counter", "Engine forward passes per model.");
+    for (info, snap, _) in &rows {
+        out.push_str(&format!(
+            "bmxnet_batches_total{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            snap.batches
+        ));
+    }
+
+    push_family(
+        &mut out,
+        "bmxnet_batch_size_total",
+        "counter",
+        "Batches dispatched at each batch size; sum(size*count) == requests.",
+    );
+    for (info, snap, _) in &rows {
+        for &(size, count) in &snap.batch_hist {
+            out.push_str(&format!(
+                "bmxnet_batch_size_total{{model=\"{}\",size=\"{}\"}} {}\n",
+                label_escape(&info.name),
+                size,
+                count
+            ));
+        }
+    }
+
+    push_family(
+        &mut out,
+        "bmxnet_latency_us",
+        "summary",
+        "Request latency quantiles in microseconds (queue + compute).",
+    );
+    for (info, snap, _) in &rows {
+        for (q, v) in [(0.5, snap.p50), (0.95, snap.p95), (0.99, snap.p99)] {
+            out.push_str(&format!(
+                "bmxnet_latency_us{{model=\"{}\",quantile=\"{}\"}} {}\n",
+                label_escape(&info.name),
+                q,
+                v.as_micros()
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::RegistryConfig;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(label_escape("plain"), "plain");
+        assert_eq!(label_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn empty_registry_renders_zero_gauge() {
+        let reg = ModelRegistry::new(RegistryConfig::new(std::env::temp_dir().join("nope")));
+        let text = render(&reg);
+        assert!(text.contains("bmxnet_models_loaded 0\n"), "{text}");
+        assert!(text.contains("# TYPE bmxnet_requests_total counter"), "{text}");
+    }
+}

@@ -1,0 +1,478 @@
+//! Multi-model registry: name → sharded pool, loaded lazily from a
+//! models directory.
+//!
+//! Two source kinds resolve a model name, in order:
+//!
+//! 1. `<models_dir>/<name>.bmx` — a packed deployment model (what
+//!    `bmxnet convert` writes);
+//! 2. a `manifest.json` entry — the BMXC init/trained checkpoint named by
+//!    the artifact manifest, converted on first request (the same
+//!    arch-driven packing as `bmxnet convert`).
+//!
+//! Residency policy: models load on first request; a byte budget evicts
+//! the least-recently-used pool when exceeded (in-flight requests keep
+//! the evicted pool alive through its `Arc` until they drain).  Hot swap:
+//! every lookup fingerprints the source file (mtime + length), so
+//! overwriting a `.bmx` swaps the model in on the next request with no
+//! gateway restart.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+use super::pool::{ModelPool, PoolConfig};
+use crate::model::bmx::{convert, convert_kbit, BmxModel};
+use crate::model::ckpt::Checkpoint;
+use crate::model::inventory::{self, Stem};
+use crate::model::json::{self, Value};
+use crate::nn::Engine;
+use crate::runtime::Manifest;
+
+/// Binary weight names + embedded `.bmx` metadata for a manifest model
+/// (arch + metadata driven).  Shared by `bmxnet convert` and the
+/// registry's manifest-backed loading path.
+pub fn binary_names_for(manifest: &Manifest, model: &str) -> Result<(Vec<String>, String)> {
+    let entry = manifest.model(model)?;
+    let meta = entry.bmx_meta();
+    let names = match entry.arch.as_str() {
+        "lenet" => {
+            let binary = matches!(entry.raw.get("binary"), Some(Value::Bool(true)));
+            if binary {
+                inventory::lenet(true).binary_names()
+            } else {
+                vec![]
+            }
+        }
+        "resnet18" => {
+            let width = entry.raw.get("width").and_then(|v| v.as_usize()).unwrap_or(64);
+            let fp = entry.fp_stages();
+            inventory::resnet18(width, entry.classes, Stem::Cifar, &fp).binary_names()
+        }
+        other => bail!("unknown arch {other}"),
+    };
+    Ok((names, meta))
+}
+
+/// Registry construction parameters.
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Directory holding `<name>.bmx` files and/or an artifact manifest.
+    pub models_dir: PathBuf,
+    /// Pool shape applied to every model.
+    pub pool: PoolConfig,
+    /// LRU eviction budget over resident packed payload bytes; 0 = no cap.
+    pub max_resident_bytes: usize,
+    /// How stale a hot-swap fingerprint check may be: the source file is
+    /// re-stat'ed at most this often (the stat runs under the registry
+    /// lock, so per-request stats would serialize all models on one
+    /// syscall).  `Duration::ZERO` re-checks on every lookup.
+    pub fingerprint_ttl: Duration,
+}
+
+impl RegistryConfig {
+    pub fn new(models_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            models_dir: models_dir.into(),
+            pool: PoolConfig::default(),
+            max_resident_bytes: 0,
+            fingerprint_ttl: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Static facts about a resident model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub arch: String,
+    pub input_shape: [usize; 3],
+    pub classes: usize,
+    /// Packed payload bytes (the LRU accounting unit).
+    pub resident_bytes: usize,
+}
+
+/// Identity of the bytes a model was loaded from (hot-swap detection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Fingerprint {
+    path: PathBuf,
+    mtime: Option<SystemTime>,
+    len: u64,
+}
+
+fn fingerprint_of(path: &Path) -> Option<Fingerprint> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some(Fingerprint { path: path.to_path_buf(), mtime: meta.modified().ok(), len: meta.len() })
+}
+
+/// A resident model: its pool plus the source identity.
+pub struct LoadedModel {
+    pub info: ModelInfo,
+    pub pool: ModelPool,
+    fingerprint: Fingerprint,
+}
+
+/// One row of [`ModelRegistry::list`].
+#[derive(Debug, Clone)]
+pub struct ModelStatus {
+    pub name: String,
+    /// "bmx" (a `<name>.bmx` file) or "manifest" (BMXC checkpoint entry).
+    pub source: &'static str,
+    pub loaded: bool,
+    pub resident_bytes: usize,
+}
+
+struct Entry {
+    model: Arc<LoadedModel>,
+    last_used: u64,
+    /// When the source fingerprint was last verified against disk.
+    checked_at: Instant,
+}
+
+struct Inner {
+    loaded: HashMap<String, Entry>,
+    /// Names with a load in flight (cold-start herd dedup).
+    loading: HashSet<String>,
+    clock: u64,
+}
+
+/// The serving gateway's model table.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    /// Signalled whenever a load finishes (success or failure).
+    load_done: Condvar,
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && name.len() <= 128
+        && !name.contains("..")
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'));
+    anyhow::ensure!(ok, "invalid model name {name:?}");
+    Ok(())
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: RegistryConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(Inner {
+                loaded: HashMap::new(),
+                loading: HashSet::new(),
+                clock: 0,
+            }),
+            load_done: Condvar::new(),
+        }
+    }
+
+    pub fn models_dir(&self) -> &Path {
+        &self.cfg.models_dir
+    }
+
+    /// Resolve a model, loading (or hot-swapping) it if needed.
+    ///
+    /// The slow part (checkpoint read + conversion + engine build) runs
+    /// **outside** the registry lock, so already-loaded models keep
+    /// serving during a cold load.  A per-name `loading` marker dedupes
+    /// cold-start herds: the first requester loads, the rest wait on a
+    /// condvar and then hit the cache.
+    pub fn get(&self, name: &str) -> Result<Arc<LoadedModel>> {
+        validate_name(name)?;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            g.clock += 1;
+            let clock = g.clock;
+            if let Some(e) = g.loaded.get_mut(name) {
+                // hot-swap detection, rate-limited to one stat per TTL.
+                // checked_at only advances when a stat actually ran, so
+                // steady traffic cannot postpone the re-check forever.
+                if e.checked_at.elapsed() < self.cfg.fingerprint_ttl {
+                    e.last_used = clock;
+                    return Ok(e.model.clone());
+                }
+                if fingerprint_of(&e.model.fingerprint.path).as_ref()
+                    == Some(&e.model.fingerprint)
+                {
+                    e.checked_at = Instant::now();
+                    e.last_used = clock;
+                    return Ok(e.model.clone());
+                }
+                // source rewritten or deleted: drop the stale pool, reload
+                g.loaded.remove(name);
+            }
+            if !g.loading.contains(name) {
+                break; // this thread becomes the loader
+            }
+            // someone else is loading this model; wait and re-check
+            g = self.load_done.wait(g).unwrap();
+        }
+        g.loading.insert(name.to_string());
+        drop(g);
+
+        let result = self.load_model(name);
+
+        let mut g = self.inner.lock().unwrap();
+        g.loading.remove(name);
+        g.clock += 1;
+        let clock = g.clock;
+        let out = result.map(|m| {
+            let loaded = Arc::new(m);
+            evict_to_fit(&mut g, self.cfg.max_resident_bytes, loaded.info.resident_bytes, name);
+            let entry =
+                Entry { model: loaded.clone(), last_used: clock, checked_at: Instant::now() };
+            g.loaded.insert(name.to_string(), entry);
+            loaded
+        });
+        drop(g);
+        self.load_done.notify_all();
+        out
+    }
+
+    /// All available model names (dir scan + manifest), with residency.
+    pub fn list(&self) -> Vec<ModelStatus> {
+        let mut names: BTreeMap<String, &'static str> = BTreeMap::new();
+        if let Ok(rd) = std::fs::read_dir(&self.cfg.models_dir) {
+            for entry in rd.flatten() {
+                let p = entry.path();
+                if p.extension().and_then(|s| s.to_str()) == Some("bmx") {
+                    if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                        names.insert(stem.to_string(), "bmx");
+                    }
+                }
+            }
+        }
+        if let Ok(man) = Manifest::load(&self.cfg.models_dir) {
+            for name in man.models.keys() {
+                names.entry(name.clone()).or_insert("manifest");
+            }
+        }
+        let g = self.inner.lock().unwrap();
+        names
+            .into_iter()
+            .map(|(name, source)| {
+                let resident = g.loaded.get(&name).map(|e| e.model.info.resident_bytes);
+                ModelStatus {
+                    loaded: resident.is_some(),
+                    resident_bytes: resident.unwrap_or(0),
+                    name,
+                    source,
+                }
+            })
+            .collect()
+    }
+
+    /// Resident models, sorted by name (the `/metrics` iteration order).
+    pub fn loaded_models(&self) -> Vec<Arc<LoadedModel>> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<_> = g.loaded.values().map(|e| e.model.clone()).collect();
+        v.sort_by(|a, b| a.info.name.cmp(&b.info.name));
+        v
+    }
+
+    /// Total packed bytes currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.loaded.values().map(|e| e.model.info.resident_bytes).sum()
+    }
+
+    fn load_model(&self, name: &str) -> Result<LoadedModel> {
+        let dir = &self.cfg.models_dir;
+        let bmx_path = dir.join(format!("{name}.bmx"));
+        let (bmx, fingerprint) = if bmx_path.is_file() {
+            let fp = fingerprint_of(&bmx_path)
+                .ok_or_else(|| anyhow!("cannot stat {bmx_path:?}"))?;
+            let bmx = BmxModel::load(&bmx_path).with_context(|| format!("load {bmx_path:?}"))?;
+            (bmx, fp)
+        } else {
+            let manifest = Manifest::load(dir).with_context(|| {
+                format!("model {name:?}: no {name}.bmx in {dir:?} and no usable manifest")
+            })?;
+            let entry = manifest.model(name)?;
+            let ckpt_path = manifest.path(&entry.init_ckpt);
+            let fp = fingerprint_of(&ckpt_path)
+                .ok_or_else(|| anyhow!("cannot stat {ckpt_path:?}"))?;
+            let ck = Checkpoint::load(&ckpt_path)
+                .with_context(|| format!("load {ckpt_path:?}"))?;
+            let (names, meta) = binary_names_for(&manifest, name)?;
+            let act_bit = entry.act_bit();
+            let bmx = if act_bit > 1 {
+                convert_kbit(&ck, &names, act_bit, &meta)?
+            } else {
+                convert(&ck, &names, &meta)?
+            };
+            (bmx, fp)
+        };
+        let resident_bytes = bmx.payload_bytes();
+        let arch = json::parse(&bmx.meta)
+            .ok()
+            .and_then(|v| v.get("arch").and_then(|a| a.as_str()).map(str::to_string))
+            .unwrap_or_else(|| "?".to_string());
+        let engine = Arc::new(Engine::from_bmx(&bmx).with_context(|| format!("model {name:?}"))?);
+        let info = ModelInfo {
+            name: name.to_string(),
+            arch,
+            input_shape: engine.input_shape(),
+            classes: engine.classes(),
+            resident_bytes,
+        };
+        let pool = ModelPool::start(engine, &self.cfg.pool);
+        Ok(LoadedModel { info, pool, fingerprint })
+    }
+}
+
+/// Drop least-recently-used entries (never `keep`) until `incoming` fits
+/// under `budget`.  Evicted pools die when their last `Arc` drops, so
+/// requests already routed keep their answers.
+fn evict_to_fit(g: &mut Inner, budget: usize, incoming: usize, keep: &str) {
+    if budget == 0 {
+        return;
+    }
+    loop {
+        let resident: usize = g.loaded.values().map(|e| e.model.info.resident_bytes).sum();
+        if resident + incoming <= budget {
+            return;
+        }
+        let victim = g
+            .loaded
+            .iter()
+            .filter(|(n, _)| n.as_str() != keep)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(n, _)| n.clone());
+        match victim {
+            Some(n) => {
+                g.loaded.remove(&n);
+            }
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a loadable binary-LeNet `.bmx` (synthetic weights).
+    fn write_bin_model(dir: &Path, name: &str, seed: u64) -> usize {
+        let bmx = crate::model::bmx::synth_lenet(seed, 1).unwrap();
+        bmx.save(dir.join(format!("{name}.bmx"))).unwrap();
+        bmx.payload_bytes()
+    }
+
+    /// Write a loadable 4-bit LeNet `.bmx` (different payload size).
+    fn write_q4_model(dir: &Path, name: &str, seed: u64) -> usize {
+        let bmx = crate::model::bmx::synth_lenet(seed, 4).unwrap();
+        bmx.save(dir.join(format!("{name}.bmx"))).unwrap();
+        bmx.payload_bytes()
+    }
+
+    fn temp_dir(case: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bmx_registry_{}_{case}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn small_pool() -> PoolConfig {
+        PoolConfig { workers: 1, ..Default::default() }
+    }
+
+    /// One-worker pools, immediate fingerprint re-checks (the tests
+    /// rewrite model files and expect the very next lookup to hot-swap).
+    fn test_cfg(dir: &Path) -> RegistryConfig {
+        RegistryConfig {
+            pool: small_pool(),
+            fingerprint_ttl: Duration::ZERO,
+            ..RegistryConfig::new(dir)
+        }
+    }
+
+    #[test]
+    fn lazy_load_and_cached_lookup() {
+        let dir = temp_dir("lazy");
+        write_bin_model(&dir, "m1", 1);
+        let reg = ModelRegistry::new(test_cfg(&dir));
+        assert_eq!(reg.loaded_models().len(), 0, "must not load eagerly");
+        let a = reg.get("m1").unwrap();
+        assert_eq!(a.info.arch, "lenet");
+        assert_eq!(a.info.input_shape, [1, 28, 28]);
+        assert!(a.info.resident_bytes > 0);
+        let b = reg.get("m1").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_and_invalid_names_are_clean_errors() {
+        let dir = temp_dir("names");
+        let reg = ModelRegistry::new(test_cfg(&dir));
+        // (.err().expect: LoadedModel is not Debug, so no unwrap_err here)
+        let err = format!("{:#}", reg.get("nope").err().expect("unknown model must fail"));
+        assert!(err.contains("nope"), "error does not name the model: {err}");
+        assert!(reg.get("../../etc/passwd").is_err());
+        assert!(reg.get("").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hot_swap_on_source_change() {
+        let dir = temp_dir("swap");
+        let bin_bytes = write_bin_model(&dir, "m", 1);
+        let reg = ModelRegistry::new(test_cfg(&dir));
+        let a = reg.get("m").unwrap();
+        assert_eq!(a.info.resident_bytes, bin_bytes);
+        // overwrite with a different (larger, f32-stored) model file
+        let q4_bytes = write_q4_model(&dir, "m", 2);
+        assert_ne!(bin_bytes, q4_bytes);
+        let b = reg.get("m").unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "source changed but model not swapped");
+        assert_eq!(b.info.resident_bytes, q4_bytes);
+        // the old pool still answers for holders of the old Arc
+        assert!(a.pool.classify(vec![0.1; 784]).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let dir = temp_dir("lru");
+        let b1 = write_bin_model(&dir, "m1", 1);
+        let b2 = write_bin_model(&dir, "m2", 2);
+        let b3 = write_bin_model(&dir, "m3", 3);
+        // budget fits exactly two binary models
+        let reg = ModelRegistry::new(RegistryConfig {
+            max_resident_bytes: b1 + b2 + b3 / 2,
+            ..test_cfg(&dir)
+        });
+        reg.get("m1").unwrap();
+        reg.get("m2").unwrap();
+        assert_eq!(reg.loaded_models().len(), 2);
+        reg.get("m1").unwrap(); // refresh m1 so m2 is the LRU victim
+        reg.get("m3").unwrap();
+        let loaded: Vec<String> =
+            reg.loaded_models().iter().map(|m| m.info.name.clone()).collect();
+        assert_eq!(loaded, ["m1", "m3"], "LRU victim should have been m2");
+        assert!(reg.resident_bytes() <= b1 + b2 + b3 / 2);
+        // evicted model reloads on demand
+        reg.get("m2").unwrap();
+        assert!(reg.loaded_models().iter().any(|m| m.info.name == "m2"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn list_reports_dir_and_residency() {
+        let dir = temp_dir("list");
+        write_bin_model(&dir, "a", 1);
+        write_q4_model(&dir, "b", 2);
+        let reg = ModelRegistry::new(test_cfg(&dir));
+        let before = reg.list();
+        assert_eq!(before.len(), 2);
+        assert!(before.iter().all(|m| !m.loaded && m.source == "bmx"));
+        reg.get("b").unwrap();
+        let after = reg.list();
+        let b = after.iter().find(|m| m.name == "b").unwrap();
+        assert!(b.loaded && b.resident_bytes > 0);
+        assert!(!after.iter().find(|m| m.name == "a").unwrap().loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

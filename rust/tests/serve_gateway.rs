@@ -1,0 +1,345 @@
+//! End-to-end serving-gateway integration over real loopback TCP: two
+//! different models behind one gateway, ≥64 in-flight requests, per-model
+//! routing correctness, the bounded-queue 429 path, and `/metrics`
+//! consistency (per-model request counts; batch-size histogram whose
+//! `sum(size*count)` equals the requests sent).
+//!
+//! Needs no artifacts: models are built from synthetic checkpoints
+//! (`Inventory::synthetic_checkpoint`) and written to a temp models dir.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::coordinator::BatchPolicy;
+use repro::data::Kind;
+use repro::model::bmx::{synth_lenet, BmxModel, BmxTensor};
+use repro::model::json;
+use repro::nn::Engine;
+use repro::serve::{Gateway, ModelRegistry, PoolConfig, RegistryConfig};
+
+fn temp_models_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_gateway_{}_{case}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Pin a synthetic model's answers by dominating one output bias, so the
+/// two test models provably disagree and misrouting cannot hide.
+/// (fc2.b stays f32 in both converter modes, so mutating the converted
+/// model is equivalent to mutating the checkpoint.)
+fn bias_toward_class(m: &mut BmxModel, class: usize) {
+    for (name, t) in &mut m.tensors {
+        if name == "params.fc2.b" {
+            if let BmxTensor::F32 { data, .. } = t {
+                data[class] = 1000.0;
+            }
+        }
+    }
+}
+
+/// Write two *different* models (1-bit packed vs 4-bit quantized LeNet,
+/// different weights, different pinned answers) and return direct engines
+/// as the ground truth.
+fn write_two_models(dir: &Path) -> (Engine, Engine) {
+    let mut bin = synth_lenet(101, 1).unwrap();
+    bias_toward_class(&mut bin, 2);
+    bin.save(dir.join("lenet_bin.bmx")).unwrap();
+    let mut q4 = synth_lenet(202, 4).unwrap();
+    bias_toward_class(&mut q4, 7);
+    q4.save(dir.join("lenet_q4.bmx")).unwrap();
+    (Engine::from_bmx(&bin).unwrap(), Engine::from_bmx(&q4).unwrap())
+}
+
+/// Tiny HTTP/1.1 client: one request, `connection: close`, parsed reply.
+fn http_request(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect to gateway");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nhost: test\r\nconnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "content-type: application/json\r\ncontent-length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"))
+        .parse()
+        .unwrap();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn classify_body(img: &[f32]) -> String {
+    let nums: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"image\": [{}]}}", nums.join(","))
+}
+
+/// `name{model="m"} V` → V, from the Prometheus text.
+fn metric_value(text: &str, name: &str, model: &str) -> Option<u64> {
+    let prefix = format!("{name}{{model=\"{model}\"}} ");
+    text.lines().find_map(|l| l.strip_prefix(&prefix).and_then(|v| v.trim().parse().ok()))
+}
+
+/// Sum of size*count over the model's batch-size histogram lines.
+fn batch_hist_weighted_sum(text: &str, model: &str) -> u64 {
+    let prefix = format!("bmxnet_batch_size_total{{model=\"{model}\",size=\"");
+    text.lines()
+        .filter_map(|l| l.strip_prefix(&prefix))
+        .map(|rest| {
+            let (size, tail) = rest.split_once("\"}").expect("histogram line shape");
+            size.parse::<u64>().unwrap() * tail.trim().parse::<u64>().unwrap()
+        })
+        .sum()
+}
+
+#[test]
+fn two_models_64_inflight_routing_and_metrics() {
+    let dir = temp_models_dir("two_models");
+    let (bin_eng, q4_eng) = write_two_models(&dir);
+    let n = 64usize;
+    let ds = Kind::Digits.generate(n, 9);
+    // ground truth: even requests -> lenet_bin, odd -> lenet_q4
+    let expected: Vec<usize> = (0..n)
+        .map(|i| {
+            let eng = if i % 2 == 0 { &bin_eng } else { &q4_eng };
+            eng.classify(ds.image(i), 1).unwrap()[0].0
+        })
+        .collect();
+    // the two models genuinely disagree somewhere, else routing is untested
+    let disagree = (0..n).any(|i| {
+        bin_eng.classify(ds.image(i), 1).unwrap()[0].0
+            != q4_eng.classify(ds.image(i), 1).unwrap()[0].0
+    });
+    assert!(disagree, "synthetic models agree everywhere; routing test is vacuous");
+
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(2) },
+            queue_cap: 128,
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start(registry, "127.0.0.1:0").unwrap();
+    let addr = gateway.addr().to_string();
+
+    // 64 in-flight requests on 64 concurrent connections, across both models
+    let served: Vec<(usize, u16, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                let body = classify_body(ds.image(i));
+                let model = if i % 2 == 0 { "lenet_bin" } else { "lenet_q4" };
+                s.spawn(move || {
+                    let path = format!("/v1/models/{model}:classify");
+                    let (status, resp) = http_request(&addr, "POST", &path, Some(&body));
+                    (i, status, resp)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (i, status, resp) in &served {
+        assert_eq!(*status, 200, "request {i} failed: {resp}");
+        let v = json::parse(resp).unwrap();
+        let class = v.get("class").and_then(|c| c.as_usize()).unwrap();
+        let model = v.get("model").and_then(|m| m.as_str()).unwrap();
+        let want_model = if i % 2 == 0 { "lenet_bin" } else { "lenet_q4" };
+        assert_eq!(model, want_model, "request {i} answered by the wrong model");
+        assert_eq!(class, expected[*i], "request {i} routed to the wrong engine");
+        assert!(v.get("batch_size").and_then(|b| b.as_usize()).unwrap() >= 1);
+    }
+
+    // model listing shows both resident
+    let (status, list) = http_request(&addr, "GET", "/v1/models", None);
+    assert_eq!(status, 200);
+    let v = json::parse(&list).unwrap();
+    let models = v.get("models").and_then(|m| m.as_array()).unwrap();
+    for name in ["lenet_bin", "lenet_q4"] {
+        let entry = models
+            .iter()
+            .find(|m| m.get("name").and_then(|n| n.as_str()) == Some(name))
+            .unwrap_or_else(|| panic!("{name} missing from /v1/models: {list}"));
+        assert_eq!(entry.get("loaded"), Some(&json::Value::Bool(true)));
+    }
+
+    // /metrics: per-model request counts and histogram consistency.
+    // Counters are recorded just *after* replies are sent, so poll briefly
+    // instead of racing the last batch's bookkeeping.
+    let mut metrics = String::new();
+    for _ in 0..50 {
+        let (status, text) = http_request(&addr, "GET", "/metrics", None);
+        assert_eq!(status, 200);
+        metrics = text;
+        let done = ["lenet_bin", "lenet_q4"].iter().all(|m| {
+            metric_value(&metrics, "bmxnet_requests_total", m) == Some((n / 2) as u64)
+        });
+        if done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for model in ["lenet_bin", "lenet_q4"] {
+        let requests = metric_value(&metrics, "bmxnet_requests_total", model)
+            .unwrap_or_else(|| panic!("no request counter for {model} in:\n{metrics}"));
+        assert_eq!(requests, (n / 2) as u64, "{model} request count");
+        assert_eq!(
+            batch_hist_weighted_sum(&metrics, model),
+            requests,
+            "{model}: batch-size histogram does not sum to the requests sent"
+        );
+        assert_eq!(metric_value(&metrics, "bmxnet_rejected_total", model), Some(0));
+    }
+
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bounded_queue_rejects_with_429_under_burst() {
+    let dir = temp_models_dir("burst");
+    let (bin_eng, _) = write_two_models(&dir);
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        // one shard, queue of 1, no batching: a burst must overflow
+        pool: PoolConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+            queue_cap: 1,
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start(registry, "127.0.0.1:0").unwrap();
+    let addr = gateway.addr().to_string();
+    let ds = Kind::Digits.generate(32, 3);
+
+    // warm the model so the burst hits a loaded pool, not the loader
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/lenet_bin:classify",
+        Some(&classify_body(ds.image(0))),
+    );
+    assert_eq!(status, 200);
+
+    let results: Vec<(usize, u16, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let addr = addr.clone();
+                let body = classify_body(ds.image(i));
+                s.spawn(move || {
+                    let (status, resp) =
+                        http_request(&addr, "POST", "/v1/models/lenet_bin:classify", Some(&body));
+                    (i, status, resp)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let oks = results.iter().filter(|(_, s, _)| *s == 200).count();
+    let rejects = results.iter().filter(|(_, s, _)| *s == 429).count();
+    assert!(rejects > 0, "queue_cap=1 under a 32-burst never returned 429");
+    assert!(oks > 0, "admission control rejected the entire burst");
+    assert_eq!(oks + rejects, 32, "unexpected statuses: {results:?}");
+    // accepted answers are still correct
+    for (i, status, resp) in &results {
+        if *status == 200 {
+            let class = json::parse(resp).unwrap().get("class").and_then(|c| c.as_usize());
+            assert_eq!(class, Some(bin_eng.classify(ds.image(*i), 1).unwrap()[0].0));
+        }
+    }
+    // rejections are visible in /metrics
+    let (_, metrics) = http_request(&addr, "GET", "/metrics", None);
+    let rejected = metric_value(&metrics, "bmxnet_rejected_total", "lenet_bin").unwrap();
+    assert!(rejected >= rejects as u64, "429s not counted: {rejected} < {rejects}");
+
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_model_and_bad_bodies_are_clean_http_errors() {
+    let dir = temp_models_dir("errors");
+    write_two_models(&dir);
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig { workers: 1, ..Default::default() },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start(registry, "127.0.0.1:0").unwrap();
+    let addr = gateway.addr().to_string();
+
+    let (status, body) =
+        http_request(&addr, "POST", "/v1/models/nope:classify", Some("{\"image\": [0]}"));
+    assert_eq!(status, 404, "{body}");
+    let (status, _) =
+        http_request(&addr, "POST", "/v1/models/lenet_bin:classify", Some("not json"));
+    assert_eq!(status, 400);
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/lenet_bin:classify",
+        Some("{\"image\": [1, 2, 3]}"),
+    );
+    assert_eq!(status, 400, "wrong image length must be 400, got: {body}");
+    let (status, _) = http_request(&addr, "GET", "/definitely/not/here", None);
+    assert_eq!(status, 404);
+    let (status, body) = http_request(&addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"));
+
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_backed_models_serve_from_artifacts() {
+    // Mirrors the other artifact-driven integration tests: skip cleanly
+    // when `make artifacts` has not run in this checkout.
+    let dir = PathBuf::from(repro::ARTIFACTS_DIR);
+    if !dir.join("manifest.json").is_file() {
+        eprintln!("SKIP (artifacts not built): no {:?}", dir.join("manifest.json"));
+        return;
+    }
+    let registry = ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig { workers: 1, ..Default::default() },
+        ..RegistryConfig::new(dir)
+    });
+    // both acceptance models resolve through the manifest → convert path
+    for name in ["lenet_bin", "lenet_q4"] {
+        let model = registry.get(name).unwrap();
+        assert_eq!(model.info.arch, "lenet");
+        let resp = model.pool.classify(vec![0.1f32; 784]).unwrap();
+        assert!(resp.class < 10, "{name} class out of range");
+    }
+    assert!(registry.list().iter().any(|m| m.name == "lenet_bin" && m.loaded));
+}

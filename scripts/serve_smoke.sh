@@ -1,0 +1,77 @@
+#!/usr/bin/env sh
+# Serving-gateway smoke test: start `bmxnet serve` on an ephemeral port,
+# list models, run one classify on each acceptance model, check /metrics.
+# Run from the repo root (models resolve from ./artifacts via the
+# manifest).  Used by `make serve-smoke` and CI.
+set -eu
+
+BIN=${BIN:-target/release/bmxnet}
+MODELS_DIR=${MODELS_DIR:-artifacts}
+LOG=$(mktemp /tmp/bmxnet_serve_smoke.XXXXXX)
+SYNTH_DIR=""
+
+if [ ! -x "$BIN" ]; then
+    echo "serve-smoke: $BIN not built (run \`make build\` first)" >&2
+    exit 1
+fi
+
+# artifacts/ is gitignored: on a fresh clone (CI included) fall back to
+# synthetic-weight models so the smoke test runs anywhere.
+if [ ! -f "$MODELS_DIR/manifest.json" ] && [ ! -f "$MODELS_DIR/lenet_bin.bmx" ]; then
+    SYNTH_DIR=$(mktemp -d /tmp/bmxnet_smoke_models.XXXXXX)
+    echo "serve-smoke: $MODELS_DIR has no models; synthesizing into $SYNTH_DIR"
+    "$BIN" synth-models --out "$SYNTH_DIR"
+    MODELS_DIR=$SYNTH_DIR
+fi
+
+"$BIN" serve --models-dir "$MODELS_DIR" --workers 2 --port 0 >"$LOG" 2>&1 &
+PID=$!
+cleanup() {
+    kill "$PID" 2>/dev/null || true
+    rm -f "$LOG" /tmp/bmxnet_smoke_body.$$ || true
+    [ -n "$SYNTH_DIR" ] && rm -rf "$SYNTH_DIR" || true
+}
+trap cleanup EXIT INT TERM
+
+# wait for the gateway to print its bound address
+ADDR=""
+i=0
+while [ $i -lt 100 ]; do
+    ADDR=$(sed -n 's#^listening on http://##p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$PID" 2>/dev/null; then
+        echo "serve-smoke: gateway died during startup:" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    i=$((i + 1))
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "serve-smoke: gateway never reported its address:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "serve-smoke: gateway at $ADDR"
+
+# 784 zeros is a valid (if boring) 28x28 LeNet input
+BODY=/tmp/bmxnet_smoke_body.$$
+awk 'BEGIN{printf "{\"image\":["; for(i=0;i<783;i++) printf "0,"; print "0]}"}' >"$BODY"
+
+curl -fsS "http://$ADDR/v1/models" | grep -q '"lenet_bin"' \
+    || { echo "serve-smoke: lenet_bin missing from /v1/models" >&2; exit 1; }
+
+for MODEL in lenet_bin lenet_q4; do
+    OUT=$(curl -fsS -X POST -H 'content-type: application/json' \
+        --data-binary @"$BODY" "http://$ADDR/v1/models/$MODEL:classify")
+    echo "serve-smoke: $MODEL -> $OUT"
+    echo "$OUT" | grep -q '"class"' \
+        || { echo "serve-smoke: $MODEL classify has no class field" >&2; exit 1; }
+done
+
+# counters are recorded just after the reply is written; give them a beat
+sleep 0.5
+curl -fsS "http://$ADDR/metrics" | grep -q 'bmxnet_requests_total{model="lenet_bin"} 1' \
+    || { echo "serve-smoke: /metrics missing lenet_bin request count" >&2; exit 1; }
+
+echo "serve-smoke: OK"
