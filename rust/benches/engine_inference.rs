@@ -76,7 +76,7 @@ fn main() {
     let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
     let pb = PackedMatrix::pack_cols(&b, k, n);
     let mut base = None;
-    for method in [Method::Xnor32, Method::Xnor64, Method::Xnor64Blocked, Method::Xnor64Mt] {
+    for method in Method::available().into_iter().filter(|m| m.is_binary()) {
         let d = time_best_of(reps, || xnor_gemm_prepacked(method, &pa, &pb));
         let us = d.as_secs_f64() * 1e6;
         let b0 = *base.get_or_insert(us);

@@ -8,7 +8,8 @@
 //! xnor_64_omp ≈ 125× over naive and ≈ 50× over Cblas; binarization
 //! included still ≈ 13× over Cblas.
 
-use repro::bench::{fig1_workloads, run_gemm_figure};
+use repro::bench::{fig1_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
+use repro::gemm::simd;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -36,5 +37,21 @@ fn main() {
     );
     if !full {
         println!("(reduced batch 20; set BENCH_FULL=1 for paper-exact shapes)");
+    }
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let provenance = format!(
+            "cargo bench gemm_fig1 · {} · kernel {} · {} · best-of-{reps}",
+            std::env::consts::ARCH,
+            simd::best_kernel().label(),
+            if full { "paper-exact" } else { "reduced" },
+        );
+        let rec = GemmFigureRecord {
+            figure: "fig1".into(),
+            xlabel: "C".into(),
+            absolute_times: true,
+            rows,
+        };
+        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        println!("recorded fig1 to {path}");
     }
 }

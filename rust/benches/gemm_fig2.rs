@@ -4,7 +4,8 @@
 //!     cargo bench --bench gemm_fig2
 //!     BENCH_FULL=1 cargo bench --bench gemm_fig2
 
-use repro::bench::{fig2_workloads, run_gemm_figure};
+use repro::bench::{fig2_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
+use repro::gemm::simd;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -30,4 +31,20 @@ fn main() {
         rows.first().unwrap().x,
         rows.last().unwrap().x
     );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let provenance = format!(
+            "cargo bench gemm_fig2 · {} · kernel {} · {} · best-of-{reps}",
+            std::env::consts::ARCH,
+            simd::best_kernel().label(),
+            if full { "paper-exact" } else { "reduced" },
+        );
+        let rec = GemmFigureRecord {
+            figure: "fig2".into(),
+            xlabel: "filters".into(),
+            absolute_times: false,
+            rows,
+        };
+        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        println!("recorded fig2 to {path}");
+    }
 }

@@ -4,7 +4,8 @@
 //!     cargo bench --bench gemm_fig3
 //!     BENCH_FULL=1 cargo bench --bench gemm_fig3
 
-use repro::bench::{fig3_workloads, run_gemm_figure};
+use repro::bench::{fig3_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
+use repro::gemm::simd;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -27,4 +28,20 @@ fn main() {
         rows.first().unwrap().speedup(omp),
         rows.last().unwrap().speedup(omp)
     );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let provenance = format!(
+            "cargo bench gemm_fig3 · {} · kernel {} · {} · best-of-{reps}",
+            std::env::consts::ARCH,
+            simd::best_kernel().label(),
+            if full { "paper-exact" } else { "reduced" },
+        );
+        let rec = GemmFigureRecord {
+            figure: "fig3".into(),
+            xlabel: "kernel".into(),
+            absolute_times: false,
+            rows,
+        };
+        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        println!("recorded fig3 to {path}");
+    }
 }

@@ -5,20 +5,29 @@
 //! * float methods time the full GEMM on float operands;
 //! * `xnor_*` columns time the GEMM on **pre-packed** operands (weights are
 //!   packed offline; activations are assumed packed by the previous layer);
+//! * `xnor_fused` times the fused binarize→pack→GEMM on float activations
+//!   against pre-packed weights — its packing cost is inherent to the
+//!   variant, so it is timed (that is the column's whole point);
 //! * the final `bin+xnor_omp` column adds activation binarization+packing
 //!   to the threaded kernel (Fig 1's "binarize input and xnor_64_omp" bar).
+//!
+//! Columns cover [`Method::available`] — what the running CPU can
+//! execute — so a recorded figure from an AVX2 box and one from a NEON box
+//! carry different (correctly labelled) column sets.
 
 use std::time::Duration;
 
 use super::harness::{fmt_ms, time_best_of, BenchTable};
 use super::workloads::GemmWorkload;
-use crate::gemm::{binary_gemm_f32, xnor_gemm_prepacked, Method, PackedMatrix, Side};
+use crate::gemm::{
+    binary_gemm_f32, gemm_fused, xnor_gemm_prepacked, Method, PackedMatrix, Side,
+};
 
 /// One measured row: time per method at a given x.
 #[derive(Debug, Clone)]
 pub struct FigureRow {
     pub x: usize,
-    /// (method label, duration) in Method::all() order + "bin+xnor_omp".
+    /// (method label, duration) in catalog order + "bin+xnor_omp".
     pub timings: Vec<(&'static str, Duration)>,
 }
 
@@ -32,14 +41,26 @@ impl FigureRow {
     }
 }
 
-/// Measure every method over one workload.
+/// Measure every available method over one workload.
 pub fn measure_workload(w: &GemmWorkload, reps: usize) -> FigureRow {
+    measure_workload_methods(w, reps, &Method::available())
+}
+
+/// Measure an explicit method list over one workload (the `--method`
+/// CLI path and the availability-filtered default share this body).
+pub fn measure_workload_methods(
+    w: &GemmWorkload,
+    reps: usize,
+    methods: &[Method],
+) -> FigureRow {
     let (a, b) = w.operands(42);
     let pa = PackedMatrix::pack_rows(&a, w.m, w.k, Side::A);
     let pb = PackedMatrix::pack_cols(&b, w.k, w.n);
     let mut timings = Vec::new();
-    for method in Method::all() {
-        let d = if method.is_binary() {
+    for method in methods {
+        let d = if *method == Method::XnorFused {
+            time_best_of(reps, || gemm_fused(&a, w.m, w.k, &pb))
+        } else if method.is_binary() {
             time_best_of(reps, || xnor_gemm_prepacked(*method, &pa, &pb))
         } else {
             time_best_of(reps, || binary_gemm_f32(*method, &a, &b, w.m, w.n, w.k))
@@ -48,15 +69,16 @@ pub fn measure_workload(w: &GemmWorkload, reps: usize) -> FigureRow {
     }
     // activation packing (the conv input side) + threaded kernel
     let d = time_best_of(reps, || {
-        let pb2 = PackedMatrix::pack_cols(&b, w.k, w.n);
-        xnor_gemm_prepacked(Method::Xnor64Mt, &pa, &pb2)
+        let pa2 = PackedMatrix::pack_rows(&a, w.m, w.k, Side::A);
+        xnor_gemm_prepacked(Method::Xnor64Mt, &pa2, &pb)
     });
     timings.push(("bin+xnor_omp", d));
     FigureRow { x: w.x, timings }
 }
 
-/// Run a full figure and print a paper-style table.
-/// `absolute_times` prints ms (Fig 1); otherwise speedup vs naive (Figs 2–3).
+/// Run a full figure over every available method and print a paper-style
+/// table.  `absolute_times` prints ms (Fig 1); otherwise speedup vs the
+/// first column (Figs 2–3).
 pub fn run_gemm_figure(
     title: &str,
     xlabel: &str,
@@ -64,11 +86,23 @@ pub fn run_gemm_figure(
     reps: usize,
     absolute_times: bool,
 ) -> Vec<FigureRow> {
+    run_gemm_figure_methods(title, xlabel, workloads, reps, absolute_times, &Method::available())
+}
+
+/// [`run_gemm_figure`] with an explicit method list.
+pub fn run_gemm_figure_methods(
+    title: &str,
+    xlabel: &str,
+    workloads: &[GemmWorkload],
+    reps: usize,
+    absolute_times: bool,
+    methods: &[Method],
+) -> Vec<FigureRow> {
     let mut headers: Vec<&str> = vec![xlabel];
     let mut rows = Vec::new();
     let mut table: Option<BenchTable> = None;
     for w in workloads {
-        let row = measure_workload(w, reps);
+        let row = measure_workload_methods(w, reps, methods);
         if table.is_none() {
             headers.extend(row.timings.iter().map(|(l, _)| *l));
             table = Some(BenchTable::new(title, &headers));
@@ -101,10 +135,26 @@ mod tests {
     fn measure_tiny_workload() {
         let w = GemmWorkload { x: 8, m: 4, n: 32, k: 64 };
         let row = measure_workload(&w, 1);
-        // Method::all() (6) + the bin+xnor column
-        assert_eq!(row.timings.len(), 7);
+        // every available method + the bin+xnor column
+        assert_eq!(row.timings.len(), Method::available().len() + 1);
         assert!(row.timings.iter().all(|(_, d)| *d > Duration::ZERO));
         assert!(row.speedup(0) == 1.0);
+    }
+
+    #[test]
+    fn fused_column_present_and_labelled() {
+        let w = GemmWorkload { x: 8, m: 4, n: 32, k: 100 };
+        let row = measure_workload(&w, 1);
+        assert!(row.timings.iter().any(|(l, _)| *l == "xnor_fused"));
+        assert_eq!(row.timings.last().unwrap().0, "bin+xnor_omp");
+    }
+
+    #[test]
+    fn explicit_method_list_is_respected() {
+        let w = GemmWorkload { x: 8, m: 2, n: 16, k: 64 };
+        let row = measure_workload_methods(&w, 1, &[Method::Xnor64, Method::XnorFused]);
+        let labels: Vec<&str> = row.timings.iter().map(|(l, _)| *l).collect();
+        assert_eq!(labels, ["xnor_64", "xnor_fused", "bin+xnor_omp"]);
     }
 
     #[test]

@@ -8,13 +8,20 @@
 //!   seconds on this 1-core box; `--full` restores paper-exact shapes).
 //! * [`serve_scaling`] — the serving-gateway scaling sweep (offered load ×
 //!   pool worker count) shared by `cargo bench --bench serve_scaling`.
+//! * [`record`] — `BENCH_gemm.json` writer (the CLI `--json` flag and the
+//!   bench targets' `BENCH_JSON` env var), keyed by `Method::label`.
 
 pub mod figures;
 pub mod harness;
+pub mod record;
 pub mod serve_scaling;
 pub mod workloads;
 
-pub use figures::{measure_workload, run_gemm_figure, FigureRow};
+pub use figures::{
+    measure_workload, measure_workload_methods, run_gemm_figure, run_gemm_figure_methods,
+    FigureRow,
+};
+pub use record::{render_gemm_json, write_gemm_json, GemmFigureRecord};
 pub use harness::{time_best_of, BenchTable};
 pub use serve_scaling::{
     measure_serve_workload, run_serve_scaling, serve_scaling_workloads, ServeScalingRow,

@@ -1,0 +1,144 @@
+//! Benchmark result recording: render Figure 1–3 rows into the
+//! `BENCH_gemm.json` schema EXPERIMENTS.md §Perf references.
+//!
+//! Schema (hand-rolled writer, validated against our own
+//! [`crate::model::json::parse`] in tests — no serde available offline):
+//!
+//! ```json
+//! {
+//!   "bench": "gemm",
+//!   "provenance": "host/toolchain note",
+//!   "figures": [
+//!     {"figure": "fig1", "xlabel": "filter number", "absolute_times": true,
+//!      "rows": [{"x": 64, "ms": {"naive": 12.5, "xnor_64_blk": 0.8}}]}
+//!   ]
+//! }
+//! ```
+//!
+//! Method labels key the `ms` maps — the [`crate::gemm::Method::label`]
+//! API contract is what makes records comparable across commits.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::figures::FigureRow;
+
+/// One figure's worth of measured rows, ready to serialize.
+#[derive(Debug, Clone)]
+pub struct GemmFigureRecord {
+    /// Figure id, e.g. `fig1`.
+    pub figure: String,
+    /// The swept axis, e.g. `filter number`.
+    pub xlabel: String,
+    /// Whether the figure reports absolute ms (Fig 1) or speedups.
+    pub absolute_times: bool,
+    pub rows: Vec<FigureRow>,
+}
+
+/// Render the full `BENCH_gemm.json` document.
+pub fn render_gemm_json(provenance: &str, figures: &[GemmFigureRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"gemm\",\n");
+    let _ = writeln!(s, "  \"provenance\": \"{}\",", escape(provenance));
+    s.push_str("  \"figures\": [\n");
+    for (fi, f) in figures.iter().enumerate() {
+        let _ = writeln!(s, "    {{");
+        let _ = writeln!(s, "      \"figure\": \"{}\",", escape(&f.figure));
+        let _ = writeln!(s, "      \"xlabel\": \"{}\",", escape(&f.xlabel));
+        let _ = writeln!(s, "      \"absolute_times\": {},", f.absolute_times);
+        s.push_str("      \"rows\": [\n");
+        for (ri, row) in f.rows.iter().enumerate() {
+            let _ = write!(s, "        {{\"x\": {}, \"ms\": {{", row.x);
+            for (ti, (label, d)) in row.timings.iter().enumerate() {
+                if ti > 0 {
+                    s.push_str(", ");
+                }
+                let _ = write!(s, "\"{}\": {:.4}", escape(label), d.as_secs_f64() * 1e3);
+            }
+            s.push_str("}}");
+            if ri + 1 < f.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("      ]\n");
+        s.push_str("    }");
+        if fi + 1 < figures.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the document to disk (the CLI `--json` flag and the bench
+/// targets' `BENCH_JSON` env path land here).
+pub fn write_gemm_json(
+    path: impl AsRef<Path>,
+    provenance: &str,
+    figures: &[GemmFigureRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, render_gemm_json(provenance, figures))
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::json;
+    use std::time::Duration;
+
+    fn sample() -> Vec<GemmFigureRecord> {
+        vec![GemmFigureRecord {
+            figure: "fig1".into(),
+            xlabel: "filter number".into(),
+            absolute_times: true,
+            rows: vec![FigureRow {
+                x: 64,
+                timings: vec![
+                    ("naive", Duration::from_micros(12500)),
+                    ("xnor_64_blk", Duration::from_micros(800)),
+                ],
+            }],
+        }]
+    }
+
+    #[test]
+    fn rendered_json_parses_with_our_parser() {
+        let text = render_gemm_json("unit test", &sample());
+        let v = json::parse(&text).expect("self-rendered JSON must parse");
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("gemm"));
+        let figs = v.get("figures").and_then(|f| f.as_array()).unwrap();
+        assert_eq!(figs.len(), 1);
+        let rows = figs[0].get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(rows[0].get("x").and_then(|x| x.as_usize()), Some(64));
+        let ms = rows[0].get("ms").unwrap();
+        let naive = ms.get("naive").and_then(|m| m.as_f64()).unwrap();
+        assert!((naive - 12.5).abs() < 1e-6, "naive ms = {naive}");
+    }
+
+    #[test]
+    fn provenance_is_escaped() {
+        let text = render_gemm_json("quote \" and \\ slash", &sample());
+        let v = json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("provenance").and_then(|p| p.as_str()),
+            Some("quote \" and \\ slash")
+        );
+    }
+
+    #[test]
+    fn write_roundtrips_to_disk() {
+        let path = std::env::temp_dir()
+            .join(format!("bench_record_{}.json", std::process::id()));
+        write_gemm_json(&path, "disk test", &sample()).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, render_gemm_json("disk test", &sample()));
+    }
+}

@@ -1,12 +1,31 @@
 //! Method dispatch: one enum naming every GEMM variant in Figures 1–3,
 //! plus the high-level entry points the inference engine and the bench
 //! harness share.
+//!
+//! Two layers of dispatch compose here (DESIGN.md §SIMD popcount
+//! dispatch):
+//!
+//! 1. **Method** — *which algorithm*: float vs xnor, word width,
+//!    blocking, threading, fusion.  Chosen by the caller (CLI flag, layer
+//!    config) or [`Method::auto`].
+//! 2. **Kernel** ([`super::simd`]) — *which instruction set* runs the
+//!    inner popcount row reduction.  Chosen at runtime from CPU features,
+//!    overridable with `BMXNET_FORCE_SCALAR=1`.
+//!
+//! The pinned-SIMD methods (`xnor_64_avx2` / `xnor_64_avx512` /
+//! `xnor_64_neon`) exist so benches can measure one kernel in isolation;
+//! they are only [`Method::is_available`] when their kernel is
+//! dispatchable on the running CPU.  `xnor_fused` and `xnor_64_omp`
+//! delegate kernel choice to [`simd::best_kernel`] and are always
+//! available.
 
 use super::pack::{PackedMatrix, Side};
-use super::{blocked, naive, parallel, xnor};
+use super::simd::{self, Kernel};
+use super::{blocked, fused, naive, parallel, xnor};
 use crate::quant::xnor_to_dot;
 
-/// Every GEMM variant the paper benchmarks (Figure 1 legend).
+/// Every GEMM variant the paper benchmarks (Figure 1 legend) plus the
+/// explicit-SIMD and fused variants this repo adds on top.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     /// Textbook i-j-k float GEMM (`naive gemm`).
@@ -17,13 +36,27 @@ pub enum Method {
     Xnor32,
     /// Listing 3 on 64-bit words (`xnor_64`).
     Xnor64,
-    /// Blocked + unrolled xnor_64.
+    /// Blocked + unrolled xnor_64 (scalar row kernel).
     Xnor64Blocked,
-    /// Multi-threaded blocked xnor_64 (`xnor_64_omp`).
+    /// Multi-threaded blocked xnor_64 (`xnor_64_omp`); rows run the best
+    /// available SIMD kernel.
     Xnor64Mt,
+    /// Blocked xnor_64 pinned to the AVX2 Harley–Seal kernel.
+    Xnor64Avx2,
+    /// Blocked xnor_64 pinned to the AVX-512 `VPOPCNTDQ` kernel
+    /// (requires `--features simd-avx512` and CPU support).
+    Xnor64Avx512,
+    /// Blocked xnor_64 pinned to the NEON `vcnt` kernel.
+    Xnor64Neon,
+    /// Fused binarize→pack→GEMM with the best available kernel — the
+    /// inference default ([`Method::auto`]).
+    XnorFused,
 }
 
 impl Method {
+    /// The full static catalog — every variant that can ever exist, on
+    /// any architecture.  Use for label round-trips and documentation;
+    /// use [`Method::available`] to know what can *execute* here.
     pub fn all() -> &'static [Method] {
         &[
             Method::NaiveF32,
@@ -32,7 +65,46 @@ impl Method {
             Method::Xnor64,
             Method::Xnor64Blocked,
             Method::Xnor64Mt,
+            Method::Xnor64Avx2,
+            Method::Xnor64Avx512,
+            Method::Xnor64Neon,
+            Method::XnorFused,
         ]
+    }
+
+    /// The variants that can execute on the running CPU right now
+    /// (respects the `BMXNET_FORCE_SCALAR` override, which hides the
+    /// pinned-SIMD variants).  Tests and benches iterate this.
+    pub fn available() -> Vec<Method> {
+        Method::all().iter().copied().filter(|m| m.is_available()).collect()
+    }
+
+    /// Can this variant execute on the running CPU?  Only the
+    /// pinned-SIMD variants are ever unavailable; everything else
+    /// (including `xnor_fused` / `xnor_64_omp`, which fall back to the
+    /// scalar row kernel) always is.
+    pub fn is_available(&self) -> bool {
+        match self.pinned_kernel() {
+            Some(k) => k.dispatchable(),
+            None => true,
+        }
+    }
+
+    /// The kernel a pinned-SIMD variant insists on; `None` for variants
+    /// that delegate to [`simd::best_kernel`] or don't use row kernels.
+    fn pinned_kernel(&self) -> Option<Kernel> {
+        match self {
+            Method::Xnor64Avx2 => Some(Kernel::Avx2),
+            Method::Xnor64Avx512 => Some(Kernel::Avx512),
+            Method::Xnor64Neon => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// The default method for inference forward paths: fused
+    /// binarize→pack→GEMM with runtime kernel dispatch.
+    pub fn auto() -> Method {
+        Method::XnorFused
     }
 
     /// Figure-1 legend name.
@@ -43,7 +115,9 @@ impl Method {
     /// one of them — `Method::from_label(m.label()) == Some(m)` for all
     /// variants (enforced by unit tests here and in
     /// `rust/tests/cli_smoke.rs`).  Renaming a label is a breaking
-    /// change to every stored benchmark record.
+    /// change to every stored benchmark record.  Labels are stable
+    /// across architectures: `xnor_64_neon` names the same variant on a
+    /// machine that cannot run it.
     pub fn label(&self) -> &'static str {
         match self {
             Method::NaiveF32 => "naive",
@@ -52,6 +126,10 @@ impl Method {
             Method::Xnor64 => "xnor_64",
             Method::Xnor64Blocked => "xnor_64_blk",
             Method::Xnor64Mt => "xnor_64_omp",
+            Method::Xnor64Avx2 => "xnor_64_avx2",
+            Method::Xnor64Avx512 => "xnor_64_avx512",
+            Method::Xnor64Neon => "xnor_64_neon",
+            Method::XnorFused => "xnor_fused",
         }
     }
 
@@ -68,13 +146,31 @@ impl Method {
 }
 
 /// Run a prepacked xnor GEMM variant, returning raw popcounts.
-/// Panics if called with a float method.
+///
+/// Panics if called with a float method, or with a pinned-SIMD method
+/// whose kernel the running CPU cannot dispatch ([`Method::is_available`]
+/// is the guard) — a loud failure beats silently timing the wrong kernel.
+///
+/// `XnorFused` degenerates here: with A already packed there is nothing
+/// left to fuse, so it runs the blocked loop with the best row kernel.
 pub fn xnor_gemm_prepacked(method: Method, a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    if let Some(k) = method.pinned_kernel() {
+        assert!(
+            method.is_available(),
+            "{m:?} ({label}) needs the {kernel} kernel, which this CPU/build \
+             cannot dispatch (check Method::is_available before pinning)",
+            m = method,
+            label = method.label(),
+            kernel = k.label(),
+        );
+        return xnor::gemm_u64_blocked_with(a, b, simd::row_fn(k));
+    }
     match method {
         Method::Xnor32 => xnor::gemm_u32(a, b),
         Method::Xnor64 => xnor::gemm_u64(a, b),
         Method::Xnor64Blocked => xnor::gemm_u64_blocked(a, b),
         Method::Xnor64Mt => parallel::gemm_u64_mt(a, b),
+        Method::XnorFused => xnor::gemm_u64_blocked_with(a, b, simd::row_fn(simd::best_kernel())),
         m => panic!("{m:?} is not a packed xnor method"),
     }
 }
@@ -103,6 +199,13 @@ pub fn binary_gemm_f32(
             let bb = super::pack::binarize_slice(b);
             blocked::gemm_f32(&ab, &bb, m, n, k)
         }
+        Method::XnorFused => {
+            let pb = PackedMatrix::pack_cols(b, k, n);
+            fused::gemm_fused(a, m, k, &pb)
+                .into_iter()
+                .map(|p| xnor_to_dot(p, k))
+                .collect()
+        }
         _ => {
             let pa = PackedMatrix::pack_rows(a, m, k, Side::A);
             let pb = PackedMatrix::pack_cols(b, k, n);
@@ -111,6 +214,28 @@ pub fn binary_gemm_f32(
                 .map(|p| xnor_to_dot(p, k))
                 .collect()
         }
+    }
+}
+
+/// The inference-forward entry point: float activations against a
+/// pre-packed weight operand, returning raw popcounts.  `XnorFused`
+/// avoids materializing packed A entirely; other binary methods pack A
+/// then run prepacked.  Panics on float methods (layers hold only packed
+/// weights — there is no float B to multiply).
+pub fn binary_gemm_packed_b(
+    method: Method,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedMatrix,
+) -> Vec<i32> {
+    match method {
+        Method::XnorFused => fused::gemm_fused(a, m, k, b),
+        _ if method.is_binary() => {
+            let pa = PackedMatrix::pack_rows(a, m, k, Side::A);
+            xnor_gemm_prepacked(method, &pa, b)
+        }
+        _ => panic!("{method:?} is not a binary method; layers hold packed weights only"),
     }
 }
 
@@ -131,6 +256,7 @@ mod tests {
         assert!(!Method::NaiveF32.is_binary());
         assert!(!Method::BlockedF32.is_binary());
         assert!(Method::Xnor64.is_binary());
+        assert!(Method::XnorFused.is_binary());
     }
 
     #[test]
@@ -138,5 +264,56 @@ mod tests {
     fn prepacked_rejects_float_methods() {
         let p = PackedMatrix::pack_rows(&[1.0; 64], 1, 64, Side::A);
         xnor_gemm_prepacked(Method::NaiveF32, &p, &p);
+    }
+
+    #[test]
+    fn available_is_subset_of_all_and_contains_portables() {
+        let avail = Method::available();
+        for m in &avail {
+            assert!(Method::all().contains(m));
+            assert!(m.is_available());
+        }
+        // The portable variants can never be unavailable.
+        for m in [
+            Method::NaiveF32,
+            Method::BlockedF32,
+            Method::Xnor32,
+            Method::Xnor64,
+            Method::Xnor64Blocked,
+            Method::Xnor64Mt,
+            Method::XnorFused,
+        ] {
+            assert!(avail.contains(&m), "{m:?} must always be available");
+        }
+    }
+
+    #[test]
+    fn auto_is_fused_and_available() {
+        assert_eq!(Method::auto(), Method::XnorFused);
+        assert!(Method::auto().is_available());
+    }
+
+    #[test]
+    fn pinned_unavailable_method_panics_loudly() {
+        // Find a pinned-SIMD variant the running CPU cannot dispatch (on
+        // x86 that is at least xnor_64_neon; on aarch64 the avx ones).
+        let unavailable = Method::all().iter().copied().find(|m| !m.is_available());
+        if let Some(m) = unavailable {
+            let p = PackedMatrix::pack_rows(&[1.0; 64], 1, 64, Side::A);
+            let err = std::panic::catch_unwind(|| xnor_gemm_prepacked(m, &p, &p));
+            assert!(err.is_err(), "{m:?} must panic, not run the wrong kernel");
+        }
+    }
+
+    #[test]
+    fn packed_b_agrees_with_f32_entry() {
+        let a: Vec<f32> = (0..3 * 70).map(|i| (i as f32) * 0.7 - 40.0).collect();
+        let b: Vec<f32> = (0..70 * 5).map(|i| 30.0 - (i as f32) * 0.3).collect();
+        let pb = PackedMatrix::pack_cols(&b, 70, 5);
+        for m in Method::available().into_iter().filter(|m| m.is_binary()) {
+            let pops = binary_gemm_packed_b(m, &a, 3, 70, &pb);
+            let dots: Vec<f32> = pops.iter().map(|&p| xnor_to_dot(p, 70)).collect();
+            assert_eq!(dots, binary_gemm_f32(m, &a, &b, 3, 5, 70), "{m:?}");
+        }
     }
 }

@@ -1,0 +1,113 @@
+//! Fused binarize→pack→GEMM: the inference-forward entry point that skips
+//! materializing the full packed A matrix.
+//!
+//! The layer forward path (`nn/layers.rs`) holds B (the weights)
+//! pre-packed at load time, but A (the activations / im2col buffer) is
+//! fresh every call.  The unfused path packs all of A into a heap
+//! `PackedMatrix` (M×⌈K/64⌉×8 bytes) and only then starts the GEMM — at
+//! Fig-3 scale that intermediate is megabytes of traffic that is written
+//! once, read once, and thrown away.  This path instead packs an `MR`-row
+//! panel into a reusable stack-sized scratch and immediately consumes it
+//! against every B tile while it is still L1-hot (daBNN's bit-pack fusion,
+//! PAPERS.md).
+//!
+//! Bit layout is shared with [`super::pack`] via [`pack::pack_row_into`]
+//! — the fused path cannot drift from the packing convention because both
+//! go through the same row packer (A-side: pad bits are 1).
+
+use super::pack::{self, PackedMatrix, WORD_BITS};
+use super::simd;
+
+/// A-panel rows packed per pass; 8 rows × wpr words stays resident while
+/// the J tile loop streams B.
+const MR: usize = 8;
+/// B rows (output columns) per tile, matching the blocked kernels.
+const JB: usize = 64;
+
+/// Fused binarize→pack→xnor GEMM.  `a` is row-major (m, k) floats
+/// (binarized by sign on the fly); `b` is the pre-packed weight operand
+/// ([`PackedMatrix::pack_cols`] layout).  Returns raw popcounts like the
+/// other xnor kernels; map with [`crate::quant::xnor_to_dot`].
+pub fn gemm_fused(a: &[f32], m: usize, k: usize, b: &PackedMatrix) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "gemm_fused: A length mismatch");
+    assert_eq!(b.k, k, "gemm_fused: reduction length mismatch");
+    let n = b.rows;
+    let wpr = k.div_ceil(WORD_BITS);
+    debug_assert_eq!(wpr, b.words_per_row);
+    // Row kernel resolved once per GEMM call (env override + CPU probe).
+    let row = simd::row_fn(simd::best_kernel());
+    let mut c = vec![0i32; m * n];
+    let mut panel = vec![0u64; MR * wpr];
+    for ic in (0..m).step_by(MR) {
+        let mb = MR.min(m - ic);
+        // Binarize+pack this A panel once...
+        for di in 0..mb {
+            let src = &a[(ic + di) * k..(ic + di + 1) * k];
+            pack::pack_row_into(src, &mut panel[di * wpr..(di + 1) * wpr], pack::Side::A);
+        }
+        // ...then reuse it across every B tile while it is cache-hot.
+        for jc in (0..n).step_by(JB) {
+            let jb = JB.min(n - jc);
+            for di in 0..mb {
+                let arow = &panel[di * wpr..(di + 1) * wpr];
+                let ci = (ic + di) * n + jc;
+                let crow = &mut c[ci..ci + jb];
+                for (dj, cv) in crow.iter_mut().enumerate() {
+                    *cv = row(arow, b.row(jc + dj)) as i32;
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack::Side;
+    use super::super::tests::lcg_floats;
+    use super::super::xnor;
+    use super::*;
+
+    #[test]
+    fn fused_matches_pack_then_blocked() {
+        for (m, n, k) in [
+            (1, 1, 1),
+            (1, 9, 63),
+            (9, 1, 64),
+            (5, 7, 65),
+            (8, 8, 128),
+            (17, 70, 333),
+            (23, 40, 1000),
+        ] {
+            let a = lcg_floats(21, m * k);
+            let b = lcg_floats(22, k * n);
+            let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+            let pb = PackedMatrix::pack_cols(&b, k, n);
+            assert_eq!(
+                gemm_fused(&a, m, k, &pb),
+                xnor::gemm_u64_blocked(&pa, &pb),
+                "m={m} n={n} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_handles_partial_last_panel() {
+        // m not a multiple of MR and n not a multiple of JB.
+        let (m, n, k) = (MR + 3, JB + 5, 100);
+        let a = lcg_floats(31, m * k);
+        let b = lcg_floats(32, k * n);
+        let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+        let pb = PackedMatrix::pack_cols(&b, k, n);
+        assert_eq!(gemm_fused(&a, m, k, &pb), xnor::gemm_u64(&pa, &pb));
+    }
+
+    #[test]
+    fn fused_binarizes_by_sign() {
+        // zeros binarize to +1 on both sides: every lane matches, pop = k.
+        let k = 70;
+        let a = vec![0.0f32; k];
+        let pb = PackedMatrix::pack_cols(&vec![1.0f32; k], k, 1);
+        assert_eq!(gemm_fused(&a, 1, k, &pb), vec![k as i32]);
+    }
+}

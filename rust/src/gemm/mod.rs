@@ -9,7 +9,9 @@
 //! | [`xnor::gemm_u32`]         | `xnor_32`     | Listing 3 on 32-bit words       |
 //! | [`xnor::gemm_u64`]         | `xnor_64`     | Listing 3 on 64-bit words       |
 //! | [`xnor::gemm_u64_blocked`] | —             | blocked + unrolled xnor_64      |
-//! | [`parallel::gemm_u64_mt`]  | `xnor_64_omp` | row-partitioned threads         |
+//! | [`parallel::gemm_u64_mt`]  | `xnor_64_omp` | row-partitioned threads × SIMD  |
+//! | [`xnor::gemm_u64_blocked_with`] | `xnor_64_avx2` / `_avx512` / `_neon` | blocked with a pinned [`simd`] row kernel |
+//! | [`fused::gemm_fused`]      | `xnor_fused`  | binarize→pack→GEMM, no packed-A buffer |
 //!
 //! Bit convention (shared with `python/compile/kernels/ref.py` and the
 //! Pallas kernel): bit 1 encodes +1, bit 0 encodes −1, LSB-first within a
@@ -19,12 +21,15 @@
 
 pub mod blocked;
 pub mod dispatch;
+pub mod fused;
 pub mod naive;
 pub mod pack;
 pub mod parallel;
+pub mod simd;
 pub mod xnor;
 
-pub use dispatch::{binary_gemm_f32, xnor_gemm_prepacked, Method};
+pub use dispatch::{binary_gemm_f32, binary_gemm_packed_b, xnor_gemm_prepacked, Method};
+pub use fused::gemm_fused;
 pub use pack::{PackedMatrix, Side};
 
 #[cfg(test)]
@@ -43,15 +48,17 @@ mod tests {
             .collect()
     }
 
-    /// Every variant must equal the naive float GEMM on binarized data.
+    /// Every executable variant must equal the naive float GEMM on
+    /// binarized data (`available()`, not `all()`: the pinned-SIMD
+    /// variants cannot run on CPUs without their instruction set).
     #[test]
     fn all_variants_agree_on_pm_one() {
         for (m, n, k) in [(1, 1, 1), (3, 5, 7), (8, 16, 64), (13, 9, 100), (4, 4, 129)] {
             let a: Vec<f32> = lcg_floats(1, m * k).iter().map(|&x| sign_binarize(x)).collect();
             let b: Vec<f32> = lcg_floats(2, k * n).iter().map(|&x| sign_binarize(x)).collect();
             let expect = naive::gemm_f32(&a, &b, m, n, k);
-            for method in Method::all() {
-                let got = binary_gemm_f32(*method, &a, &b, m, n, k);
+            for method in Method::available() {
+                let got = binary_gemm_f32(method, &a, &b, m, n, k);
                 assert_eq!(got, expect, "method {method:?} m={m} n={n} k={k}");
             }
         }
@@ -67,7 +74,7 @@ mod tests {
         let ab: Vec<f32> = a.iter().map(|&x| sign_binarize(x)).collect();
         let bb: Vec<f32> = b.iter().map(|&x| sign_binarize(x)).collect();
         let expect = naive::gemm_f32(&ab, &bb, m, n, k);
-        for method in [Method::Xnor32, Method::Xnor64, Method::Xnor64Blocked, Method::Xnor64Mt] {
+        for method in Method::available().into_iter().filter(|m| m.is_binary()) {
             assert_eq!(binary_gemm_f32(method, &a, &b, m, n, k), expect, "{method:?}");
         }
     }

@@ -40,27 +40,13 @@ impl PackedMatrix {
     pub fn pack_rows(data: &[f32], rows: usize, k: usize, side: Side) -> Self {
         assert_eq!(data.len(), rows * k, "pack_rows: data length mismatch");
         let words_per_row = k.div_ceil(WORD_BITS);
-        let pad_word_fill = match side {
-            Side::A => u64::MAX,
-            Side::B => 0,
-        };
         let mut words = vec![0u64; rows * words_per_row];
         for r in 0..rows {
-            let row = &data[r * k..(r + 1) * k];
-            let out = &mut words[r * words_per_row..(r + 1) * words_per_row];
-            for (wi, chunk) in row.chunks(WORD_BITS).enumerate() {
-                let mut w: u64 = 0;
-                for (b, &v) in chunk.iter().enumerate() {
-                    if v >= 0.0 {
-                        w |= 1u64 << b;
-                    }
-                }
-                if chunk.len() < WORD_BITS && pad_word_fill != 0 {
-                    // set pad bits above chunk.len()
-                    w |= !0u64 << chunk.len();
-                }
-                out[wi] = w;
-            }
+            pack_row_into(
+                &data[r * k..(r + 1) * k],
+                &mut words[r * words_per_row..(r + 1) * words_per_row],
+                side,
+            );
         }
         Self { rows, k, words_per_row, words }
     }
@@ -130,6 +116,32 @@ impl PackedMatrix {
     /// Bytes used by the packed payload (model-size accounting).
     pub fn payload_bytes(&self) -> usize {
         self.words.len() * 8
+    }
+}
+
+/// Pack one logical row of floats into `out` words, applying the side's
+/// pad-bit convention to the final partial word.  `out.len()` must be
+/// `row.len().div_ceil(64)`.  This is the single source of truth for the
+/// bit/pad layout; [`PackedMatrix::pack_rows`] and the fused GEMM path
+/// (`super::fused`) both go through it so they can never disagree.
+pub fn pack_row_into(row: &[f32], out: &mut [u64], side: Side) {
+    debug_assert_eq!(out.len(), row.len().div_ceil(WORD_BITS));
+    let pad_word_fill = match side {
+        Side::A => u64::MAX,
+        Side::B => 0,
+    };
+    for (wi, chunk) in row.chunks(WORD_BITS).enumerate() {
+        let mut w: u64 = 0;
+        for (b, &v) in chunk.iter().enumerate() {
+            if v >= 0.0 {
+                w |= 1u64 << b;
+            }
+        }
+        if chunk.len() < WORD_BITS && pad_word_fill != 0 {
+            // set pad bits above chunk.len()
+            w |= !0u64 << chunk.len();
+        }
+        out[wi] = w;
     }
 }
 

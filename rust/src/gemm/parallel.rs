@@ -3,6 +3,9 @@
 //! Row-partitioned `std::thread::scope` parallelism: each worker owns a
 //! disjoint band of C rows, so no synchronization is needed inside the
 //! kernel (the same decomposition OpenMP's `parallel for` over `i` gives).
+//! Each band runs the best available SIMD row kernel
+//! ([`super::simd::best_kernel`]) — threads and SIMD compose, matching the
+//! paper's OpenMP-over-intrinsics structure.
 //!
 //! NOTE: this box exposes a single core (`available_parallelism() == 1`),
 //! so the measured speedup over the blocked single-thread kernel is ~1×;
@@ -11,7 +14,8 @@
 //! thread counts to validate the decomposition.
 
 use super::pack::PackedMatrix;
-use super::xnor::gemm_u64_blocked_into;
+use super::simd;
+use super::xnor::blocked_rows_with;
 
 /// Threads to use by default: one per available core.
 pub fn default_threads() -> usize {
@@ -23,9 +27,13 @@ pub fn gemm_u64_mt_with(a: &PackedMatrix, b: &PackedMatrix, threads: usize) -> V
     assert_eq!(a.k, b.k, "reduction length mismatch");
     let (m, n) = (a.rows, b.rows);
     let threads = threads.clamp(1, m.max(1));
+    // Resolve the SIMD row kernel once for the whole GEMM (env read +
+    // preference match), then share the fn pointer across workers: the
+    // omp variant composes threading *on top of* the best row kernel.
+    let row = simd::row_fn(simd::best_kernel());
     let mut c = vec![0i32; m * n];
     if threads == 1 {
-        gemm_u64_blocked_into(a, b, &mut c, 0, m);
+        blocked_rows_with(a, b, &mut c, 0, m, 0, row);
         return c;
     }
     let rows_per = m.div_ceil(threads);
@@ -50,34 +58,12 @@ pub fn gemm_u64_mt_with(a: &PackedMatrix, b: &PackedMatrix, threads: usize) -> V
             s.spawn(move || {
                 // band is rows [begin, end) of C; recompute indices locally
                 let mut local = vec![0i32; (end - begin) * n];
-                band_worker(a, b, &mut local, begin, end, n);
+                blocked_rows_with(a, b, &mut local, begin, end, begin, row);
                 band.copy_from_slice(&local);
             });
         }
     });
     c
-}
-
-fn band_worker(
-    a: &PackedMatrix,
-    b: &PackedMatrix,
-    local: &mut [i32],
-    begin: usize,
-    end: usize,
-    n: usize,
-) {
-    const JB: usize = 64;
-    let wpr = a.words_per_row;
-    for jc in (0..n).step_by(JB) {
-        let jb = JB.min(n - jc);
-        for i in begin..end {
-            let arow = a.row(i);
-            let crow = &mut local[(i - begin) * n + jc..(i - begin) * n + jc + jb];
-            for (dj, cv) in crow.iter_mut().enumerate() {
-                *cv = super::xnor::xnor_popcount_row(arow, b.row(jc + dj), wpr);
-            }
-        }
-    }
 }
 
 /// Multi-threaded blocked xnor GEMM with the default thread count.

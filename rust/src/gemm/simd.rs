@@ -1,0 +1,545 @@
+//! Explicit SIMD popcount row kernels with runtime CPU-feature dispatch.
+//!
+//! This module is the repo's only home for `unsafe` code.  It provides one
+//! job — the xnor+popcount reduction over a pair of packed `u64` rows — in
+//! four implementations:
+//!
+//! | [`Kernel`]         | instruction set        | words / step | technique |
+//! |--------------------|------------------------|--------------|-----------|
+//! | [`Kernel::Scalar`] | portable               | 1            | `count_ones()` zip/sum (auto-vectorizes under `-C target-cpu=native`) |
+//! | [`Kernel::Avx2`]   | AVX2                   | 64           | Harley–Seal carry-save adder tree over 16×256-bit lanes + Muła nibble-LUT popcount |
+//! | [`Kernel::Avx512`] | AVX-512 `VPOPCNTDQ`    | 8            | hardware 64-bit lane popcount (`--features simd-avx512`; intrinsics need rustc ≥ 1.89) |
+//! | [`Kernel::Neon`]   | AArch64 NEON           | 2            | `vcnt` byte popcount + `vpaddl` widening-pairwise reduction |
+//!
+//! Dispatch is decided at **runtime** ([`best_kernel`]) from std's cached
+//! CPU-feature detection, and can be pinned to the portable path with the
+//! `BMXNET_FORCE_SCALAR` environment variable (any of `1`/`true`/`yes`) —
+//! the override the CI test matrix uses to exercise the fallback path.
+//!
+//! # Input convention (shared with [`super::pack`])
+//!
+//! Kernels never mask tail words themselves: they rely on the packing
+//! invariant that A-side pad bits are 1 and B-side pad bits are 0, so every
+//! padded lane xnors to 0 and contributes nothing.  A corrupted pad bit
+//! therefore *shifts the popcount* — the differential tests
+//! (`rust/tests/gemm_differential.rs`, `rust/tests/proptests.rs`) pin both
+//! the invariant and the loud failure mode.
+//!
+//! # Safety argument (see also DESIGN.md §SIMD popcount dispatch)
+//!
+//! Every `unsafe fn` below is a `#[target_feature]` kernel; the only
+//! obligation a caller must discharge is "the CPU supports that feature"
+//! (all memory access is through slice reads with explicit bounds: the
+//! vector loops consume `len() - len() % STEP` words via unaligned loads
+//! and the scalar tail handles the rest, so no out-of-bounds access is
+//! possible regardless of feature support).  The kernels are reachable
+//! only through the safe `*_checked` wrappers, each of which re-verifies
+//! the CPU feature via std's cached `is_*_feature_detected!` on every call
+//! and falls back to [`scalar_row`] when unsupported — misuse degrades to
+//! the portable path, never to undefined behavior.
+
+use std::sync::OnceLock;
+
+/// A popcount row-kernel implementation level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// Portable `count_ones()` zip/sum.
+    Scalar,
+    /// AVX2 Harley–Seal (x86-64).
+    Avx2,
+    /// AVX-512 `VPOPCNTDQ` (x86-64, `--features simd-avx512`).
+    Avx512,
+    /// NEON `vcnt`+`vpaddl` (aarch64).
+    Neon,
+}
+
+/// The signature every row kernel shares: xnor+popcount over
+/// `min(a.len(), b.len())` packed words.
+pub type RowFn = fn(&[u64], &[u64]) -> u32;
+
+impl Kernel {
+    /// Stable display name (used in logs and bench provenance strings).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Avx512 => "avx512",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Does the running CPU (and compiled feature set) support this
+    /// kernel?  Ignores the `BMXNET_FORCE_SCALAR` override — see
+    /// [`Kernel::dispatchable`].
+    pub fn cpu_supported(&self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+            Kernel::Avx512 => {
+                is_x86_feature_detected!("avx512f")
+                    && is_x86_feature_detected!("avx512vpopcntdq")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Would [`best_kernel`]-style dispatch be allowed to pick this kernel
+    /// right now?  `cpu_supported` gated by the force-scalar override.
+    pub fn dispatchable(&self) -> bool {
+        matches!(self, Kernel::Scalar) || (!force_scalar() && self.cpu_supported())
+    }
+}
+
+/// True when the `BMXNET_FORCE_SCALAR` env override pins the scalar path.
+///
+/// Read on every call (not cached) so tests and long-running processes
+/// observe changes; the read happens once per GEMM entry, not per row.
+pub fn force_scalar() -> bool {
+    matches!(
+        std::env::var("BMXNET_FORCE_SCALAR").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// CPU capability probe, cached once per process (detection macros cache
+/// internally too; this avoids re-matching the preference order).
+fn detected_best() -> Kernel {
+    static BEST: OnceLock<Kernel> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        for k in [Kernel::Avx512, Kernel::Avx2, Kernel::Neon] {
+            if k.cpu_supported() {
+                return k;
+            }
+        }
+        Kernel::Scalar
+    })
+}
+
+/// The kernel runtime dispatch selects right now: the widest supported
+/// SIMD level, unless `BMXNET_FORCE_SCALAR` pins the scalar path.
+pub fn best_kernel() -> Kernel {
+    if force_scalar() {
+        Kernel::Scalar
+    } else {
+        detected_best()
+    }
+}
+
+/// Every kernel [`Kernel::dispatchable`] on this machine, scalar first.
+pub fn available_kernels() -> Vec<Kernel> {
+    [Kernel::Scalar, Kernel::Avx2, Kernel::Avx512, Kernel::Neon]
+        .into_iter()
+        .filter(|k| k.dispatchable())
+        .collect()
+}
+
+/// Resolve a kernel to its callable row function.  Kernels that are not
+/// supported by the running CPU resolve to [`scalar_row`] (the safe
+/// wrappers re-check, so even a stale pointer can never execute an
+/// unsupported instruction — see the module-level safety argument).
+pub fn row_fn(kernel: Kernel) -> RowFn {
+    match kernel {
+        Kernel::Scalar => scalar_row,
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => row_avx2_checked,
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        Kernel::Avx512 => row_avx512_checked,
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => row_neon_checked,
+        #[allow(unreachable_patterns)]
+        _ => scalar_row,
+    }
+}
+
+/// Portable xnor+popcount row reduction — the reference every SIMD kernel
+/// is differentially pinned against.
+///
+/// §Perf note: deliberately the *simple* zip/sum form; with
+/// `-C target-cpu=native` LLVM auto-vectorizes it (EXPERIMENTS.md §Perf
+/// records how a manual scalar unroll defeated that and lost 1.6×).
+#[inline]
+pub fn scalar_row(arow: &[u64], brow: &[u64]) -> u32 {
+    arow.iter().zip(brow).map(|(&a, &b)| (!(a ^ b)).count_ones()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// x86-64: AVX2 Harley–Seal
+// ---------------------------------------------------------------------------
+
+/// Safe wrapper: re-verifies AVX2 via std's cached detection on every
+/// call; falls back to [`scalar_row`] when unsupported.  This check is the
+/// entire safety argument for calling the `#[target_feature]` kernel.
+#[cfg(target_arch = "x86_64")]
+fn row_avx2_checked(arow: &[u64], brow: &[u64]) -> u32 {
+    if is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just confirmed; the kernel performs
+        // only in-bounds slice reads (see module safety argument).
+        unsafe { x86::row_avx2(arow, brow) }
+    } else {
+        scalar_row(arow, brow)
+    }
+}
+
+/// Safe wrapper for the AVX-512 VPOPCNTDQ kernel; same contract as
+/// [`row_avx2_checked`].
+#[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+fn row_avx512_checked(arow: &[u64], brow: &[u64]) -> u32 {
+    if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+        // SAFETY: AVX-512F + VPOPCNTDQ support was just confirmed; the
+        // kernel performs only in-bounds slice reads.
+        unsafe { x86_512::row_avx512(arow, brow) }
+    } else {
+        scalar_row(arow, brow)
+    }
+}
+
+/// Safe wrapper for the NEON kernel; same contract as
+/// [`row_avx2_checked`].
+#[cfg(target_arch = "aarch64")]
+fn row_neon_checked(arow: &[u64], brow: &[u64]) -> u32 {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        // SAFETY: NEON support was just confirmed; the kernel performs
+        // only in-bounds slice reads.
+        unsafe { arm::row_neon(arow, brow) }
+    } else {
+        scalar_row(arow, brow)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 Harley–Seal popcount (Muła / Kurz / Lemire, "Faster population
+    //! counts using AVX2 instructions").  A carry-save adder (CSA) tree
+    //! compresses 16 input vectors per iteration so the relatively
+    //! expensive byte-LUT popcount runs once per 16 vectors instead of
+    //! once per vector; lower CSA tiers carry the残 remainder weights out
+    //! of the loop.
+
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount of a 256-bit vector via the 4-bit nibble
+    /// lookup table (`vpshufb`) and `vpsadbw` byte-sum.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount64x4(v: __m256i) -> __m256i {
+        let lookup = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lookup, lo),
+            _mm256_shuffle_epi8(lookup, hi),
+        );
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// Carry-save adder: (high, low) full-adder over three bit-vectors.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+        let u = _mm256_xor_si256(a, b);
+        let h = _mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c));
+        let l = _mm256_xor_si256(u, c);
+        (h, l)
+    }
+
+    /// Load 4 words from each operand (unaligned) and xnor them.
+    ///
+    /// # Safety
+    /// Requires AVX2; `a` and `b` must be readable for 4 u64 words.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xnor4(a: *const u64, b: *const u64, inv: __m256i) -> __m256i {
+        let va = _mm256_loadu_si256(a as *const __m256i);
+        let vb = _mm256_loadu_si256(b as *const __m256i);
+        _mm256_xor_si256(_mm256_xor_si256(va, vb), inv)
+    }
+
+    /// Harley–Seal xnor+popcount over `min(len, len)` words: 64 words per
+    /// CSA iteration, 4-word vector remainder, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime (enforced by `row_avx2_checked`).  All
+    /// loads are bounded: the 64-word loop and the 4-word loop only run
+    /// while `i + STEP <= n`, and the tail uses safe slice indexing.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_avx2(arow: &[u64], brow: &[u64]) -> u32 {
+        let n = arow.len().min(brow.len());
+        let ap = arow.as_ptr();
+        let bp = brow.as_ptr();
+        let inv = _mm256_set1_epi64x(-1);
+        let mut total = _mm256_setzero_si256();
+        let mut ones = _mm256_setzero_si256();
+        let mut twos = _mm256_setzero_si256();
+        let mut fours = _mm256_setzero_si256();
+        let mut eights = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let d0 = xnor4(ap.add(i), bp.add(i), inv);
+            let d1 = xnor4(ap.add(i + 4), bp.add(i + 4), inv);
+            let (twos_a, l) = csa(ones, d0, d1);
+            ones = l;
+            let d2 = xnor4(ap.add(i + 8), bp.add(i + 8), inv);
+            let d3 = xnor4(ap.add(i + 12), bp.add(i + 12), inv);
+            let (twos_b, l) = csa(ones, d2, d3);
+            ones = l;
+            let (fours_a, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let d4 = xnor4(ap.add(i + 16), bp.add(i + 16), inv);
+            let d5 = xnor4(ap.add(i + 20), bp.add(i + 20), inv);
+            let (twos_a, l) = csa(ones, d4, d5);
+            ones = l;
+            let d6 = xnor4(ap.add(i + 24), bp.add(i + 24), inv);
+            let d7 = xnor4(ap.add(i + 28), bp.add(i + 28), inv);
+            let (twos_b, l) = csa(ones, d6, d7);
+            ones = l;
+            let (fours_b, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (eights_a, l) = csa(fours, fours_a, fours_b);
+            fours = l;
+            let d8 = xnor4(ap.add(i + 32), bp.add(i + 32), inv);
+            let d9 = xnor4(ap.add(i + 36), bp.add(i + 36), inv);
+            let (twos_a, l) = csa(ones, d8, d9);
+            ones = l;
+            let d10 = xnor4(ap.add(i + 40), bp.add(i + 40), inv);
+            let d11 = xnor4(ap.add(i + 44), bp.add(i + 44), inv);
+            let (twos_b, l) = csa(ones, d10, d11);
+            ones = l;
+            let (fours_a, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let d12 = xnor4(ap.add(i + 48), bp.add(i + 48), inv);
+            let d13 = xnor4(ap.add(i + 52), bp.add(i + 52), inv);
+            let (twos_a, l) = csa(ones, d12, d13);
+            ones = l;
+            let d14 = xnor4(ap.add(i + 56), bp.add(i + 56), inv);
+            let d15 = xnor4(ap.add(i + 60), bp.add(i + 60), inv);
+            let (twos_b, l) = csa(ones, d14, d15);
+            ones = l;
+            let (fours_b, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (eights_b, l) = csa(fours, fours_a, fours_b);
+            fours = l;
+            let (sixteens, l) = csa(eights, eights_a, eights_b);
+            eights = l;
+            total = _mm256_add_epi64(total, popcount64x4(sixteens));
+            i += 64;
+        }
+        // Weight the CSA tiers: total counted 16s; eights/fours/twos/ones
+        // hold the deferred remainder bits at weights 8/4/2/1.
+        total = _mm256_slli_epi64(total, 4);
+        total = _mm256_add_epi64(total, _mm256_slli_epi64(popcount64x4(eights), 3));
+        total = _mm256_add_epi64(total, _mm256_slli_epi64(popcount64x4(fours), 2));
+        total = _mm256_add_epi64(total, _mm256_slli_epi64(popcount64x4(twos), 1));
+        total = _mm256_add_epi64(total, popcount64x4(ones));
+        while i + 4 <= n {
+            total = _mm256_add_epi64(total, popcount64x4(xnor4(ap.add(i), bp.add(i), inv)));
+            i += 4;
+        }
+        // SAFETY: __m256i is plain 256-bit data; viewing it as 4 u64
+        // lanes is the layout `_mm256_add_epi64` already assumes.
+        let lanes: [u64; 4] = core::mem::transmute(total);
+        let mut acc = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        while i < n {
+            acc += u64::from((!(arow[i] ^ brow[i])).count_ones());
+            i += 1;
+        }
+        acc as u32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64: AVX-512 VPOPCNTDQ (feature-gated: intrinsics stabilized in 1.89,
+// after this crate's 1.74 MSRV — mirror of the `pjrt` gating pattern)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+mod x86_512 {
+    //! Hardware per-lane popcount: `vpopcntq` counts all 8 u64 lanes of a
+    //! zmm register in one instruction — the instruction the Harley–Seal
+    //! tree above exists to approximate on AVX2-only parts.
+
+    use std::arch::x86_64::*;
+
+    /// xnor+popcount over packed words, 8 per step, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX-512F + AVX-512VPOPCNTDQ at runtime (enforced by
+    /// `row_avx512_checked`).  Loads are `read_unaligned` of 8-word
+    /// blocks only while `i + 8 <= n`; the tail uses safe indexing.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn row_avx512(arow: &[u64], brow: &[u64]) -> u32 {
+        let n = arow.len().min(brow.len());
+        let ap = arow.as_ptr();
+        let bp = brow.as_ptr();
+        let inv = _mm512_set1_epi64(-1);
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n bounds both 64-byte reads; unaligned
+            // reads avoid any alignment requirement on the slices.
+            let va = core::ptr::read_unaligned(ap.add(i) as *const __m512i);
+            let vb = core::ptr::read_unaligned(bp.add(i) as *const __m512i);
+            let x = _mm512_xor_si512(_mm512_xor_si512(va, vb), inv);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(x));
+            i += 8;
+        }
+        // SAFETY: __m512i viewed as its 8 u64 lanes (same layout
+        // _mm512_add_epi64 assumes).
+        let lanes: [u64; 8] = core::mem::transmute(acc);
+        let mut total: u64 = lanes.iter().sum();
+        while i < n {
+            total += u64::from((!(arow[i] ^ brow[i])).count_ones());
+            i += 1;
+        }
+        total as u32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON vcnt
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    //! NEON byte popcount: `vcnt.8` counts bits per byte, then a
+    //! `vpaddl` widening-pairwise ladder (u8→u16→u32→u64) folds the 16
+    //! byte counts into two u64 lane accumulators — the daBNN/XNOR-Net
+    //! deployment ISA the paper targets for low-power inference.
+
+    use std::arch::aarch64::*;
+
+    /// xnor+popcount over packed words, 2 per step, scalar tail.
+    ///
+    /// # Safety
+    /// Requires NEON at runtime (enforced by `row_neon_checked`; NEON is
+    /// architecturally mandatory on AArch64).  Loads run only while
+    /// `i + 2 <= n`; the tail uses safe indexing.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_neon(arow: &[u64], brow: &[u64]) -> u32 {
+        let n = arow.len().min(brow.len());
+        let ap = arow.as_ptr();
+        let bp = brow.as_ptr();
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            // SAFETY: i + 2 <= n bounds both 16-byte reads.
+            let va = vld1q_u64(ap.add(i));
+            let vb = vld1q_u64(bp.add(i));
+            let x = vmvnq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+            let cnt = vcntq_u8(x);
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+            i += 2;
+        }
+        let mut total = vgetq_lane_u64(acc, 0) + vgetq_lane_u64(acc, 1);
+        while i < n {
+            total += u64::from((!(arow[i] ^ brow[i])).count_ones());
+            i += 1;
+        }
+        total as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic word patterns exercising dense, sparse and
+    /// alternating bit layouts.
+    fn words(seed: u64, n: usize) -> Vec<u64> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                s ^ (s >> 29)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scalar_row_matches_direct_popcount() {
+        for n in [0, 1, 2, 3, 4, 7, 8, 63, 64, 65, 100, 200] {
+            let a = words(1, n);
+            let b = words(2, n);
+            let expect: u32 = (0..n).map(|i| (!(a[i] ^ b[i])).count_ones()).sum();
+            assert_eq!(scalar_row(&a, &b), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn every_dispatchable_kernel_matches_scalar() {
+        // The in-process differential gate: each kernel the CPU supports
+        // must agree with the scalar reference on every length class
+        // (sub-vector, vector remainder, full CSA blocks, odd tails).
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 31, 63, 64, 65, 127, 128, 129, 200, 257]
+        {
+            let a = words(3 + n as u64, n);
+            let b = words(1000 + n as u64, n);
+            let expect = scalar_row(&a, &b);
+            for k in available_kernels() {
+                assert_eq!(row_fn(k)(&a, &b), expect, "kernel {k:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_handle_all_match_and_all_mismatch() {
+        for n in [1usize, 64, 65, 130] {
+            let ones = vec![u64::MAX; n];
+            let zeros = vec![0u64; n];
+            for k in available_kernels() {
+                let f = row_fn(k);
+                assert_eq!(f(&ones, &ones), (n * 64) as u32, "{k:?} all-match n={n}");
+                assert_eq!(f(&ones, &zeros), 0, "{k:?} all-mismatch n={n}");
+                assert_eq!(f(&zeros, &zeros), (n * 64) as u32, "{k:?} zeros match n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_always_dispatchable_and_first() {
+        let ks = available_kernels();
+        assert_eq!(ks.first(), Some(&Kernel::Scalar));
+        assert!(Kernel::Scalar.dispatchable());
+    }
+
+    #[test]
+    fn best_kernel_is_dispatchable() {
+        assert!(best_kernel().dispatchable());
+        assert!(available_kernels().contains(&best_kernel()));
+    }
+
+    #[test]
+    fn force_scalar_env_pins_scalar() {
+        // Only meaningful when the harness (CI matrix leg) sets the env;
+        // asserts the override is honored end to end in that case.
+        if force_scalar() {
+            assert_eq!(best_kernel(), Kernel::Scalar);
+            assert_eq!(available_kernels(), vec![Kernel::Scalar]);
+            assert!(!Kernel::Avx2.dispatchable());
+            assert!(!Kernel::Avx512.dispatchable());
+            assert!(!Kernel::Neon.dispatchable());
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Kernel::Scalar.label(), "scalar");
+        assert_eq!(Kernel::Avx2.label(), "avx2");
+        assert_eq!(Kernel::Avx512.label(), "avx512");
+        assert_eq!(Kernel::Neon.label(), "neon");
+    }
+}

@@ -7,6 +7,7 @@
 //! single-instruction hardware support the paper leans on.
 
 use super::pack::PackedMatrix;
+use super::simd::{self, RowFn};
 
 /// Listing 3 on 32-bit BINARY_WORDs (`xnor_32`): x86/ARMv7 width.
 pub fn gemm_u32(a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
@@ -80,37 +81,52 @@ pub(crate) fn gemm_u64_blocked_into(
     row_begin: usize,
     row_end: usize,
 ) {
+    blocked_rows_with(a, b, c, row_begin, row_end, 0, simd::scalar_row);
+}
+
+/// Blocked xnor GEMM with an explicit SIMD row kernel — the entry point
+/// behind the `xnor_64_avx2` / `xnor_64_avx512` / `xnor_64_neon` /
+/// `xnor_fused` dispatch variants.  Same tiling as [`gemm_u64_blocked`];
+/// only the inner popcount reduction changes.
+pub fn gemm_u64_blocked_with(a: &PackedMatrix, b: &PackedMatrix, row: RowFn) -> Vec<i32> {
+    assert_eq!(a.k, b.k, "reduction length mismatch");
+    let (m, n) = (a.rows, b.rows);
+    let mut c = vec![0i32; m * n];
+    blocked_rows_with(a, b, &mut c, 0, m, 0, row);
+    c
+}
+
+/// Tile loop shared by the single-threaded and per-band multi-threaded
+/// paths: computes C rows `[row_begin, row_end)` with row kernel `row`
+/// into `c`, whose row 0 corresponds to A row `out_row0` (pass
+/// `out_row0 = row_begin` for a band-local buffer, 0 for a full buffer).
+pub(crate) fn blocked_rows_with(
+    a: &PackedMatrix,
+    b: &PackedMatrix,
+    c: &mut [i32],
+    row_begin: usize,
+    row_end: usize,
+    out_row0: usize,
+    row: RowFn,
+) {
     const JB: usize = 64; // B rows (output cols) per tile: JB*wpr*8B in L1/L2
-    let (n, wpr) = (b.rows, a.words_per_row);
+    let n = b.rows;
     for jc in (0..n).step_by(JB) {
         let jb = JB.min(n - jc);
         for i in row_begin..row_end {
             let arow = a.row(i);
-            let crow = &mut c[i * n + jc..i * n + jc + jb];
+            let ci = (i - out_row0) * n + jc;
+            let crow = &mut c[ci..ci + jb];
             for (dj, cv) in crow.iter_mut().enumerate() {
-                let brow = b.row(jc + dj);
-                *cv = xnor_popcount_row(arow, brow, wpr);
+                *cv = row(arow, b.row(jc + dj)) as i32;
             }
         }
     }
 }
 
-/// Single-row xnor popcount reduction.
-///
-/// §Perf note: this is deliberately the *simple* zip/sum form.  With
-/// `-C target-cpu=native` LLVM auto-vectorizes it to AVX-512
-/// `vpopcntq` (8×u64 per instruction) on this box; a manual 4-accumulator
-/// scalar unroll (the first implementation) *defeated* that
-/// vectorization and measured ~1.6× slower — see EXPERIMENTS.md §Perf.
-#[inline]
-pub(crate) fn xnor_popcount_row(arow: &[u64], brow: &[u64], wpr: usize) -> i32 {
-    debug_assert!(arow.len() >= wpr && brow.len() >= wpr);
-    arow[..wpr]
-        .iter()
-        .zip(&brow[..wpr])
-        .map(|(&a, &b)| (!(a ^ b)).count_ones())
-        .sum::<u32>() as i32
-}
+// The single-row scalar reduction lives in [`super::simd::scalar_row`]
+// (with its §Perf note about auto-vectorization); this module's blocked
+// loops take any [`RowFn`] and default to it.
 
 #[cfg(test)]
 mod tests {

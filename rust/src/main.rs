@@ -20,8 +20,10 @@ use std::time::{Duration, Instant};
 
 use repro::bench::harness::fmt_ms;
 use repro::bench::{
-    fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure, GemmWorkload,
+    fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure_methods, write_gemm_json,
+    GemmFigureRecord, GemmWorkload,
 };
+use repro::gemm::{simd, Method};
 use repro::coordinator::BatchPolicy;
 use repro::data::Kind;
 use repro::model::bmx::{convert, BmxModel};
@@ -72,8 +74,17 @@ fn print_help() {
          \x20         [--max-batch B] [--window-us U] [--queue-cap Q]\n\
          \x20         [--mem-budget-mb M]             multi-model HTTP gateway\n\
          \x20 synth-models --out D [--seed S]         synthetic lenet_bin/_q4 .bmx\n\
-         \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\n\
-         common: --artifacts DIR (default ./artifacts)"
+         \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\
+         \x20         [--json F.json]                 record rows to BENCH_gemm.json\n\
+         \x20         [--method LABEL]                time one method (see labels below)\n\n\
+         common: --artifacts DIR (default ./artifacts)\n\
+         env:    BMXNET_FORCE_SCALAR=1 pins the scalar popcount kernel\n\
+         gemm methods on this machine: {}",
+        Method::available()
+            .iter()
+            .map(|m| m.label())
+            .collect::<Vec<_>>()
+            .join(" ")
     );
 }
 
@@ -255,6 +266,7 @@ fn cmd_predict(flags: &Flags) -> Result<()> {
     };
     let kind = flags.dataset(kind)?;
     let ds = kind.generate(n, flags.usize("seed", 7)? as u64);
+    println!("dispatch: {}", engine.dispatch_summary());
     let t0 = Instant::now();
     let acc = engine.accuracy(&ds.images, &ds.labels, batch)?;
     let wall = t0.elapsed();
@@ -316,6 +328,11 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     for m in &available {
         println!("  {:<24} [{}]", m.name, m.source);
     }
+    println!(
+        "gemm dispatch: method {} · kernel {}",
+        Method::auto().label(),
+        simd::best_kernel().label()
+    );
     println!("try: curl http://{}/v1/models", gateway.addr());
     // Models load lazily on first request; serve until the process dies.
     loop {
@@ -347,20 +364,65 @@ fn cmd_synth_models(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_bench_gemm(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["figure", "full", "reps", "json", "method", "artifacts"])?;
     let reduced = !flags.bool("full");
     let reps = flags.usize("reps", 2)?;
+    // --method LABEL times a single variant (speedup columns would divide
+    // by themselves, so single-method runs always print absolute ms).
+    let methods: Vec<Method> = match flags.str("method") {
+        None => Method::available(),
+        Some(label) => {
+            let m = Method::from_label(label).ok_or_else(|| {
+                anyhow!(
+                    "unknown method {label:?} (known: {})",
+                    Method::all().iter().map(|m| m.label()).collect::<Vec<_>>().join(" ")
+                )
+            })?;
+            if !m.is_available() {
+                bail!(
+                    "method {label:?} cannot run on this machine (available: {})",
+                    Method::available()
+                        .iter()
+                        .map(|m| m.label())
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+            }
+            vec![m]
+        }
+    };
+    let single = methods.len() == 1;
     let figures: Vec<usize> = match flags.str("figure") {
         None => vec![1, 2, 3],
         Some(f) => vec![f.parse().context("--figure")?],
     };
-    for fig in figures {
+    let mut records = Vec::new();
+    for fig in &figures {
         let (title, xlabel, workloads): (&str, &str, Vec<GemmWorkload>) = match fig {
             1 => ("Figure 1: GEMM time vs input channels", "C", fig1_workloads(reduced)),
             2 => ("Figure 2: speedup vs filter number", "filters", fig2_workloads(reduced)),
             3 => ("Figure 3: speedup vs kernel size", "kernel", fig3_workloads(reduced)),
             other => bail!("unknown figure {other}"),
         };
-        run_gemm_figure(title, xlabel, &workloads, reps, fig == 1);
+        let absolute = *fig == 1 || single;
+        let rows = run_gemm_figure_methods(title, xlabel, &workloads, reps, absolute, &methods);
+        records.push(GemmFigureRecord {
+            figure: format!("fig{fig}"),
+            xlabel: xlabel.to_string(),
+            absolute_times: absolute,
+            rows,
+        });
+    }
+    if let Some(path) = flags.str("json") {
+        let provenance = format!(
+            "bmxnet bench-gemm · {} · kernel {} · {} shapes · best-of-{reps}",
+            std::env::consts::ARCH,
+            simd::best_kernel().label(),
+            if reduced { "reduced (batch 20)" } else { "paper-exact (batch 200)" },
+        );
+        write_gemm_json(path, &provenance, &records)
+            .with_context(|| format!("write {path:?}"))?;
+        println!("recorded {} figure(s) to {path}", records.len());
     }
     if reduced {
         println!("(reduced shapes: batch 20; pass --full for paper-exact batch 200)");

@@ -3,6 +3,12 @@
 //! The `.bmx` metadata JSON names the architecture and its hyperparameters;
 //! `Engine` parses it and routes to the right graph.  This is what the
 //! serving coordinator and the CLI `predict` command use.
+//!
+//! The binary layers' forward path runs [`crate::gemm::Method::auto`] —
+//! the fused
+//! binarize→pack→xnor GEMM with runtime SIMD dispatch
+//! ([`crate::gemm::simd::best_kernel`]); [`Engine::dispatch_summary`]
+//! reports what that resolves to on the running machine.
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -105,6 +111,19 @@ impl Engine {
             .collect())
     }
 
+    /// One-line description of the GEMM dispatch this engine's binary
+    /// layers will use, e.g. `x86_64 · method xnor_fused · kernel avx2`.
+    /// Logged by `bmxnet predict` / `serve` so perf reports can name the
+    /// code path that produced them.
+    pub fn dispatch_summary(&self) -> String {
+        format!(
+            "{arch} · method {method} · kernel {kernel}",
+            arch = std::env::consts::ARCH,
+            method = crate::gemm::Method::auto().label(),
+            kernel = crate::gemm::simd::best_kernel().label(),
+        )
+    }
+
     /// Top-1 accuracy over a dataset slice.
     pub fn accuracy(&self, images: &[f32], labels: &[i32], batch: usize) -> Result<f64> {
         let [c, h, w] = self.input_shape();
@@ -172,6 +191,18 @@ mod tests {
         let mut m = lenet_model(false);
         m.meta = r#"{"arch": "vgg"}"#.to_string();
         assert!(Engine::from_bmx(&m).is_err());
+    }
+
+    #[test]
+    fn dispatch_summary_names_method_and_kernel() {
+        let m = lenet_model(true);
+        let e = Engine::from_bmx(&m).unwrap();
+        let s = e.dispatch_summary();
+        assert!(s.contains("xnor_fused"), "summary missing method: {s}");
+        assert!(
+            s.contains(crate::gemm::simd::best_kernel().label()),
+            "summary missing kernel: {s}"
+        );
     }
 
     #[test]

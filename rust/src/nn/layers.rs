@@ -1,12 +1,13 @@
 //! Inference-engine layers.
 //!
 //! Float layers (Conv2d, Dense) run im2col + the blocked f32 GEMM; binary
-//! layers (QConv2d, QDense) run im2col + bit-packing + the xnor GEMM and
+//! layers (QConv2d, QDense) run im2col + the fused binarize→pack→xnor GEMM
+//! ([`Method::auto`], overridable per layer via the `method` field) and
 //! map popcounts back to the ±1 dot range (`2*pop − K`).  QConv2d pads
 //! with **+1** (matching `python/compile/layers.py::qconv2d`) because a
 //! zero pad is unrepresentable in the xnor domain.
 
-use crate::gemm::{self, Method, PackedMatrix, Side};
+use crate::gemm::{self, Method, PackedMatrix};
 use crate::quant::{qactivation_bin, xnor_to_dot};
 use crate::tensor::{conv_output_size, im2col, Tensor};
 
@@ -83,7 +84,7 @@ impl QConv2d {
         let [o, c, kh, kw] = shape;
         assert_eq!(packed.rows, o);
         assert_eq!(packed.k, c * kh * kw);
-        Self { packed, out_ch: o, in_ch: c, kh, kw, stride, pad, method: Method::Xnor64Blocked }
+        Self { packed, out_ch: o, in_ch: c, kh, kw, stride, pad, method: Method::auto() }
     }
 
     pub fn forward(&self, x: &Tensor) -> Tensor {
@@ -93,8 +94,7 @@ impl QConv2d {
         let (cols, rows, k) = im2col(xp.data(), n, c, h, w, self.kh, self.kw, self.stride, 0);
         let ho = conv_output_size(h, self.kh, self.stride, 0);
         let wo = conv_output_size(w, self.kw, self.stride, 0);
-        let pa = PackedMatrix::pack_rows(&cols, rows, k, Side::A);
-        let pops = gemm::xnor_gemm_prepacked(self.method, &pa, &self.packed);
+        let pops = gemm::binary_gemm_packed_b(self.method, &cols, rows, k, &self.packed);
         let dots: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
         let y = rows_to_nchw(&dots, n, self.out_ch, ho, wo);
         Tensor::new(vec![n, self.out_ch, ho, wo], y)
@@ -151,14 +151,13 @@ impl QDense {
     pub fn new(packed: PackedMatrix, out_dim: usize, in_dim: usize) -> Self {
         assert_eq!(packed.rows, out_dim);
         assert_eq!(packed.k, in_dim);
-        Self { packed, out_dim, in_dim, method: Method::Xnor64Blocked }
+        Self { packed, out_dim, in_dim, method: Method::auto() }
     }
 
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let (bsz, k) = (x.shape()[0], x.shape()[1]);
         assert_eq!(k, self.in_dim, "qdense input dim mismatch");
-        let pa = PackedMatrix::pack_rows(x.data(), bsz, k, Side::A);
-        let pops = gemm::xnor_gemm_prepacked(self.method, &pa, &self.packed);
+        let pops = gemm::binary_gemm_packed_b(self.method, x.data(), bsz, k, &self.packed);
         let out: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
         Tensor::new(vec![bsz, self.out_dim], out)
     }
@@ -341,6 +340,7 @@ fn add_channel_bias(y: &mut [f32], b: &[f32], ch: usize, spatial: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::Side;
     use crate::quant::sign_binarize;
 
     fn lcg(seed: u64, n: usize) -> Vec<f32> {

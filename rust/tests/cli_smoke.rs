@@ -101,6 +101,38 @@ fn method_labels_are_the_pinned_strings() {
     let labels: Vec<&str> = Method::all().iter().map(|m| m.label()).collect();
     assert_eq!(
         labels,
-        ["naive", "cblas", "xnor_32", "xnor_64", "xnor_64_blk", "xnor_64_omp"]
+        [
+            "naive",
+            "cblas",
+            "xnor_32",
+            "xnor_64",
+            "xnor_64_blk",
+            "xnor_64_omp",
+            "xnor_64_avx2",
+            "xnor_64_avx512",
+            "xnor_64_neon",
+            "xnor_fused",
+        ]
     );
+}
+
+#[test]
+fn available_methods_are_a_stable_subset() {
+    // `available()` filters `all()` without reordering, always keeps the
+    // portable variants, and labels stay round-trippable even for
+    // variants this machine cannot run (the catalog is cross-arch).
+    let all: Vec<Method> = Method::all().to_vec();
+    let avail = Method::available();
+    let mut last_idx = 0;
+    for m in &avail {
+        let idx = all.iter().position(|x| x == m).expect("available ⊆ all");
+        assert!(idx >= last_idx, "available() must preserve catalog order");
+        last_idx = idx;
+    }
+    for label in [
+        "naive", "cblas", "xnor_32", "xnor_64", "xnor_64_blk", "xnor_64_omp", "xnor_fused",
+    ] {
+        let m = Method::from_label(label).unwrap();
+        assert!(avail.contains(&m), "{label} must always be available");
+    }
 }

@@ -1,0 +1,409 @@
+#!/usr/bin/env python3
+"""Differential reference port of the Rust xnor-GEMM kernel family.
+
+This script is the cross-language leg of the kernel-correctness harness
+(`rust/tests/gemm_differential.rs`): it re-implements the bit-packing
+convention and every popcount kernel *algorithm* from
+`rust/src/gemm/{pack,simd,fused}.rs` in Python and checks them
+bit-exactly against a naive ±1 float GEMM.  The AVX2 Harley–Seal kernel
+is simulated exactly: each 256-bit vector register is a masked Python
+int, and because every instruction the kernel uses (xor/and/or, and a
+final per-lane popcount whose lanes are ultimately summed) is
+lane-independent, the simulation reproduces the real kernel's arithmetic
+including the CSA tier ordering, the 64-word block loop, the 4-word
+remainder loop and the scalar tail — the places tail bugs live.
+
+Modes:
+  default         run the differential suite; exit nonzero on any mismatch
+  --bench PATH    additionally time the port's implementations on the
+                  reduced Figure 1-3 shapes and write PATH in the
+                  BENCH_gemm.json schema (see rust/src/bench/record.rs)
+
+The --bench timings come from *this Python port*, not the Rust kernels;
+the emitted provenance string says so.  They seed the schema so
+EXPERIMENTS.md has real measured numbers until a Rust toolchain is
+available to regenerate via `bmxnet bench-gemm --json BENCH_gemm.json`.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+WORD_BITS = 64
+M64 = (1 << 64) - 1
+M256 = (1 << 256) - 1
+
+# ---------------------------------------------------------------------------
+# Packing (rust/src/gemm/pack.rs)
+# ---------------------------------------------------------------------------
+
+
+def pack_row(row, side):
+    """LSB-first sign packing of one logical row; side 'A' pads 1s, 'B' 0s."""
+    words = []
+    for base in range(0, len(row), WORD_BITS):
+        chunk = row[base : base + WORD_BITS]
+        w = 0
+        for b, v in enumerate(chunk):
+            if v >= 0.0:
+                w |= 1 << b
+        if len(chunk) < WORD_BITS and side == "A":
+            w |= (M64 << len(chunk)) & M64
+        words.append(w)
+    return words
+
+
+def pack_rows(data, rows, k, side):
+    return [pack_row(data[r * k : (r + 1) * k], side) for r in range(rows)]
+
+
+def pack_cols(data, k, n):
+    """B-operand layout: packed row j holds column j of the (k, n) matrix."""
+    return [pack_row([data[kk * n + j] for kk in range(k)], "B") for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Row kernels (rust/src/gemm/simd.rs)
+# ---------------------------------------------------------------------------
+
+
+def scalar_row(arow, brow):
+    return sum((~(a ^ b) & M64).bit_count() for a, b in zip(arow, brow))
+
+
+def _vec4(words, i):
+    """Simulate _mm256_loadu_si256 of words[i..i+4] (little-endian lanes)."""
+    return words[i] | words[i + 1] << 64 | words[i + 2] << 128 | words[i + 3] << 192
+
+
+def _xnor4(arow, brow, i):
+    return ~(_vec4(arow, i) ^ _vec4(brow, i)) & M256
+
+
+def _csa(a, b, c):
+    u = a ^ b
+    return (a & b) | (u & c), u ^ c
+
+
+def avx2_row(arow, brow):
+    """Exact simulation of x86::row_avx2 (Harley-Seal CSA over 16 vectors).
+
+    The per-lane popcount accumulators are modelled as one integer (their
+    lane sum): every CSA tier count is < 2^60, so per-lane u64 counters
+    never overflow and summing lanes early is arithmetically identical to
+    the kernel's final lane reduction.
+    """
+    n = min(len(arow), len(brow))
+    total = ones = twos = fours = eights = 0
+    i = 0
+    while i + 64 <= n:
+        twos_a, ones = _csa(ones, _xnor4(arow, brow, i), _xnor4(arow, brow, i + 4))
+        twos_b, ones = _csa(ones, _xnor4(arow, brow, i + 8), _xnor4(arow, brow, i + 12))
+        fours_a, twos = _csa(twos, twos_a, twos_b)
+        twos_a, ones = _csa(ones, _xnor4(arow, brow, i + 16), _xnor4(arow, brow, i + 20))
+        twos_b, ones = _csa(ones, _xnor4(arow, brow, i + 24), _xnor4(arow, brow, i + 28))
+        fours_b, twos = _csa(twos, twos_a, twos_b)
+        eights_a, fours = _csa(fours, fours_a, fours_b)
+        twos_a, ones = _csa(ones, _xnor4(arow, brow, i + 32), _xnor4(arow, brow, i + 36))
+        twos_b, ones = _csa(ones, _xnor4(arow, brow, i + 40), _xnor4(arow, brow, i + 44))
+        fours_a, twos = _csa(twos, twos_a, twos_b)
+        twos_a, ones = _csa(ones, _xnor4(arow, brow, i + 48), _xnor4(arow, brow, i + 52))
+        twos_b, ones = _csa(ones, _xnor4(arow, brow, i + 56), _xnor4(arow, brow, i + 60))
+        fours_b, twos = _csa(twos, twos_a, twos_b)
+        eights_b, fours = _csa(fours, fours_a, fours_b)
+        sixteens, eights = _csa(eights, eights_a, eights_b)
+        total += sixteens.bit_count()
+        i += 64
+    total = (total << 4) + (eights.bit_count() << 3) + (fours.bit_count() << 2)
+    total += (twos.bit_count() << 1) + ones.bit_count()
+    while i + 4 <= n:
+        total += _xnor4(arow, brow, i).bit_count()
+        i += 4
+    while i < n:
+        total += (~(arow[i] ^ brow[i]) & M64).bit_count()
+        i += 1
+    return total
+
+
+def avx512_row(arow, brow):
+    """Simulation of x86_512::row_avx512: 8 words/step, scalar tail."""
+    n = min(len(arow), len(brow))
+    total = 0
+    i = 0
+    while i + 8 <= n:
+        total += sum((~(arow[i + j] ^ brow[i + j]) & M64).bit_count() for j in range(8))
+        i += 8
+    while i < n:
+        total += (~(arow[i] ^ brow[i]) & M64).bit_count()
+        i += 1
+    return total
+
+
+def neon_row(arow, brow):
+    """Simulation of arm::row_neon: 2 words/step, scalar tail."""
+    n = min(len(arow), len(brow))
+    total = 0
+    i = 0
+    while i + 2 <= n:
+        total += (~(arow[i] ^ brow[i]) & M64).bit_count()
+        total += (~(arow[i + 1] ^ brow[i + 1]) & M64).bit_count()
+        i += 2
+    while i < n:
+        total += (~(arow[i] ^ brow[i]) & M64).bit_count()
+        i += 1
+    return total
+
+
+def u32_row(arow, brow):
+    """The xnor_32 reduction: same words viewed as u32 halves."""
+    total = 0
+    for a, b in zip(arow, brow):
+        for half in (0, 32):
+            aa, bb = (a >> half) & 0xFFFFFFFF, (b >> half) & 0xFFFFFFFF
+            total += (~(aa ^ bb) & 0xFFFFFFFF).bit_count()
+    return total
+
+
+KERNELS = {
+    "scalar": scalar_row,
+    "avx2": avx2_row,
+    "avx512": avx512_row,
+    "neon": neon_row,
+    "xnor_32": u32_row,
+}
+
+# ---------------------------------------------------------------------------
+# GEMM entry points (dispatch.rs / fused.rs)
+# ---------------------------------------------------------------------------
+
+
+def xnor_gemm(pa, pb, row_fn):
+    return [[row_fn(ar, br) for br in pb] for ar in pa]
+
+
+def fused_gemm(a, m, k, pb, row_fn, mr=8, jb=64):
+    """rust/src/gemm/fused.rs: MR-row panel packing, JB-column B tiles."""
+    n = len(pb)
+    c = [[0] * n for _ in range(m)]
+    for ic in range(0, m, mr):
+        mb = min(mr, m - ic)
+        panel = [pack_row(a[(ic + di) * k : (ic + di + 1) * k], "A") for di in range(mb)]
+        for jc in range(0, n, jb):
+            for di in range(mb):
+                for dj in range(min(jb, n - jc)):
+                    c[ic + di][jc + dj] = row_fn(panel[di], pb[jc + dj])
+    return c
+
+
+def naive_reference(a, b, m, n, k):
+    """Sign-binarize then float GEMM; returns the ±1 dot matrix."""
+    sa = np.where(np.asarray(a, dtype=np.float64).reshape(m, k) >= 0.0, 1.0, -1.0)
+    sb = np.where(np.asarray(b, dtype=np.float64).reshape(k, n) >= 0.0, 1.0, -1.0)
+    return sa @ sb
+
+
+# ---------------------------------------------------------------------------
+# Differential suite
+# ---------------------------------------------------------------------------
+
+EDGE_SHAPES = [
+    (1, 1, 1), (1, 1, 63), (1, 1, 64), (1, 1, 65), (1, 5, 127), (5, 1, 128),
+    (3, 3, 129), (2, 2, 191), (3, 3, 192), (7, 3, 1000), (1, 64, 256),
+    (9, 65, 64), (4, 4, 4096), (4, 4, 4097),
+]
+
+
+def run_differential(verbose=True):
+    rng = np.random.default_rng(20260807)
+    failures = 0
+    shapes = list(EDGE_SHAPES)
+    for _ in range(24):
+        shapes.append(
+            (int(rng.integers(1, 12)), int(rng.integers(1, 80)), int(rng.integers(1, 600)))
+        )
+    for m, n, k in shapes:
+        a = rng.standard_normal(m * k).tolist()
+        b = rng.standard_normal(k * n).tolist()
+        expect = naive_reference(a, b, m, n, k)
+        pa = pack_rows(a, m, k, "A")
+        pb = pack_cols(b, k, n)
+        for name, row_fn in KERNELS.items():
+            pops = xnor_gemm(pa, pb, row_fn)
+            dots = np.array([[2 * p - k for p in prow] for prow in pops], dtype=np.float64)
+            if not np.array_equal(dots, expect):
+                print(f"FAIL kernel={name} m={m} n={n} k={k}")
+                failures += 1
+        fused = fused_gemm(a, m, k, pb, avx2_row)
+        fdots = np.array([[2 * p - k for p in row] for row in fused], dtype=np.float64)
+        if not np.array_equal(fdots, expect):
+            print(f"FAIL fused m={m} n={n} k={k}")
+            failures += 1
+    # constants: all-match -> pop=k, all-mismatch -> pop=0, zeros -> +1
+    for k in (1, 63, 64, 65, 129, 1000):
+        plus, minus, zeros = [1.0] * k, [-1.0] * k, [0.0] * k
+        pb_plus = pack_cols(plus, k, 1)
+        for name, row_fn in KERNELS.items():
+            if xnor_gemm(pack_rows(plus, 1, k, "A"), pb_plus, row_fn)[0][0] != k:
+                print(f"FAIL {name} all-match k={k}")
+                failures += 1
+            if xnor_gemm(pack_rows(minus, 1, k, "A"), pb_plus, row_fn)[0][0] != 0:
+                print(f"FAIL {name} all-mismatch k={k}")
+                failures += 1
+            if xnor_gemm(pack_rows(zeros, 1, k, "A"), pb_plus, row_fn)[0][0] != k:
+                print(f"FAIL {name} zeros-as-plus k={k}")
+                failures += 1
+    # pad convention: A pads 1s, B pads 0s; one flipped B pad bit adds 1
+    for k in (10, 63, 100):
+        pad_mask = (M64 << (k % 64)) & M64
+        vals = [(-1.0) ** i for i in range(k)]
+        assert pack_rows(vals, 1, k, "A")[0][-1] & pad_mask == pad_mask
+        assert pack_rows(vals, 1, k, "B")[0][-1] & pad_mask == 0
+        pa1 = pack_rows(vals, 1, k, "A")
+        pb1 = pack_cols(vals, k, 1)
+        clean = scalar_row(pa1[0], pb1[0])
+        corrupt = list(pb1[0])
+        corrupt[-1] |= 1 << (k % 64)
+        if scalar_row(pa1[0], corrupt) != clean + 1:
+            print(f"FAIL pad-corruption k={k}")
+            failures += 1
+    if verbose:
+        n_checks = len(shapes) * (len(KERNELS) + 1)
+        print(f"differential suite: {n_checks} GEMM comparisons, {failures} failures")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# Bench mode: seed BENCH_gemm.json (numpy-vectorized port timings)
+# ---------------------------------------------------------------------------
+
+
+def np_pack_bits(signs_2d, pad_value):
+    """Pack a (rows, k) boolean sign matrix into (rows, wpr) uint64 words."""
+    rows, k = signs_2d.shape
+    wpr = (k + 63) // 64
+    padded = np.full((rows, wpr * 64), pad_value, dtype=bool)
+    padded[:, :k] = signs_2d
+    bits = np.packbits(padded, axis=1, bitorder="little")
+    return bits.view(np.uint64)
+
+
+def np_xnor_gemm(pa, pb):
+    """Vectorized popcount GEMM on packed uint64 operands."""
+    # (m, 1, wpr) ^ (1, n, wpr) -> bitwise_count sum over words
+    x = ~(pa[:, None, :] ^ pb[None, :, :])
+    return np.bitwise_count(x).sum(axis=2, dtype=np.int64)
+
+
+def cpu_flags():
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("flags"):
+                    return set(line.split(":", 1)[1].split())
+    except OSError:
+        pass
+    return set()
+
+
+def bench_methods():
+    """The Method labels dispatchable on this machine, in catalog order."""
+    flags = cpu_flags()
+    methods = ["naive", "cblas", "xnor_32", "xnor_64", "xnor_64_blk", "xnor_64_omp"]
+    if "avx2" in flags:
+        methods.append("xnor_64_avx2")
+    # xnor_64_avx512 needs the off-by-default simd-avx512 cargo feature
+    # AND avx512vpopcntdq; mirror the Rust default-feature dispatch.
+    methods.append("xnor_fused")
+    return methods
+
+
+def time_best_of(reps, fn):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def figure_workloads():
+    """Reduced Figure 1-3 shapes (rust/src/bench/workloads.rs, batch 20)."""
+    batch = 20
+    fig1 = [("fig1", "C", True, c, 64, batch * 64, 25 * c) for c in (64, 128, 256, 512)]
+    fig2 = [("fig2", "filters", False, f, f, batch * 64, 6400) for f in (16, 32, 64, 128, 256, 512)]
+    fig3 = [("fig3", "kernel", False, ks, 64, batch * 64, ks * ks * 256) for ks in range(1, 9)]
+    return fig1 + fig2 + fig3
+
+
+def run_bench(out_path, reps):
+    rng = np.random.default_rng(42)
+    methods = bench_methods()
+    figures = {}
+    for fig, xlabel, absolute, x, m, n, k in figure_workloads():
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        b = rng.standard_normal((k, n)).astype(np.float32)
+        sa, sb = np.where(a >= 0, 1.0, -1.0), np.where(b >= 0, 1.0, -1.0)
+        pa = np_pack_bits(a >= 0, True)   # A-side pads 1
+        pb = np_pack_bits((b >= 0).T, False)  # B columns, pads 0
+        pa32, pb32 = pa.view(np.uint32), pb.view(np.uint32)
+        ms = {}
+        for label in methods:
+            if label == "naive":
+                ms[label] = time_best_of(reps, lambda: sa.astype(np.float64) @ sb)
+            elif label == "cblas":
+                ms[label] = time_best_of(reps, lambda: sa @ sb)
+            elif label == "xnor_32":
+                ms[label] = time_best_of(
+                    reps,
+                    lambda: np.bitwise_count(
+                        ~(pa32[:, None, :] ^ pb32[None, :, :])
+                    ).sum(axis=2, dtype=np.int64),
+                )
+            elif label == "xnor_fused":
+                ms[label] = time_best_of(
+                    reps, lambda: np_xnor_gemm(np_pack_bits(a >= 0, True), pb)
+                )
+            else:  # xnor_64 / _blk / _omp / _avx2: one packed-word GEMM here
+                ms[label] = time_best_of(reps, lambda: np_xnor_gemm(pa, pb))
+        ms["bin+xnor_omp"] = time_best_of(
+            reps, lambda: np_xnor_gemm(np_pack_bits(a >= 0, True), pb)
+        )
+        figures.setdefault((fig, xlabel, absolute), []).append({"x": x, "ms": ms})
+        print(f"{fig} x={x}: " + " ".join(f"{l}={v:.1f}ms" for l, v in ms.items()))
+    doc = {
+        "bench": "gemm",
+        "provenance": (
+            "python reference-port measurement (scripts/gemm_diff_port.py --bench; "
+            "no Rust toolchain in the build container) · reduced shapes (batch 20) "
+            f"· best-of-{reps} · methods are behaviorally equivalent ports, so "
+            "per-method deltas are NOT representative of the Rust kernels — "
+            "regenerate with `bmxnet bench-gemm --json BENCH_gemm.json`"
+        ),
+        "figures": [
+            {"figure": fig, "xlabel": xlabel, "absolute_times": absolute, "rows": rows}
+            for (fig, xlabel, absolute), rows in figures.items()
+        ],
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", metavar="PATH", help="also write BENCH_gemm.json to PATH")
+    ap.add_argument("--reps", type=int, default=3, help="best-of reps for --bench")
+    args = ap.parse_args()
+    failures = run_differential()
+    if failures:
+        sys.exit(1)
+    if args.bench:
+        run_bench(args.bench, args.reps)
+
+
+if __name__ == "__main__":
+    main()
