@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test doc bench-compile serve-smoke fmt-check verify artifacts clean
+.PHONY: build test doc bench-compile serve-smoke profile-smoke fmt-check verify artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -25,10 +25,14 @@ bench-compile:
 serve-smoke: build
 	sh scripts/serve_smoke.sh
 
+# Run `bmxnet profile` (table + JSON + forced-scalar) on synthetic models.
+profile-smoke: build
+	sh scripts/profile_smoke.sh
+
 fmt-check:
 	$(CARGO) fmt --check
 
-verify: build test doc bench-compile serve-smoke
+verify: build test doc bench-compile serve-smoke profile-smoke
 
 # Emit the AOT HLO-text artifacts + manifest (optional; needs JAX).
 # The Rust side skips artifact-driven tests when this has not run.

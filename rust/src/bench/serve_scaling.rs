@@ -95,7 +95,10 @@ pub fn measure_serve_workload(
     policy: BatchPolicy,
     queue_cap: usize,
 ) -> ServeScalingRow {
-    let pool = ModelPool::start(backend, &PoolConfig { workers: w.workers, policy, queue_cap });
+    let pool = ModelPool::start(
+        backend,
+        &PoolConfig { workers: w.workers, policy, queue_cap, ..Default::default() },
+    );
     let image_len = pool.image_len();
     let t0 = Instant::now();
     let (served, rejected) = std::thread::scope(|s| {

@@ -37,6 +37,10 @@ struct Inner {
     latencies_us: Vec<u64>,
     /// Next overwrite position once the ring is full.
     lat_cursor: usize,
+    /// All-time latency sample count (not windowed like the ring).
+    lat_count: u64,
+    /// All-time latency sum in µs.
+    lat_sum_us: u64,
 }
 
 /// Point-in-time summary.
@@ -56,6 +60,15 @@ pub struct MetricsSnapshot {
     /// Sorted per-request latencies in microseconds (the percentile
     /// basis) — the most recent [`LATENCY_WINDOW`] samples.
     pub latencies_us: Vec<u64>,
+    /// All-time latency sample count — with [`lat_sum_us`] this backs the
+    /// Prometheus `bmxnet_latency_us_count`/`_sum` families, which keep
+    /// increasing monotonically (so `rate()` works) even though the raw
+    /// percentile window is bounded.
+    ///
+    /// [`lat_sum_us`]: MetricsSnapshot::lat_sum_us
+    pub lat_count: u64,
+    /// All-time latency sum in µs.
+    pub lat_sum_us: u64,
 }
 
 /// Nearest-rank percentile over sorted microsecond latencies:
@@ -81,6 +94,8 @@ impl ServerMetrics {
         *g.batch_hist.entry(batch_size).or_insert(0) += 1;
         for l in latencies {
             let us = l.as_micros() as u64;
+            g.lat_count += 1;
+            g.lat_sum_us += us;
             if g.latencies_us.len() < LATENCY_WINDOW {
                 g.latencies_us.push(us);
             } else {
@@ -114,6 +129,8 @@ impl ServerMetrics {
             max: ls.last().map_or(Duration::ZERO, |&u| Duration::from_micros(u)),
             batch_hist: g.batch_hist.iter().map(|(&s, &c)| (s, c)).collect(),
             latencies_us: ls,
+            lat_count: g.lat_count,
+            lat_sum_us: g.lat_sum_us,
         }
     }
 }
@@ -132,6 +149,8 @@ impl MetricsSnapshot {
             max: Duration::ZERO,
             batch_hist: Vec::new(),
             latencies_us: Vec::new(),
+            lat_count: 0,
+            lat_sum_us: 0,
         }
     }
 
@@ -146,10 +165,14 @@ impl MetricsSnapshot {
         let mut size_sum = 0u64;
         let mut hist: BTreeMap<usize, u64> = BTreeMap::new();
         let mut ls: Vec<u64> = Vec::new();
+        let mut lat_count = 0u64;
+        let mut lat_sum_us = 0u64;
         for s in snaps {
             requests += s.requests;
             batches += s.batches;
             rejected += s.rejected;
+            lat_count += s.lat_count;
+            lat_sum_us += s.lat_sum_us;
             for &(size, count) in &s.batch_hist {
                 size_sum += size as u64 * count;
                 *hist.entry(size).or_insert(0) += count;
@@ -168,6 +191,8 @@ impl MetricsSnapshot {
             max: ls.last().map_or(Duration::ZERO, |&u| Duration::from_micros(u)),
             batch_hist: hist.into_iter().collect(),
             latencies_us: ls,
+            lat_count,
+            lat_sum_us,
         }
     }
 
@@ -302,6 +327,9 @@ mod tests {
         assert!(s.requests as usize > LATENCY_WINDOW);
         assert_eq!(s.latencies_us.len(), LATENCY_WINDOW);
         assert_eq!(s.p99, Duration::from_micros(7));
+        // count/sum are NOT windowed — they track every sample ever seen
+        assert_eq!(s.lat_count, s.requests);
+        assert_eq!(s.lat_sum_us, s.requests * 7);
     }
 
     #[test]
@@ -324,6 +352,8 @@ mod tests {
         assert_eq!(merged.p99, Duration::from_micros(99));
         assert_eq!(merged.max, Duration::from_micros(100));
         assert_eq!(merged.batch_hist, vec![(50, 2)]);
+        assert_eq!(merged.lat_count, 100);
+        assert_eq!(merged.lat_sum_us, (1..=100u64).sum::<u64>());
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::BatchPolicy;
 use super::metrics::{MetricsSnapshot, ServerMetrics};
+use crate::obs::BatchTiming;
 
 /// Anything that can classify a batch of flat NCHW images.
 ///
@@ -65,6 +66,10 @@ pub struct Response {
     pub latency: Duration,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Where the latency went: queue wait / batch window / forward, in
+    /// µs, measured by the batcher per request. The gateway folds this
+    /// into the request's trace (`obs::Trace::absorb_batch_timing`).
+    pub timing: BatchTiming,
 }
 
 /// Server construction parameters.
@@ -192,6 +197,13 @@ impl Drop for Server {
     }
 }
 
+/// A request plus the instant the batcher dequeued it — the boundary
+/// between queue wait (submit→dequeue) and batch window (dequeue→forward).
+struct Queued {
+    req: Request,
+    received: Instant,
+}
+
 fn batcher_loop(
     rx: mpsc::Receiver<Msg>,
     backend: Arc<dyn Backend>,
@@ -200,7 +212,7 @@ fn batcher_loop(
 ) {
     let [c, h, w] = backend.input_shape();
     let per = c * h * w;
-    let mut batch: Vec<Request> = Vec::new();
+    let mut batch: Vec<Queued> = Vec::new();
     loop {
         // Idle: block until the first request of the next batch arrives.
         // No timeout and no flag polling — shutdown arrives in-band.
@@ -209,7 +221,7 @@ fn batcher_loop(
             Ok(Msg::Stop) | Err(_) => break,
         };
         let first_arrival = Instant::now();
-        batch.push(first);
+        batch.push(Queued { req: first, received: first_arrival });
         let mut stopping = false;
         // Coalesce until the policy says dispatch; the straggler wait is
         // exactly the remaining window, so sub-ms windows are honored.
@@ -219,7 +231,7 @@ fn batcher_loop(
                 break;
             }
             match rx.recv_timeout(policy.remaining(first_arrival, now)) {
-                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Req(r)) => batch.push(Queued { req: r, received: Instant::now() }),
                 Ok(Msg::Stop) => {
                     stopping = true;
                     break;
@@ -239,7 +251,7 @@ fn batcher_loop(
     // Drain requests that raced in behind the sentinel, in max_batch bites.
     while let Ok(msg) = rx.try_recv() {
         if let Msg::Req(r) = msg {
-            batch.push(r);
+            batch.push(Queued { req: r, received: Instant::now() });
             if batch.len() >= policy.max_batch.max(1) {
                 dispatch(&backend, per, &mut batch, &metrics);
             }
@@ -253,23 +265,38 @@ fn batcher_loop(
 fn dispatch(
     backend: &Arc<dyn Backend>,
     per: usize,
-    batch: &mut Vec<Request>,
+    batch: &mut Vec<Queued>,
     metrics: &Arc<ServerMetrics>,
 ) {
     let bsz = batch.len();
     let mut images = Vec::with_capacity(bsz * per);
-    for r in batch.iter() {
-        images.extend_from_slice(&r.image);
+    for q in batch.iter() {
+        images.extend_from_slice(&q.req.image);
     }
+    let forward_start = Instant::now();
     match backend.classify_batch(&images, bsz) {
         Ok(preds) => {
             let done = Instant::now();
+            // the forward is shared by the whole batch; queue/window are
+            // per-request (Instant::duration_since saturates to zero)
+            let forward_us = done.duration_since(forward_start).as_micros() as u64;
             let mut lats = Vec::with_capacity(bsz);
-            for (req, (class, score)) in batch.drain(..).zip(preds) {
-                let latency = done.duration_since(req.submitted);
+            for (q, (class, score)) in batch.drain(..).zip(preds) {
+                let latency = done.duration_since(q.req.submitted);
                 lats.push(latency);
+                let timing = BatchTiming {
+                    queue_us: q.received.duration_since(q.req.submitted).as_micros() as u64,
+                    window_us: forward_start.duration_since(q.received).as_micros() as u64,
+                    forward_us,
+                };
                 // receiver may have given up; ignore send errors
-                let _ = req.reply.send(Response { class, score, latency, batch_size: bsz });
+                let _ = q.req.reply.send(Response {
+                    class,
+                    score,
+                    latency,
+                    batch_size: bsz,
+                    timing,
+                });
             }
             metrics.record_batch(bsz, &lats);
         }
@@ -358,6 +385,28 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.requests, 16);
         assert!(snap.batches < 16, "every request served alone");
+    }
+
+    #[test]
+    fn response_timing_decomposes_latency() {
+        let server = Server::start(
+            Arc::new(Mock { delay: Duration::from_millis(2) }),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(3) },
+                queue_cap: 64,
+            },
+        );
+        let resp = server.client().classify(img(1)).unwrap();
+        let t = resp.timing;
+        // the mock sleeps 2ms inside classify_batch
+        assert!(t.forward_us >= 1_000, "forward_us {t:?}");
+        // queue + window + forward is exactly the measured latency up to
+        // µs truncation (three floor() operations)
+        let latency_us = resp.latency.as_micros() as u64;
+        let sum = t.queue_us + t.window_us + t.forward_us;
+        assert!(sum <= latency_us + 3, "sum {sum} > latency {latency_us}");
+        assert!(sum + 3 >= latency_us, "sum {sum} undercounts latency {latency_us}");
+        server.shutdown();
     }
 
     #[test]

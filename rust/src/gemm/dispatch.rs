@@ -145,6 +145,20 @@ impl Method {
     }
 }
 
+/// The row kernel a method would run *right now*: the pinned kernel for
+/// pinned-SIMD variants, [`simd::best_kernel`] for the delegating ones,
+/// scalar for the plain xnor loops, `None` for float GEMMs (no bit
+/// kernel).  This is what the profiler and the
+/// `bmxnet_kernel_calls_total` counters label calls with.
+pub fn effective_kernel(method: Method) -> Option<Kernel> {
+    match method {
+        Method::NaiveF32 | Method::BlockedF32 => None,
+        Method::Xnor32 | Method::Xnor64 | Method::Xnor64Blocked => Some(Kernel::Scalar),
+        Method::Xnor64Mt | Method::XnorFused => Some(simd::best_kernel()),
+        pinned => pinned.pinned_kernel(),
+    }
+}
+
 /// Run a prepacked xnor GEMM variant, returning raw popcounts.
 ///
 /// Panics if called with a float method, or with a pinned-SIMD method
@@ -154,6 +168,11 @@ impl Method {
 /// `XnorFused` degenerates here: with A already packed there is nothing
 /// left to fuse, so it runs the blocked loop with the best row kernel.
 pub fn xnor_gemm_prepacked(method: Method, a: &PackedMatrix, b: &PackedMatrix) -> Vec<i32> {
+    if method.is_binary() {
+        // one bump per GEMM entry, not per row — see obs::counters
+        let k = effective_kernel(method).unwrap_or(Kernel::Scalar);
+        crate::obs::counters::record_gemm(method, k);
+    }
     if let Some(k) = method.pinned_kernel() {
         assert!(
             method.is_available(),
@@ -190,16 +209,19 @@ pub fn binary_gemm_f32(
 ) -> Vec<f32> {
     match method {
         Method::NaiveF32 => {
+            crate::obs::counters::record_gemm_f32(method);
             let ab = super::pack::binarize_slice(a);
             let bb = super::pack::binarize_slice(b);
             naive::gemm_f32(&ab, &bb, m, n, k)
         }
         Method::BlockedF32 => {
+            crate::obs::counters::record_gemm_f32(method);
             let ab = super::pack::binarize_slice(a);
             let bb = super::pack::binarize_slice(b);
             blocked::gemm_f32(&ab, &bb, m, n, k)
         }
         Method::XnorFused => {
+            crate::obs::counters::record_gemm(method, simd::best_kernel());
             let pb = PackedMatrix::pack_cols(b, k, n);
             fused::gemm_fused(a, m, k, &pb)
                 .into_iter()
@@ -230,7 +252,10 @@ pub fn binary_gemm_packed_b(
     b: &PackedMatrix,
 ) -> Vec<i32> {
     match method {
-        Method::XnorFused => fused::gemm_fused(a, m, k, b),
+        Method::XnorFused => {
+            crate::obs::counters::record_gemm(method, simd::best_kernel());
+            fused::gemm_fused(a, m, k, b)
+        }
         _ if method.is_binary() => {
             let pa = PackedMatrix::pack_rows(a, m, k, Side::A);
             xnor_gemm_prepacked(method, &pa, b)
@@ -291,6 +316,43 @@ mod tests {
     fn auto_is_fused_and_available() {
         assert_eq!(Method::auto(), Method::XnorFused);
         assert!(Method::auto().is_available());
+    }
+
+    #[test]
+    fn effective_kernel_matches_dispatch_rules() {
+        assert_eq!(effective_kernel(Method::NaiveF32), None);
+        assert_eq!(effective_kernel(Method::BlockedF32), None);
+        assert_eq!(effective_kernel(Method::Xnor64), Some(Kernel::Scalar));
+        assert_eq!(effective_kernel(Method::Xnor64Blocked), Some(Kernel::Scalar));
+        assert_eq!(effective_kernel(Method::XnorFused), Some(simd::best_kernel()));
+        assert_eq!(effective_kernel(Method::Xnor64Mt), Some(simd::best_kernel()));
+        assert_eq!(effective_kernel(Method::Xnor64Avx2), Some(Kernel::Avx2));
+        assert_eq!(effective_kernel(Method::Xnor64Neon), Some(Kernel::Neon));
+    }
+
+    #[test]
+    fn gemm_entries_bump_kernel_call_counters() {
+        use crate::obs::counters;
+        let total = |method: &str| {
+            counters::gemm_calls()
+                .iter()
+                .filter(|(m, _, _)| *m == method)
+                .map(|(_, _, n)| *n)
+                .sum::<u64>()
+        };
+        let a: Vec<f32> = (0..2 * 64).map(|i| i as f32 - 60.0).collect();
+        let b: Vec<f32> = (0..64 * 3).map(|i| 90.0 - i as f32).collect();
+
+        let fused_before = total("xnor_fused");
+        let f32_before = total("cblas");
+        binary_gemm_f32(Method::XnorFused, &a, &b, 2, 3, 64);
+        binary_gemm_f32(Method::BlockedF32, &a, &b, 2, 3, 64);
+        assert_eq!(total("xnor_fused") - fused_before, 1);
+        assert_eq!(total("cblas") - f32_before, 1);
+        // the float entry counts under the "f32" pseudo-kernel
+        assert!(counters::gemm_calls()
+            .iter()
+            .any(|(m, k, _)| *m == "cblas" && *k == "f32"));
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //!   load, LRU eviction, hot-swap), sharded engine pools with admission
 //!   control, and a std-only HTTP/1.1 server with Prometheus-style
 //!   `/metrics`.
+//! * [`obs`] — observability: request-scoped stage tracing into a
+//!   lock-free ring journal, opt-in per-layer profiler, and process-wide
+//!   GEMM kernel counters (DESIGN.md §Observability).
 //!
 //! Python never runs on the request path: `make artifacts` emits HLO text +
 //! manifest once, and everything else is this crate.
@@ -45,6 +48,7 @@ pub mod data;
 pub mod gemm;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -6,6 +6,7 @@
 //!   train    --model M [...]      drive the AOT train_step via PJRT
 //!   convert  --model M --ckpt F   f32 checkpoint -> packed .bmx (§2.2.3)
 //!   predict  --bmx F [...]        run the Rust xnor engine on synth data
+//!   profile  --bmx F | --model M  per-layer wall time / bytes / dispatch
 //!   serve    --models-dir D [...] multi-model HTTP gateway (sharded pools)
 //!   synth-models --out D          write synthetic .bmx models (smoke/demo)
 //!   bench-gemm --figure 1|2|3     reproduce the paper's GEMM figures
@@ -49,6 +50,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(&flags),
         "convert" => cmd_convert(&flags),
         "predict" => cmd_predict(&flags),
+        "profile" => cmd_profile(&flags),
         "serve" => cmd_serve(&flags),
         "synth-models" => cmd_synth_models(&flags),
         "bench-gemm" => cmd_bench_gemm(&flags),
@@ -70,6 +72,8 @@ fn print_help() {
          \x20         [--out-ckpt F] [--metrics-csv F] [--seed S]\n\
          \x20 convert --model M --ckpt F --out F.bmx  pack Q-weights to 1 bit\n\
          \x20 predict --bmx F [--n N] [--batch B]     xnor engine accuracy+speed\n\
+         \x20 profile --bmx F | --model M [--models-dir D] [--batch B] [--reps R]\n\
+         \x20         [--json [F.json]]               per-layer time/bytes/dispatch\n\
          \x20 serve   [--models-dir D] [--workers N] [--port P] [--host H]\n\
          \x20         [--max-batch B] [--window-us U] [--queue-cap Q]\n\
          \x20         [--mem-budget-mb M]             multi-model HTTP gateway\n\
@@ -278,6 +282,44 @@ fn cmd_predict(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Per-layer profile of one engine: `--bmx F` loads a packed file
+/// directly; `--model M` resolves `<models-dir>/M.bmx` (models-dir
+/// defaults to the artifacts dir, matching `serve`).  `--json` prints the
+/// machine-readable report to stdout; `--json F.json` writes it to a file
+/// (same schema-tagged shape as `bench/record.rs` outputs).
+fn cmd_profile(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["bmx", "model", "models-dir", "batch", "reps", "json", "artifacts"])?;
+    let path = match (flags.str("bmx"), flags.str("model")) {
+        (Some(p), _) => PathBuf::from(p),
+        (None, Some(name)) => {
+            let dir = flags
+                .str("models-dir")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| flags.artifacts());
+            dir.join(format!("{name}.bmx"))
+        }
+        (None, None) => bail!("profile needs --bmx F or --model M"),
+    };
+    let engine = Engine::load(&path).with_context(|| format!("load {path:?}"))?;
+    let batch = flags.usize("batch", 8)?;
+    let reps = flags.usize("reps", 5)?;
+    let mut report = engine.profile(batch, reps)?;
+    report.model = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| report.arch.clone());
+    match flags.str("json") {
+        None => print!("{}", report.render_table()),
+        Some("true") => println!("{}", report.render_json()),
+        Some(out) => {
+            std::fs::write(out, report.render_json()).with_context(|| format!("write {out:?}"))?;
+            print!("{}", report.render_table());
+            println!("recorded profile to {out}");
+        }
+    }
+    Ok(())
+}
+
 /// The multi-model HTTP serving gateway (DESIGN.md §Serving architecture).
 ///
 /// Serves every model resolvable from `--models-dir` (packed `<name>.bmx`
@@ -307,6 +349,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                 window: Duration::from_micros(flags.usize("window-us", 2000)? as u64),
             },
             queue_cap: flags.usize("queue-cap", 256)?,
+            ..Default::default()
         },
         max_resident_bytes: flags.usize("mem-budget-mb", 0)? * (1 << 20),
         ..RegistryConfig::new(models_dir)
@@ -329,11 +372,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         println!("  {:<24} [{}]", m.name, m.source);
     }
     println!(
-        "gemm dispatch: method {} · kernel {}",
+        "gemm dispatch: method {} · kernel {} (force_scalar={})",
         Method::auto().label(),
-        simd::best_kernel().label()
+        simd::best_kernel().label(),
+        simd::force_scalar(),
     );
+    match std::env::var(repro::obs::SLOW_REQ_ENV) {
+        Ok(v) => println!("slow-request log: threshold {v} us ({})", repro::obs::SLOW_REQ_ENV),
+        Err(_) => println!("slow-request log: off (set {} to enable)", repro::obs::SLOW_REQ_ENV),
+    }
     println!("try: curl http://{}/v1/models", gateway.addr());
+    println!("     curl http://{}/v1/debug/trace?n=8", gateway.addr());
     // Models load lazily on first request; serve until the process dies.
     loop {
         std::thread::sleep(Duration::from_secs(3600));

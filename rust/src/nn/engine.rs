@@ -13,9 +13,12 @@
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+use std::time::Instant;
+
 use super::{lenet::Lenet, resnet::Resnet};
 use crate::model::bmx::BmxModel;
 use crate::model::json;
+use crate::obs::{ProfileReport, Profiler};
 use crate::tensor::Tensor;
 
 /// A loaded, ready-to-run model.
@@ -61,10 +64,53 @@ impl Engine {
 
     /// Forward pass over an NCHW batch.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, None)
+    }
+
+    /// Forward with optional per-layer profiling. `prof: None` is the
+    /// serving hot path and adds a single branch per layer — no timing,
+    /// no allocation (see `tests/profiler_overhead.rs`).
+    pub fn forward_with(&self, x: &Tensor, prof: Option<&Profiler>) -> Result<Tensor> {
         match self {
-            Engine::Lenet(n) => n.forward(x),
-            Engine::Resnet(n) => n.forward(x),
+            Engine::Lenet(n) => n.forward_with(x, prof),
+            Engine::Resnet(n) => n.forward_with(x, prof),
         }
+    }
+
+    /// Architecture label ("lenet" / "resnet18").
+    pub fn arch(&self) -> &'static str {
+        match self {
+            Engine::Lenet(_) => "lenet",
+            Engine::Resnet(_) => "resnet18",
+        }
+    }
+
+    /// Run `reps` profiled forward passes over a deterministic synthetic
+    /// batch and aggregate per-layer wall time / bytes / dispatch labels.
+    /// Backs `bmxnet profile` and `GET /v1/models/{name}/profile`.
+    pub fn profile(&self, batch: usize, reps: usize) -> Result<ProfileReport> {
+        let [c, h, w] = self.input_shape();
+        let n = batch.max(1);
+        let reps = reps.max(1);
+        let data: Vec<f32> = (0..n * c * h * w)
+            .map(|i| ((i % 17) as f32) / 8.5 - 1.0)
+            .collect();
+        let x = Tensor::new(vec![n, c, h, w], data);
+        let prof = Profiler::new();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            self.forward_with(&x, Some(&prof))?;
+        }
+        let total = t0.elapsed();
+        Ok(ProfileReport::from_runs(
+            self.arch(),
+            n,
+            reps,
+            self.dispatch_summary(),
+            crate::gemm::simd::force_scalar(),
+            total,
+            prof.take(),
+        ))
     }
 
     /// Expected input shape [C, H, W].
@@ -203,6 +249,25 @@ mod tests {
             s.contains(crate::gemm::simd::best_kernel().label()),
             "summary missing kernel: {s}"
         );
+    }
+
+    #[test]
+    fn profile_reports_layers_in_forward_order() {
+        let m = lenet_model(true);
+        let e = Engine::from_bmx(&m).unwrap();
+        let r = e.profile(2, 2).unwrap();
+        assert_eq!(r.arch, "lenet");
+        assert_eq!(r.batch, 2);
+        assert_eq!(r.reps, 2);
+        // reps are aggregated: each layer appears once
+        let names: Vec<&str> = r.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names.iter().filter(|n| **n == "conv1").count(), 1);
+        assert_eq!(names.first(), Some(&"conv1"));
+        assert_eq!(names.last(), Some(&"fc2"));
+        assert!(r.layers.iter().any(|l| l.kind == "qconv"));
+        let json = r.render_json();
+        let v = crate::model::json::parse(&json).unwrap();
+        assert_eq!(v.get("arch").and_then(|a| a.as_str()), Some("lenet"));
     }
 
     #[test]

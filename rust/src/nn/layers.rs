@@ -56,6 +56,7 @@ impl Conv2d {
         let ho = conv_output_size(h, self.kh, self.stride, self.pad);
         let wo = conv_output_size(w, self.kw, self.stride, self.pad);
         // (rows, k) x (k, O) -> (rows, O), rows ordered (n, ho, wo)
+        crate::obs::counters::record_gemm_f32(Method::BlockedF32);
         let out = gemm::blocked::gemm_f32(&cols, &self.wt, rows, self.out_ch, k);
         let mut y = rows_to_nchw(&out, n, self.out_ch, ho, wo);
         if let Some(b) = &self.b {
@@ -126,6 +127,7 @@ impl Dense {
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let (bsz, k) = (x.shape()[0], x.shape()[1]);
         assert_eq!(k, self.in_dim, "dense input dim mismatch");
+        crate::obs::counters::record_gemm_f32(Method::BlockedF32);
         let mut out = gemm::blocked::gemm_f32(x.data(), &self.wt, bsz, self.out_dim, k);
         if let Some(b) = &self.b {
             for r in 0..bsz {

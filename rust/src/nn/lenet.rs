@@ -3,7 +3,9 @@
 use anyhow::{bail, Context, Result};
 
 use super::layers as L;
+use crate::gemm::dispatch::Method;
 use crate::model::bmx::BmxModel;
+use crate::obs::Profiler;
 use crate::tensor::Tensor;
 
 /// Binary (Listing 2), k-bit quantized (§2.1) or full-precision
@@ -112,40 +114,93 @@ impl Lenet {
 
     /// Forward pass: x (B, 1, 28, 28) -> logits (B, 10).
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, None)
+    }
+
+    /// Forward with optional per-layer profiling. With `prof: None` every
+    /// hook collapses to a direct call (no timing, no allocation); with a
+    /// profiler each op records wall time, bytes touched and — for GEMM
+    /// layers — the dispatch Method/Kernel labels.
+    pub fn forward_with(&self, x: &Tensor, prof: Option<&Profiler>) -> Result<Tensor> {
+        use crate::obs::profiler::layer;
         if x.shape().len() != 4 || x.shape()[1] != 1 || x.shape()[2] != 28 {
             bail!("lenet expects (B, 1, 28, 28), got {:?}", x.shape());
         }
-        let h = self.conv1.forward(x); // (B,32,24,24)
-        let h = L::tanh(&h);
-        let h = L::maxpool2(&h); // (B,32,12,12)
-        let h = self.bn1.forward(&h);
+        let bytes = x.data().len() * 4 + self.conv1.w.len() * 4;
+        let h = layer(prof, || "conv1".into(), "conv_f32", Some(Method::BlockedF32), bytes, || {
+            self.conv1.forward(x) // (B,32,24,24)
+        });
+        let bytes = h.data().len() * 4;
+        let h = layer(prof, || "act1".into(), "tanh", None, bytes, || L::tanh(&h));
+        // (B,32,12,12)
+        let h = layer(prof, || "pool1".into(), "maxpool2", None, bytes, || L::maxpool2(&h));
+        let bytes = h.data().len() * 4;
+        let h = layer(prof, || "bn1".into(), "batchnorm", None, bytes, || self.bn1.forward(&h));
 
+        let bytes = h.data().len() * 4;
         let h = if self.binary && self.act_bit > 1 {
-            let hq = L::qactivation_k(&h, self.act_bit);
-            self.conv2_fp.as_ref().unwrap().forward(&hq)
+            let hq = layer(prof, || "qact2".into(), "qact_k", None, bytes, || {
+                L::qactivation_k(&h, self.act_bit)
+            });
+            let c = self.conv2_fp.as_ref().unwrap();
+            let cb = bytes + c.w.len() * 4;
+            layer(prof, || "conv2".into(), "conv_f32", Some(Method::BlockedF32), cb, || {
+                c.forward(&hq)
+            })
         } else if self.binary {
-            let hb = L::qactivation(&h);
-            self.conv2_bin.as_ref().unwrap().forward(&hb) // (B,64,8,8)
+            let hb = layer(prof, || "qact2".into(), "sign", None, bytes, || L::qactivation(&h));
+            let c = self.conv2_bin.as_ref().unwrap();
+            let cb = bytes + c.packed.words.len() * 8;
+            layer(prof, || "conv2".into(), "qconv", Some(c.method), cb, || {
+                c.forward(&hb) // (B,64,8,8)
+            })
         } else {
-            self.conv2_fp.as_ref().unwrap().forward(&h)
+            let c = self.conv2_fp.as_ref().unwrap();
+            let cb = bytes + c.w.len() * 4;
+            layer(prof, || "conv2".into(), "conv_f32", Some(Method::BlockedF32), cb, || {
+                c.forward(&h)
+            })
         };
-        let h = self.bn2.forward(&h);
-        let h = if self.binary { h } else { L::tanh(&h) };
-        let h = L::maxpool2(&h); // (B,64,4,4)
+        let bytes = h.data().len() * 4;
+        let h = layer(prof, || "bn2".into(), "batchnorm", None, bytes, || self.bn2.forward(&h));
+        let h = if self.binary {
+            h
+        } else {
+            layer(prof, || "act2".into(), "tanh", None, bytes, || L::tanh(&h))
+        };
+        // (B,64,4,4)
+        let h = layer(prof, || "pool2".into(), "maxpool2", None, bytes, || L::maxpool2(&h));
 
         let h = L::flatten(&h);
+        let bytes = h.data().len() * 4;
         let h = if self.binary && self.act_bit > 1 {
-            let hq = L::qactivation_k(&h, self.act_bit);
-            self.fc1_fp.as_ref().unwrap().forward(&hq)
+            let hq = layer(prof, || "qact3".into(), "qact_k", None, bytes, || {
+                L::qactivation_k(&h, self.act_bit)
+            });
+            let d = self.fc1_fp.as_ref().unwrap();
+            let db = bytes + d.w.len() * 4;
+            layer(prof, || "fc1".into(), "dense_f32", Some(Method::BlockedF32), db, || {
+                d.forward(&hq)
+            })
         } else if self.binary {
-            let hb = L::qactivation(&h);
-            self.fc1_bin.as_ref().unwrap().forward(&hb)
+            let hb = layer(prof, || "qact3".into(), "sign", None, bytes, || L::qactivation(&h));
+            let d = self.fc1_bin.as_ref().unwrap();
+            let db = bytes + d.packed.words.len() * 8;
+            layer(prof, || "fc1".into(), "qdense", Some(d.method), db, || d.forward(&hb))
         } else {
-            self.fc1_fp.as_ref().unwrap().forward(&h)
+            let d = self.fc1_fp.as_ref().unwrap();
+            let db = bytes + d.w.len() * 4;
+            layer(prof, || "fc1".into(), "dense_f32", Some(Method::BlockedF32), db, || {
+                d.forward(&h)
+            })
         };
-        let h = self.bn3.forward(&h);
-        let h = L::tanh(&h);
-        Ok(self.fc2.forward(&h))
+        let bytes = h.data().len() * 4;
+        let h = layer(prof, || "bn3".into(), "batchnorm", None, bytes, || self.bn3.forward(&h));
+        let h = layer(prof, || "act3".into(), "tanh", None, bytes, || L::tanh(&h));
+        let fb = bytes + self.fc2.w.len() * 4;
+        Ok(layer(prof, || "fc2".into(), "dense_f32", Some(Method::BlockedF32), fb, || {
+            self.fc2.forward(&h)
+        }))
     }
 }
 
@@ -183,6 +238,28 @@ pub(crate) mod tests {
         let x = Tensor::full(vec![1, 1, 28, 28], -0.2);
         let y = net.forward(&x).unwrap();
         assert_eq!(y.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn profiled_forward_records_gemm_layers() {
+        let ck = fake_ckpt(true);
+        let names = inventory::lenet(true).binary_names();
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Lenet::from_bmx(&m, true).unwrap();
+        let prof = Profiler::new();
+        let x = Tensor::full(vec![1, 1, 28, 28], 0.3);
+        net.forward_with(&x, Some(&prof)).unwrap();
+        let recs = prof.take();
+        let names: Vec<&str> = recs.iter().map(|r| r.name.as_str()).collect();
+        for want in ["conv1", "qact2", "conv2", "fc1", "fc2"] {
+            assert!(names.contains(&want), "missing layer {want} in {names:?}");
+        }
+        let conv2 = recs.iter().find(|r| r.name == "conv2").unwrap();
+        assert_eq!(conv2.kind, "qconv");
+        assert!(conv2.method.is_some() && conv2.kernel.is_some());
+        assert!(conv2.bytes > 0);
+        let act = recs.iter().find(|r| r.name == "act1").unwrap();
+        assert!(act.method.is_none() && act.kernel.is_none());
     }
 
     #[test]

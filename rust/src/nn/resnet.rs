@@ -5,7 +5,9 @@ use anyhow::{bail, Context, Result};
 
 use super::layers as L;
 use super::lenet::{get_bn, get_f32};
+use crate::gemm::dispatch::Method;
 use crate::model::bmx::BmxModel;
+use crate::obs::Profiler;
 use crate::tensor::Tensor;
 
 const NUM_STAGES: usize = 4;
@@ -17,6 +19,8 @@ enum BlockConv {
 }
 
 struct Block {
+    /// Stage/block label ("s1b1", ...) for profiler layer names.
+    name: String,
     binary: bool,
     conv1: BlockConv,
     bn1: L::BatchNorm,
@@ -85,7 +89,7 @@ impl Resnet {
                 } else {
                     None
                 };
-                blocks.push(Block { binary, conv1, bn1, conv2, bn2, down });
+                blocks.push(Block { name, binary, conv1, bn1, conv2, bn2, down });
                 in_ch = out_ch;
             }
         }
@@ -104,17 +108,61 @@ impl Resnet {
 
     /// Forward: x (B, 3, 32, 32) -> logits (B, classes).
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with(x, None)
+    }
+
+    /// Forward with optional per-layer profiling (see [`Lenet::forward_with`]
+    /// for the hook semantics).
+    ///
+    /// [`Lenet::forward_with`]: super::lenet::Lenet::forward_with
+    pub fn forward_with(&self, x: &Tensor, prof: Option<&Profiler>) -> Result<Tensor> {
+        use crate::obs::profiler::layer;
         if x.shape().len() != 4 || x.shape()[1] != 3 {
             bail!("resnet expects (B, 3, H, W), got {:?}", x.shape());
         }
-        let mut h = self.stem.forward(x);
-        h = self.stem_bn.forward(&h);
-        h = L::relu(&h);
+        let bytes = x.data().len() * 4 + self.stem.w.len() * 4;
+        let mut h = layer(prof, || "stem".into(), "conv_f32", Some(Method::BlockedF32), bytes, || {
+            self.stem.forward(x)
+        });
+        let bytes = h.data().len() * 4;
+        h = layer(prof, || "stem_bn".into(), "batchnorm", None, bytes, || {
+            self.stem_bn.forward(&h)
+        });
+        h = layer(prof, || "stem_act".into(), "relu", None, bytes, || L::relu(&h));
         for blk in &self.blocks {
-            h = block_forward(blk, &h);
+            h = block_forward(blk, &h, prof);
         }
-        let pooled = L::global_avgpool(&h);
-        Ok(self.fc.forward(&pooled))
+        let bytes = h.data().len() * 4;
+        let pooled = layer(prof, || "gap".into(), "global_avgpool", None, bytes, || {
+            L::global_avgpool(&h)
+        });
+        let fb = pooled.data().len() * 4 + self.fc.w.len() * 4;
+        Ok(layer(prof, || "fc".into(), "dense_f32", Some(Method::BlockedF32), fb, || {
+            self.fc.forward(&pooled)
+        }))
+    }
+}
+
+/// Dispatch method a block conv resolves to (for profiler labels).
+fn conv_method(c: &BlockConv) -> Method {
+    match c {
+        BlockConv::Fp(_) => Method::BlockedF32,
+        BlockConv::Bin(q) => q.method,
+    }
+}
+
+fn conv_kind(c: &BlockConv) -> &'static str {
+    match c {
+        BlockConv::Fp(_) => "conv_f32",
+        BlockConv::Bin(_) => "qconv",
+    }
+}
+
+/// Weight bytes a block conv reads per forward.
+fn conv_bytes(c: &BlockConv) -> usize {
+    match c {
+        BlockConv::Fp(conv) => conv.w.len() * 4,
+        BlockConv::Bin(q) => q.packed.words.len() * 8,
     }
 }
 
@@ -128,24 +176,85 @@ fn conv_forward(c: &BlockConv, x: &Tensor, binary_input: bool) -> Tensor {
     }
 }
 
-fn block_forward(blk: &Block, x: &Tensor) -> Tensor {
+fn block_forward(blk: &Block, x: &Tensor, prof: Option<&Profiler>) -> Tensor {
+    use crate::obs::profiler::layer;
+    let nm = &blk.name;
     let mut h;
+    let bytes = x.data().len() * 4;
     if blk.binary {
-        let hb = L::qactivation(x);
-        h = conv_forward(&blk.conv1, &hb, true);
-        h = blk.bn1.forward(&h);
-        let hb = L::qactivation(&h);
-        h = conv_forward(&blk.conv2, &hb, true);
-        h = blk.bn2.forward(&h);
+        let hb = layer(prof, || format!("{nm}.qact1"), "sign", None, bytes, || L::qactivation(x));
+        let cb = bytes + conv_bytes(&blk.conv1);
+        h = layer(
+            prof,
+            || format!("{nm}.conv1"),
+            conv_kind(&blk.conv1),
+            Some(conv_method(&blk.conv1)),
+            cb,
+            || conv_forward(&blk.conv1, &hb, true),
+        );
+        let hbytes = h.data().len() * 4;
+        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || {
+            blk.bn1.forward(&h)
+        });
+        let hb = layer(prof, || format!("{nm}.qact2"), "sign", None, hbytes, || {
+            L::qactivation(&h)
+        });
+        let cb = hbytes + conv_bytes(&blk.conv2);
+        h = layer(
+            prof,
+            || format!("{nm}.conv2"),
+            conv_kind(&blk.conv2),
+            Some(conv_method(&blk.conv2)),
+            cb,
+            || conv_forward(&blk.conv2, &hb, true),
+        );
+        let hbytes = h.data().len() * 4;
+        h = layer(prof, || format!("{nm}.bn2"), "batchnorm", None, hbytes, || {
+            blk.bn2.forward(&h)
+        });
     } else {
-        h = conv_forward(&blk.conv1, x, false);
-        h = blk.bn1.forward(&h);
-        h = L::relu(&h);
-        h = conv_forward(&blk.conv2, &h, false);
-        h = blk.bn2.forward(&h);
+        let cb = bytes + conv_bytes(&blk.conv1);
+        h = layer(
+            prof,
+            || format!("{nm}.conv1"),
+            conv_kind(&blk.conv1),
+            Some(conv_method(&blk.conv1)),
+            cb,
+            || conv_forward(&blk.conv1, x, false),
+        );
+        let hbytes = h.data().len() * 4;
+        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || {
+            blk.bn1.forward(&h)
+        });
+        h = layer(prof, || format!("{nm}.act1"), "relu", None, hbytes, || L::relu(&h));
+        let cb = hbytes + conv_bytes(&blk.conv2);
+        h = layer(
+            prof,
+            || format!("{nm}.conv2"),
+            conv_kind(&blk.conv2),
+            Some(conv_method(&blk.conv2)),
+            cb,
+            || conv_forward(&blk.conv2, &h, false),
+        );
+        let hbytes = h.data().len() * 4;
+        h = layer(prof, || format!("{nm}.bn2"), "batchnorm", None, hbytes, || {
+            blk.bn2.forward(&h)
+        });
     }
     let skip = match &blk.down {
-        Some((dconv, dbn)) => dbn.forward(&dconv.forward(x)),
+        Some((dconv, dbn)) => {
+            let db = bytes + dconv.w.len() * 4;
+            let d = layer(
+                prof,
+                || format!("{nm}.down"),
+                "conv_f32",
+                Some(Method::BlockedF32),
+                db,
+                || dconv.forward(x),
+            );
+            let dbb = d.data().len() * 4;
+            layer(prof, || format!("{nm}.down_bn"), "batchnorm", None, dbb, || dbn.forward(&d))
+        }
         None => x.clone(),
     };
     let out = L::add(&h, &skip);
@@ -228,6 +337,23 @@ mod tests {
         let net = Resnet::from_bmx(&m, &[]).unwrap();
         // must not panic on shape mismatches anywhere in the graph
         net.forward(&Tensor::full(vec![1, 3, 32, 32], 0.0)).unwrap();
+    }
+
+    #[test]
+    fn profiled_forward_names_blocks() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx(&m, &[]).unwrap();
+        let prof = Profiler::new();
+        net.forward_with(&Tensor::full(vec![1, 3, 32, 32], 0.1), Some(&prof)).unwrap();
+        let recs = prof.take();
+        let names: Vec<&str> = recs.iter().map(|r| r.name.as_str()).collect();
+        for want in ["stem", "s1b1.conv1", "s4b2.conv2", "s2b1.down", "gap", "fc"] {
+            assert!(names.contains(&want), "missing layer {want}");
+        }
+        let c = recs.iter().find(|r| r.name == "s1b1.conv1").unwrap();
+        assert_eq!(c.kind, "qconv");
+        assert!(c.method.is_some());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Process-wide GEMM call counters and per-stage latency histograms.
+//!
+//! The GEMM counters are a static Method × Kernel grid of relaxed
+//! atomics bumped once per GEMM *entry* (not per row) by
+//! `gemm::dispatch`, so `/metrics` can answer "which kernel actually
+//! ran" — the forced-scalar CI leg shows up as `kernel="scalar"` rows
+//! where the SIMD leg shows `kernel="avx2"`. Float GEMMs count under the
+//! pseudo-kernel column `"f32"` (they have no bit-kernel).
+//!
+//! [`StageStats`] is the Prometheus-histogram side of tracing: per-stage
+//! log-spaced bucket counts plus sum/count, all relaxed atomics, zero
+//! allocation on observe (asserted by `rust/tests/profiler_overhead.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::trace::{Stage, TraceRecord};
+use crate::gemm::simd::Kernel;
+use crate::gemm::Method;
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init pattern
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+const N_METHODS: usize = 10;
+/// Kernel columns of the counter grid; the last is the float-GEMM
+/// pseudo-kernel.
+pub const KERNEL_COLUMNS: [&str; 5] = ["scalar", "avx2", "avx512", "neon", "f32"];
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ROW: [AtomicU64; KERNEL_COLUMNS.len()] = [ZERO; KERNEL_COLUMNS.len()];
+static GEMM_CALLS: [[AtomicU64; KERNEL_COLUMNS.len()]; N_METHODS] = [ROW; N_METHODS];
+
+fn method_index(m: Method) -> usize {
+    let i = Method::all().iter().position(|&x| x == m).unwrap_or(0);
+    debug_assert!(Method::all().len() <= N_METHODS);
+    i.min(N_METHODS - 1)
+}
+
+fn kernel_index(k: Kernel) -> usize {
+    match k {
+        Kernel::Scalar => 0,
+        Kernel::Avx2 => 1,
+        Kernel::Avx512 => 2,
+        Kernel::Neon => 3,
+    }
+}
+
+/// Count one binary GEMM entry under the kernel that ran its rows.
+pub fn record_gemm(method: Method, kernel: Kernel) {
+    GEMM_CALLS[method_index(method)][kernel_index(kernel)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one float GEMM entry (no bit kernel → `"f32"` column).
+pub fn record_gemm_f32(method: Method) {
+    GEMM_CALLS[method_index(method)][KERNEL_COLUMNS.len() - 1].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Nonzero counter cells as `(method_label, kernel_label, count)`,
+/// method-major — the `/metrics` `bmxnet_kernel_calls_total` rows.
+pub fn gemm_calls() -> Vec<(&'static str, &'static str, u64)> {
+    let mut out = Vec::new();
+    for (mi, m) in Method::all().iter().enumerate() {
+        for (ki, kernel) in KERNEL_COLUMNS.iter().enumerate() {
+            let n = GEMM_CALLS[mi][ki].load(Ordering::Relaxed);
+            if n > 0 {
+                out.push((m.label(), *kernel, n));
+            }
+        }
+    }
+    out
+}
+
+/// Sum over the whole grid.
+pub fn gemm_calls_total() -> u64 {
+    GEMM_CALLS
+        .iter()
+        .flatten()
+        .map(|c| c.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Histogram bucket upper bounds in µs, log-spaced ×4 from 1 µs to ~1 s;
+/// an implicit +Inf bucket follows.
+pub const STAGE_BUCKETS: [u64; 11] =
+    [1, 4, 16, 64, 256, 1024, 4096, 16_384, 65_536, 262_144, 1_048_576];
+
+const N_BUCKETS: usize = STAGE_BUCKETS.len() + 1; // +Inf
+
+/// Per-stage latency histograms (Prometheus `bmxnet_stage_latency_us`).
+pub struct StageStats {
+    counts: [[AtomicU64; N_BUCKETS]; Stage::COUNT],
+    sum_us: [AtomicU64; Stage::COUNT],
+    count: [AtomicU64; Stage::COUNT],
+}
+
+impl Default for StageStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageStats {
+    pub fn new() -> StageStats {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const BUCKET_ROW: [AtomicU64; N_BUCKETS] = [ZERO; N_BUCKETS];
+        StageStats {
+            counts: [BUCKET_ROW; Stage::COUNT],
+            sum_us: [ZERO; Stage::COUNT],
+            count: [ZERO; Stage::COUNT],
+        }
+    }
+
+    /// Record one stage duration. Allocation-free.
+    pub fn observe(&self, s: Stage, us: u64) {
+        let bucket = STAGE_BUCKETS
+            .iter()
+            .position(|&le| us <= le)
+            .unwrap_or(N_BUCKETS - 1);
+        let i = s.index();
+        self.counts[i][bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us[i].fetch_add(us, Ordering::Relaxed);
+        self.count[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record every reached stage of a finished trace. Allocation-free.
+    pub fn observe_record(&self, rec: &TraceRecord) {
+        for s in Stage::all() {
+            if let Some(us) = rec.stage_us(s) {
+                self.observe(s, us);
+            }
+        }
+    }
+
+    /// Snapshot for rendering: per stage, *cumulative* bucket counts in
+    /// `STAGE_BUCKETS` order (the +Inf count equals `count`), plus
+    /// sum/count.
+    pub fn snapshot(&self) -> Vec<StageHist> {
+        Stage::all()
+            .into_iter()
+            .map(|s| {
+                let i = s.index();
+                let mut cum = 0u64;
+                let buckets = self.counts[i]
+                    .iter()
+                    .map(|c| {
+                        cum += c.load(Ordering::Relaxed);
+                        cum
+                    })
+                    .collect();
+                StageHist {
+                    stage: s.label(),
+                    buckets,
+                    sum_us: self.sum_us[i].load(Ordering::Relaxed),
+                    count: self.count[i].load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One stage's histogram, cumulative counts aligned to `STAGE_BUCKETS`
+/// plus a final +Inf entry.
+pub struct StageHist {
+    pub stage: &'static str,
+    pub buckets: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{BatchTiming, Trace};
+
+    #[test]
+    fn gemm_counter_grid_accumulates_per_label() {
+        let cell = |calls: &[(&str, &str, u64)]| {
+            calls
+                .iter()
+                .filter(|(m, k, _)| *m == "xnor_64" && *k == "scalar")
+                .map(|(_, _, n)| *n)
+                .sum::<u64>()
+        };
+        let before = cell(&gemm_calls());
+        record_gemm(Method::Xnor64, Kernel::Scalar);
+        record_gemm(Method::Xnor64, Kernel::Scalar);
+        let after = cell(&gemm_calls());
+        assert_eq!(after - before, 2);
+        assert!(gemm_calls_total() >= after);
+    }
+
+    #[test]
+    fn f32_counts_land_in_the_f32_column() {
+        let cell = |calls: &[(&str, &str, u64)]| {
+            calls
+                .iter()
+                .find(|(m, k, _)| *m == "cblas" && *k == "f32")
+                .map(|(_, _, n)| *n)
+                .unwrap_or(0)
+        };
+        let before = cell(&gemm_calls());
+        record_gemm_f32(Method::BlockedF32);
+        assert_eq!(cell(&gemm_calls()) - before, 1);
+    }
+
+    #[test]
+    fn stage_histogram_buckets_are_cumulative_and_sum_count_track() {
+        let st = StageStats::new();
+        st.observe(Stage::Forward, 0); // le="1"
+        st.observe(Stage::Forward, 100); // le="256"
+        st.observe(Stage::Forward, 2_000_000); // +Inf
+        let snap = st.snapshot();
+        let fwd = snap.iter().find(|h| h.stage == "forward").unwrap();
+        assert_eq!(fwd.count, 3);
+        assert_eq!(fwd.sum_us, 2_000_100);
+        assert_eq!(fwd.buckets.len(), STAGE_BUCKETS.len() + 1);
+        assert_eq!(fwd.buckets[0], 1); // ≤ 1µs
+        assert_eq!(fwd.buckets[4], 2); // ≤ 256µs
+        assert_eq!(*fwd.buckets.last().unwrap(), 3); // +Inf == count
+        // monotone non-decreasing
+        assert!(fwd.buckets.windows(2).all(|w| w[0] <= w[1]));
+        // untouched stages stay empty
+        let parse = snap.iter().find(|h| h.stage == "parse").unwrap();
+        assert_eq!(parse.count, 0);
+    }
+
+    #[test]
+    fn observe_record_covers_each_reached_stage_once() {
+        let st = StageStats::new();
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 5, window_us: 5, forward_us: 5 });
+        t.mark(Stage::Respond);
+        st.observe_record(&t.finish("m", 200, 0, 1));
+        for h in st.snapshot() {
+            assert_eq!(h.count, 1, "stage {} count", h.stage);
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Lock-free bounded ring journal for completed traces.
+//!
+//! A fixed array of slots, each a bundle of plain atomics guarded by a
+//! per-slot sequence counter with seqlock semantics:
+//!
+//! * writer: CAS the (even) sequence to odd → store fields (Relaxed) →
+//!   store sequence+2 (Release). If the CAS fails another writer lapped
+//!   the ring onto the same slot mid-write; the record is *dropped* and
+//!   counted instead of blocking — publish never waits.
+//! * reader: load sequence (Acquire); skip if odd or zero; read fields;
+//!   `fence(Acquire)`; re-load sequence and discard the read if it moved.
+//!
+//! A textbook seqlock protects a plain (non-atomic) payload with an
+//! `UnsafeCell`; `gemm/simd.rs` is deliberately this repo's only unsafe
+//! module, so the payload here is itself atomics (word-packed name bytes
+//! included) — torn reads are then merely *stale*, never UB, and the
+//! sequence check discards them. Publish does zero allocation and takes
+//! zero locks (asserted by `rust/tests/profiler_overhead.rs`); `recent`
+//! (the `/v1/debug/trace` path) allocates freely — it is not hot.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use super::trace::{Stage, TraceRecord, NAME_CAP};
+
+/// Default ring capacity for the gateway journal (must be a power of two;
+/// `new` rounds up). 512 × ~14 words ≈ 56 KiB resident.
+pub const DEFAULT_SLOTS: usize = 512;
+
+const NAME_WORDS: usize = NAME_CAP / 8;
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init pattern
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+struct Slot {
+    /// Seqlock sequence: 0 = never written, odd = write in progress.
+    seq: AtomicU64,
+    id: AtomicU64,
+    start_unix_us: AtomicU64,
+    name: [AtomicU64; NAME_WORDS],
+    stages: [AtomicU64; Stage::COUNT],
+    total_us: AtomicU64,
+    /// `status << 48 | shard << 32 | batch << 16 | name_len`.
+    meta: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: ZERO,
+            id: ZERO,
+            start_unix_us: ZERO,
+            name: [ZERO; NAME_WORDS],
+            stages: [ZERO; Stage::COUNT],
+            total_us: ZERO,
+            meta: ZERO,
+        }
+    }
+}
+
+pub struct Journal {
+    slots: Vec<Slot>,
+    /// Total publish attempts; `cursor % slots.len()` is the next slot,
+    /// and the pre-increment value doubles as the record id.
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Journal {
+    /// `slots` is rounded up to a power of two (min 2) so the slot index
+    /// is a mask, not a division.
+    pub fn new(slots: usize) -> Journal {
+        let n = slots.next_power_of_two().max(2);
+        Journal {
+            slots: (0..n).map(|_| Slot::new()).collect(),
+            cursor: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever published (including ones since overwritten
+    /// or dropped).
+    pub fn total(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Records dropped because a concurrent writer held the same slot.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Publish a record; returns its id. Lock-free, allocation-free.
+    pub fn publish(&self, rec: &TraceRecord) -> u64 {
+        let id = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[id as usize & (self.slots.len() - 1)];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq & 1 == 1
+            || slot
+                .seq
+                .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return id;
+        }
+        slot.id.store(id, Ordering::Relaxed);
+        slot.start_unix_us.store(rec.start_unix_us, Ordering::Relaxed);
+        for (w, chunk) in slot.name.iter().zip(rec.name.chunks_exact(8)) {
+            let mut bytes = [0u8; 8];
+            bytes.copy_from_slice(chunk);
+            w.store(u64::from_le_bytes(bytes), Ordering::Relaxed);
+        }
+        for (w, &v) in slot.stages.iter().zip(rec.stages.iter()) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.total_us.store(rec.total_us, Ordering::Relaxed);
+        let meta = (rec.status as u64) << 48
+            | (rec.shard as u64) << 32
+            | (rec.batch as u64) << 16
+            | rec.name_len as u64;
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.seq.store(seq + 2, Ordering::Release);
+        id
+    }
+
+    /// The most recent `n` consistent records, newest first. Slots being
+    /// rewritten concurrently, or already lapped past the id we walked
+    /// to, are skipped rather than retried forever.
+    pub fn recent(&self, n: usize) -> Vec<TraceRecord> {
+        let end = self.cursor.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let mut out = Vec::with_capacity(n.min(self.slots.len()));
+        let mut i = end;
+        while i > 0 && out.len() < n && end - i < cap {
+            i -= 1;
+            let slot = &self.slots[i as usize & (self.slots.len() - 1)];
+            if let Some(rec) = self.read_slot(slot) {
+                if rec.id == i {
+                    out.push(rec);
+                }
+            }
+        }
+        out
+    }
+
+    fn read_slot(&self, slot: &Slot) -> Option<TraceRecord> {
+        // bounded retries: a slot under constant rewrite is not worth
+        // spinning on — the walk just skips it
+        for _ in 0..3 {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                return None;
+            }
+            let id = slot.id.load(Ordering::Relaxed);
+            let start_unix_us = slot.start_unix_us.load(Ordering::Relaxed);
+            let mut name = [0u8; NAME_CAP];
+            for (chunk, w) in name.chunks_exact_mut(8).zip(slot.name.iter()) {
+                chunk.copy_from_slice(&w.load(Ordering::Relaxed).to_le_bytes());
+            }
+            let mut stages = [0u64; Stage::COUNT];
+            for (v, w) in stages.iter_mut().zip(slot.stages.iter()) {
+                *v = w.load(Ordering::Relaxed);
+            }
+            let total_us = slot.total_us.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // torn read: writer moved underneath us
+            }
+            return Some(TraceRecord {
+                id,
+                start_unix_us,
+                name,
+                name_len: (meta & 0xFF) as u8,
+                stages,
+                total_us,
+                status: (meta >> 48) as u16,
+                shard: (meta >> 32) as u16,
+                batch: (meta >> 16) as u16,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{BatchTiming, Trace, UNSET};
+    use std::sync::Arc;
+
+    fn record(model: &str, status: u16, shard: u16, batch: u16) -> TraceRecord {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 3, window_us: 2, forward_us: 40 });
+        t.mark(Stage::Respond);
+        t.finish(model, status, shard, batch)
+    }
+
+    #[test]
+    fn publish_then_recent_roundtrips_all_fields() {
+        let j = Journal::new(8);
+        let id = j.publish(&record("lenet_bin", 200, 3, 7));
+        assert_eq!(id, 0);
+        let recs = j.recent(4);
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.id, 0);
+        assert_eq!(r.model(), "lenet_bin");
+        assert_eq!((r.status, r.shard, r.batch), (200, 3, 7));
+        assert_eq!(r.stage_us(Stage::Forward), Some(40));
+        assert!(r.total_us >= r.stages[Stage::Respond.index()].min(r.total_us));
+    }
+
+    #[test]
+    fn recent_is_newest_first_and_bounded_by_capacity() {
+        let j = Journal::new(8); // rounds to 8
+        for i in 0..20u16 {
+            j.publish(&record("m", 200, i, 1));
+        }
+        assert_eq!(j.total(), 20);
+        let recs = j.recent(100);
+        assert!(recs.len() <= j.capacity());
+        assert!(!recs.is_empty());
+        // newest first, ids strictly descending, all within the live window
+        for pair in recs.windows(2) {
+            assert!(pair[0].id > pair[1].id);
+        }
+        assert_eq!(recs[0].id, 19);
+        assert!(recs.iter().all(|r| r.id >= 20 - j.capacity() as u64));
+    }
+
+    #[test]
+    fn recent_zero_and_empty_journal() {
+        let j = Journal::new(4);
+        assert!(j.recent(10).is_empty());
+        j.publish(&record("m", 200, 0, 1));
+        assert!(j.recent(0).is_empty());
+    }
+
+    #[test]
+    fn wraparound_under_concurrent_writers_yields_only_consistent_records() {
+        let j = Arc::new(Journal::new(16));
+        let writers = 8;
+        let per = 500;
+        let mut handles = Vec::new();
+        for w in 0..writers {
+            let j = Arc::clone(&j);
+            handles.push(std::thread::spawn(move || {
+                let name = format!("writer_{w}");
+                for i in 0..per {
+                    j.publish(&record(&name, 200, w as u16, (i % 7 + 1) as u16));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(j.total(), (writers * per) as u64);
+        // every surviving record must be internally consistent: a valid
+        // writer name and monotone stage offsets (a torn slot would mix
+        // two records and violate one of these with high probability)
+        let recs = j.recent(j.capacity());
+        assert!(!recs.is_empty());
+        for r in &recs {
+            assert!(r.model().starts_with("writer_"), "corrupt name {:?}", r.model());
+            let mut prev = 0u64;
+            for s in Stage::all() {
+                let off = r.stages[s.index()];
+                if off != UNSET {
+                    assert!(off >= prev, "non-monotone stages in {:?}", r);
+                    prev = off;
+                }
+            }
+            assert!(r.batch >= 1 && r.batch <= 7);
+        }
+        // drops only happen on same-slot contention; they must never
+        // exceed the published total
+        assert!(j.dropped() <= j.total());
+    }
+}

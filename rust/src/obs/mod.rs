@@ -1,0 +1,121 @@
+//! Observability: request tracing, per-layer profiling, kernel counters.
+//!
+//! std-only, three parts (DESIGN.md §Observability):
+//!
+//! * [`trace`] + [`journal`] — request-scoped stage spans written into a
+//!   lock-free bounded ring; `GET /v1/debug/trace` reads it back.
+//! * [`profiler`] — opt-in per-layer timing for engine forwards, behind
+//!   `bmxnet profile` and `GET /v1/models/{name}/profile`.
+//! * [`counters`] — process-wide GEMM Method×Kernel call counters and
+//!   per-stage latency histograms, rendered by `serve::prom`.
+//!
+//! Overhead budget: with nothing enabled the per-request cost is six
+//! `Instant::now` stamps, ~20 relaxed atomic ops for the journal publish
+//! and stage histograms, and zero heap allocation (enforced by
+//! `rust/tests/profiler_overhead.rs`); the per-layer hook costs one
+//! branch when no profiler is attached.
+
+pub mod counters;
+pub mod journal;
+pub mod profiler;
+pub mod trace;
+
+pub use counters::StageStats;
+pub use journal::Journal;
+pub use profiler::{layer, LayerRecord, ProfileReport, Profiler};
+pub use trace::{BatchTiming, Stage, Trace, TraceRecord};
+
+/// Environment variable holding the slow-request threshold in µs.
+pub const SLOW_REQ_ENV: &str = "BMXNET_SLOW_REQ_US";
+
+/// Shared observability state for one gateway: the trace journal, stage
+/// histograms, and the slow-request log threshold.
+pub struct Obs {
+    pub journal: Journal,
+    pub stages: StageStats,
+    /// Requests totalling ≥ this many µs get one structured stderr line;
+    /// `None` disables the slow log.
+    pub slow_req_us: Option<u64>,
+}
+
+impl Obs {
+    /// Default-sized journal; threshold from `BMXNET_SLOW_REQ_US`.
+    pub fn from_env() -> Obs {
+        Obs::with_slots(journal::DEFAULT_SLOTS)
+    }
+
+    pub fn with_slots(slots: usize) -> Obs {
+        Obs {
+            journal: Journal::new(slots),
+            stages: StageStats::new(),
+            slow_req_us: std::env::var(SLOW_REQ_ENV).ok().and_then(|v| v.parse().ok()),
+        }
+    }
+
+    /// Finish one request: fold its stages into the histograms, publish
+    /// it to the journal, and emit the slow-request line if it crossed
+    /// the threshold. Returns the journal id. Allocation-free unless the
+    /// request was slow.
+    pub fn complete(&self, rec: &TraceRecord) -> u64 {
+        self.stages.observe_record(rec);
+        let id = self.journal.publish(rec);
+        if let Some(t) = self.slow_req_us {
+            if rec.total_us >= t {
+                eprintln!("{}", slow_line(id, rec));
+            }
+        }
+        id
+    }
+}
+
+/// One `key=value` line for the slow-request log. Stage keys carry the
+/// per-stage *duration*; unreached stages are omitted.
+pub fn slow_line(id: u64, rec: &TraceRecord) -> String {
+    let mut s = format!(
+        "slow_request id={id} model={} status={} shard={} batch={} total_us={}",
+        rec.model(),
+        rec.status,
+        rec.shard,
+        rec.batch,
+        rec.total_us,
+    );
+    for stage in Stage::all() {
+        if let Some(us) = rec.stage_us(stage) {
+            s.push_str(&format!(" {}_us={us}", stage.label()));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_publishes_and_observes() {
+        let obs = Obs::with_slots(8);
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 1, window_us: 1, forward_us: 10 });
+        t.mark(Stage::Respond);
+        let id = obs.complete(&t.finish("m", 200, 0, 2));
+        assert_eq!(id, 0);
+        assert_eq!(obs.journal.recent(1).len(), 1);
+        let snap = obs.stages.snapshot();
+        assert!(snap.iter().all(|h| h.count == 1));
+    }
+
+    #[test]
+    fn slow_line_is_key_value_with_stage_durations() {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 2, window_us: 3, forward_us: 4 });
+        let line = slow_line(7, &t.finish("lenet_bin", 200, 1, 8));
+        assert!(line.starts_with("slow_request id=7 model=lenet_bin status=200 shard=1 batch=8"));
+        assert!(line.contains(" queue_wait_us=2"));
+        assert!(line.contains(" batch_window_us=3"));
+        assert!(line.contains(" forward_us=4"));
+        assert!(!line.contains("respond_us="), "unreached stage must be omitted");
+    }
+}

@@ -1,0 +1,351 @@
+//! Opt-in per-layer profiler for the engine forward pass.
+//!
+//! Layer forwards are wrapped in [`layer`], which is the *only* hook:
+//! with `prof == None` (every production forward) the cost is one branch
+//! — the name closure is never called, nothing is timed, nothing
+//! allocates (asserted by `rust/tests/profiler_overhead.rs` with a
+//! counting allocator). With `Some(prof)` it times the closure, resolves
+//! the GEMM Method×Kernel labels, and appends a [`LayerRecord`].
+//!
+//! [`ProfileReport`] aggregates records across repetitions and renders
+//! the table behind `bmxnet profile` / `GET /v1/models/{name}/profile`,
+//! plus a JSON document in the same hand-rolled self-parse-validated
+//! style as `bench/record.rs` (shared `"schema": 1` + provenance keys,
+//! so perf tooling can ingest both).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::gemm::{dispatch, Method};
+
+/// One timed layer execution (or the aggregate of several reps).
+#[derive(Debug, Clone)]
+pub struct LayerRecord {
+    pub name: String,
+    /// Layer kind, e.g. `conv_f32`, `qconv`, `batchnorm`, `tanh`.
+    pub kind: &'static str,
+    pub wall: Duration,
+    /// Approximate bytes touched (activations + weights), for crude
+    /// arithmetic-intensity eyeballing.
+    pub bytes: usize,
+    /// GEMM method label, for layers that run a GEMM.
+    pub method: Option<&'static str>,
+    /// Row kernel the method resolves to right now (None for float GEMM).
+    pub kernel: Option<&'static str>,
+}
+
+/// Collects [`LayerRecord`]s from one or more profiled forwards.
+/// A plain mutex: the profiled path is diagnostic, not hot.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    records: Mutex<Vec<LayerRecord>>,
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    pub fn record(&self, rec: LayerRecord) {
+        self.records.lock().unwrap().push(rec);
+    }
+
+    /// Drain everything recorded so far, in execution order.
+    pub fn take(&self) -> Vec<LayerRecord> {
+        std::mem::take(&mut *self.records.lock().unwrap())
+    }
+}
+
+/// The per-layer hook. `name` is a closure so the disabled path never
+/// builds the string; `gemm` is a `Copy` method token so the disabled
+/// path never resolves kernel labels either.
+#[inline]
+pub fn layer<T>(
+    prof: Option<&Profiler>,
+    name: impl FnOnce() -> String,
+    kind: &'static str,
+    gemm: Option<Method>,
+    bytes: usize,
+    f: impl FnOnce() -> T,
+) -> T {
+    match prof {
+        None => f(),
+        Some(p) => {
+            let t0 = Instant::now();
+            let out = f();
+            let wall = t0.elapsed();
+            p.record(LayerRecord {
+                name: name(),
+                kind,
+                wall,
+                bytes,
+                method: gemm.map(|m| m.label()),
+                kernel: gemm
+                    .and_then(dispatch::effective_kernel)
+                    .map(|k| k.label()),
+            });
+            out
+        }
+    }
+}
+
+/// Aggregated per-layer profile of one model.
+#[derive(Debug)]
+pub struct ProfileReport {
+    /// Registry/file name of the model (callers set this; the engine
+    /// only knows its architecture).
+    pub model: String,
+    pub arch: String,
+    pub batch: usize,
+    pub reps: usize,
+    /// [`crate::nn::Engine::dispatch_summary`] at profile time.
+    pub dispatch: String,
+    pub force_scalar: bool,
+    /// Mean wall time of one full forward.
+    pub total: Duration,
+    /// Per layer, forward order, wall = mean over reps.
+    pub layers: Vec<LayerRecord>,
+}
+
+impl ProfileReport {
+    /// Aggregate raw records (reps × layers, execution order) by layer
+    /// name: wall times are summed then divided by `reps`.
+    pub fn from_runs(
+        arch: &str,
+        batch: usize,
+        reps: usize,
+        dispatch: String,
+        force_scalar: bool,
+        total: Duration,
+        records: Vec<LayerRecord>,
+    ) -> ProfileReport {
+        let reps = reps.max(1);
+        let mut layers: Vec<LayerRecord> = Vec::new();
+        for rec in records {
+            match layers.iter_mut().find(|l| l.name == rec.name) {
+                Some(l) => l.wall += rec.wall,
+                None => layers.push(rec),
+            }
+        }
+        for l in &mut layers {
+            l.wall /= reps as u32;
+        }
+        ProfileReport {
+            model: arch.to_string(),
+            arch: arch.to_string(),
+            batch,
+            reps,
+            dispatch,
+            force_scalar,
+            total: total / reps as u32,
+            layers,
+        }
+    }
+
+    fn layer_sum(&self) -> Duration {
+        self.layers.iter().map(|l| l.wall).sum()
+    }
+
+    /// Human table: one row per layer plus a sum line.
+    pub fn render_table(&self) -> String {
+        let sum = self.layer_sum().max(Duration::from_nanos(1));
+        let mut out = format!(
+            "profile: {} (arch {}, batch {}, reps {})\ndispatch: {} (force_scalar={})\n\
+             {:<14} {:>10} {:>6}  {:>10}  {:<12} {}\n",
+            self.model,
+            self.arch,
+            self.batch,
+            self.reps,
+            self.dispatch,
+            self.force_scalar,
+            "layer",
+            "ms",
+            "pct",
+            "kbytes",
+            "method",
+            "kernel",
+        );
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<14} {:>10.3} {:>5.1}%  {:>10}  {:<12} {}\n",
+                l.name,
+                l.wall.as_secs_f64() * 1e3,
+                100.0 * l.wall.as_secs_f64() / sum.as_secs_f64(),
+                l.bytes / 1024,
+                l.method.unwrap_or("-"),
+                l.kernel.unwrap_or("-"),
+            ));
+        }
+        out.push_str(&format!(
+            "{:<14} {:>10.3}   (forward total {:.3} ms)\n",
+            "sum",
+            self.layer_sum().as_secs_f64() * 1e3,
+            self.total.as_secs_f64() * 1e3,
+        ));
+        out
+    }
+
+    /// JSON document in the `bench/record.rs` family: same top-level
+    /// provenance keys, layers as an array of objects. Optional GEMM
+    /// labels are omitted (not null) for layers without a GEMM.
+    pub fn render_json(&self) -> String {
+        let sum = self.layer_sum().max(Duration::from_nanos(1));
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str("  \"bench\": \"profile\",\n");
+        s.push_str(&format!("  \"model\": {},\n", json_str(&self.model)));
+        s.push_str(&format!("  \"arch\": {},\n", json_str(&self.arch)));
+        s.push_str(&format!("  \"batch\": {},\n", self.batch));
+        s.push_str(&format!("  \"reps\": {},\n", self.reps));
+        s.push_str(&format!("  \"dispatch\": {},\n", json_str(&self.dispatch)));
+        s.push_str(&format!("  \"force_scalar\": {},\n", self.force_scalar));
+        s.push_str(&format!(
+            "  \"total_ms\": {:.6},\n",
+            self.total.as_secs_f64() * 1e3
+        ));
+        s.push_str("  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"kind\": {}, \"ms\": {:.6}, \"pct\": {:.2}, \"bytes\": {}",
+                json_str(&l.name),
+                json_str(l.kind),
+                l.wall.as_secs_f64() * 1e3,
+                100.0 * l.wall.as_secs_f64() / sum.as_secs_f64(),
+                l.bytes,
+            ));
+            if let Some(m) = l.method {
+                s.push_str(&format!(", \"method\": {}", json_str(m)));
+            }
+            if let Some(k) = l.kernel {
+                s.push_str(&format!(", \"kernel\": {}", json_str(k)));
+            }
+            s.push('}');
+            s.push_str(if i + 1 < self.layers.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Minimal JSON string escaper (same contract as `serve::http`'s).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, us: u64) -> LayerRecord {
+        LayerRecord {
+            name: name.to_string(),
+            kind: "conv_f32",
+            wall: Duration::from_micros(us),
+            bytes: 4096,
+            method: Some("xnor_fused"),
+            kernel: Some("avx2"),
+        }
+    }
+
+    #[test]
+    fn disabled_hook_runs_the_closure_and_nothing_else() {
+        let out = layer(
+            None,
+            || unreachable!("name closure must not run when disabled"),
+            "k",
+            Some(Method::XnorFused),
+            0,
+            || 41 + 1,
+        );
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn enabled_hook_records_labels_and_time() {
+        let p = Profiler::new();
+        let out = layer(
+            Some(&p),
+            || "conv1".to_string(),
+            "qconv",
+            Some(Method::XnorFused),
+            128,
+            || 7,
+        );
+        assert_eq!(out, 7);
+        let recs = p.take();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].name, "conv1");
+        assert_eq!(recs[0].kind, "qconv");
+        assert_eq!(recs[0].bytes, 128);
+        assert_eq!(recs[0].method, Some("xnor_fused"));
+        assert!(recs[0].kernel.is_some(), "binary gemm must resolve a kernel");
+    }
+
+    #[test]
+    fn from_runs_aggregates_by_name_across_reps() {
+        let records = vec![rec("a", 100), rec("b", 300), rec("a", 300), rec("b", 500)];
+        let r = ProfileReport::from_runs(
+            "lenet",
+            4,
+            2,
+            "test".into(),
+            false,
+            Duration::from_micros(1300),
+            records,
+        );
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(r.layers[0].name, "a");
+        assert_eq!(r.layers[0].wall, Duration::from_micros(200));
+        assert_eq!(r.layers[1].wall, Duration::from_micros(400));
+        assert_eq!(r.total, Duration::from_micros(650));
+    }
+
+    #[test]
+    fn json_report_self_parses_with_expected_shape() {
+        let r = ProfileReport::from_runs(
+            "lenet",
+            2,
+            1,
+            "x86_64 · method xnor_fused · kernel avx2".into(),
+            false,
+            Duration::from_micros(900),
+            vec![
+                rec("conv1", 600),
+                LayerRecord {
+                    name: "bn1".into(),
+                    kind: "batchnorm",
+                    wall: Duration::from_micros(50),
+                    bytes: 256,
+                    method: None,
+                    kernel: None,
+                },
+            ],
+        );
+        let doc = crate::model::json::parse(&r.render_json()).unwrap();
+        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("profile"));
+        assert_eq!(doc.get("batch").and_then(|v| v.as_usize()), Some(2));
+        let layers = doc.get("layers").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("name").and_then(|v| v.as_str()), Some("conv1"));
+        assert_eq!(layers[0].get("kernel").and_then(|v| v.as_str()), Some("avx2"));
+        assert!(layers[1].get("kernel").is_none(), "non-gemm layer has no kernel key");
+        assert!(doc.get("total_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let table = r.render_table();
+        assert!(table.contains("conv1") && table.contains("xnor_fused"));
+    }
+}

@@ -1,0 +1,293 @@
+//! Request-scoped span tracing.
+//!
+//! A [`Trace`] lives on the gateway handler's stack for the duration of one
+//! request and records *cumulative* microsecond offsets from request start
+//! at the end of each pipeline stage:
+//!
+//! ```text
+//! parse → admission → queue_wait → batch_window → forward → respond
+//! ```
+//!
+//! The first two and the last stage are stamped by the gateway thread
+//! itself ([`Trace::mark`]); the middle three happen inside the batcher on
+//! another thread, so the coordinator measures them per-request
+//! ([`BatchTiming`] rides back on the `Response`) and the gateway anchors
+//! them after its own admission stamp ([`Trace::absorb_batch_timing`]).
+//! Because each absorbed offset is `previous + delta`, stage offsets are
+//! monotone by construction — the property `rust/tests` assert.
+//!
+//! [`Trace::finish`] freezes the builder into a [`TraceRecord`]: a
+//! fixed-size, heap-free POD (the model name is truncated into an inline
+//! byte array) that the [`super::journal::Journal`] can store without
+//! allocating on the hot path.
+
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Pipeline stages in order. `index()` is the array slot everywhere a
+/// `[u64; Stage::COUNT]` appears (trace records, stage histograms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request body read + JSON decoded + image tensor built.
+    Parse,
+    /// Shard chosen and the request accepted into a bounded queue.
+    Admission,
+    /// Waiting in the shard queue before the batcher picked it up.
+    QueueWait,
+    /// Held while the batcher waited for the batch window to fill.
+    BatchWindow,
+    /// Engine forward pass (amortised across the whole batch).
+    Forward,
+    /// Response serialized and handed to the socket.
+    Respond,
+}
+
+impl Stage {
+    pub const COUNT: usize = 6;
+
+    pub fn all() -> [Stage; Stage::COUNT] {
+        [
+            Stage::Parse,
+            Stage::Admission,
+            Stage::QueueWait,
+            Stage::BatchWindow,
+            Stage::Forward,
+            Stage::Respond,
+        ]
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Parse => 0,
+            Stage::Admission => 1,
+            Stage::QueueWait => 2,
+            Stage::BatchWindow => 3,
+            Stage::Forward => 4,
+            Stage::Respond => 5,
+        }
+    }
+
+    /// Stable label used in `/metrics` (`stage="..."`) and trace JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchWindow => "batch_window",
+            Stage::Forward => "forward",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// Sentinel for "stage never reached" (e.g. a 400 stops after parse).
+pub const UNSET: u64 = u64::MAX;
+
+/// Inline capacity for the model name in a [`TraceRecord`]. Longer names
+/// are truncated on a UTF-8 boundary — traces are diagnostics, not a
+/// registry; the journal must not allocate.
+pub const NAME_CAP: usize = 24;
+
+/// Per-request timing breakdown (µs) measured inside the coordinator's
+/// batcher and carried back on `coordinator::Response`. All three are
+/// durations, not offsets: `queue_us` is submit→dequeue, `window_us` is
+/// dequeue→forward-start, `forward_us` is the batch forward wall time
+/// (shared by every request in the batch).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchTiming {
+    pub queue_us: u64,
+    pub window_us: u64,
+    pub forward_us: u64,
+}
+
+/// A completed, fixed-size trace. `Copy`, no heap — storable in the
+/// journal's atomic slots and reconstructable from them.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRecord {
+    /// Journal sequence number (assigned at publish; 0 before).
+    pub id: u64,
+    /// Wall-clock request start, µs since the Unix epoch.
+    pub start_unix_us: u64,
+    pub name: [u8; NAME_CAP],
+    pub name_len: u8,
+    /// Cumulative µs offset from request start at each stage end;
+    /// [`UNSET`] where the request never reached the stage.
+    pub stages: [u64; Stage::COUNT],
+    pub total_us: u64,
+    /// HTTP status the request resolved to.
+    pub status: u16,
+    /// Pool shard that served it (0 when it never reached a shard).
+    pub shard: u16,
+    /// Batch size it was served in (0 when it never reached the batcher).
+    pub batch: u16,
+}
+
+impl TraceRecord {
+    /// The (possibly truncated) model name.
+    pub fn model(&self) -> &str {
+        std::str::from_utf8(&self.name[..self.name_len as usize]).unwrap_or("?")
+    }
+
+    /// Duration spent *in* one stage: its offset minus the previous
+    /// reached stage's offset. `None` when the stage was never reached.
+    pub fn stage_us(&self, s: Stage) -> Option<u64> {
+        let off = self.stages[s.index()];
+        if off == UNSET {
+            return None;
+        }
+        let prev = self.stages[..s.index()]
+            .iter()
+            .rev()
+            .find(|&&v| v != UNSET)
+            .copied()
+            .unwrap_or(0);
+        Some(off.saturating_sub(prev))
+    }
+}
+
+/// Request-scoped trace builder. Stack-allocated; nothing here touches
+/// the heap (asserted by `rust/tests/profiler_overhead.rs`).
+pub struct Trace {
+    start: Instant,
+    start_unix_us: u64,
+    stages: [u64; Stage::COUNT],
+}
+
+impl Trace {
+    pub fn begin() -> Trace {
+        Trace {
+            start: Instant::now(),
+            start_unix_us: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0),
+            stages: [UNSET; Stage::COUNT],
+        }
+    }
+
+    /// Highest offset recorded for any stage before `idx` (0 if none) —
+    /// the monotonicity floor for new stamps.
+    fn floor(&self, idx: usize) -> u64 {
+        self.stages[..idx]
+            .iter()
+            .rev()
+            .find(|&&v| v != UNSET)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Stamp a stage at "now", clamped so offsets stay monotone even if
+    /// the monotonic clock reads equal across adjacent calls.
+    pub fn mark(&mut self, s: Stage) {
+        let now = self.start.elapsed().as_micros() as u64;
+        self.stages[s.index()] = now.max(self.floor(s.index()));
+    }
+
+    /// Fill queue-wait / batch-window / forward from the batcher's own
+    /// per-request measurements, anchored after the admission stamp.
+    /// Offsets are cumulative sums of durations, so monotone by
+    /// construction.
+    pub fn absorb_batch_timing(&mut self, t: &BatchTiming) {
+        let anchor = self.floor(Stage::QueueWait.index());
+        let q = anchor.saturating_add(t.queue_us);
+        let w = q.saturating_add(t.window_us);
+        let f = w.saturating_add(t.forward_us);
+        self.stages[Stage::QueueWait.index()] = q;
+        self.stages[Stage::BatchWindow.index()] = w;
+        self.stages[Stage::Forward.index()] = f;
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Freeze into a fixed-size record. `total_us` is clamped up to the
+    /// largest stage offset so absorbed batcher time can never exceed it.
+    pub fn finish(&self, model: &str, status: u16, shard: u16, batch: u16) -> TraceRecord {
+        let bytes = model.as_bytes();
+        let mut len = bytes.len().min(NAME_CAP);
+        if len < bytes.len() {
+            // don't split a multi-byte UTF-8 character on truncation
+            while len > 0 && bytes[len] & 0xC0 == 0x80 {
+                len -= 1;
+            }
+        }
+        let mut name = [0u8; NAME_CAP];
+        name[..len].copy_from_slice(&bytes[..len]);
+        let total = self.elapsed_us().max(self.floor(Stage::COUNT));
+        TraceRecord {
+            id: 0,
+            start_unix_us: self.start_unix_us,
+            name,
+            name_len: len as u8,
+            stages: self.stages,
+            total_us: total,
+            status,
+            shard,
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_and_absorb_keep_offsets_monotone() {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 10, window_us: 0, forward_us: 250 });
+        t.mark(Stage::Respond);
+        let rec = t.finish("lenet_bin", 200, 1, 4);
+        let mut prev = 0u64;
+        let mut named = 0;
+        for s in Stage::all() {
+            let off = rec.stages[s.index()];
+            assert_ne!(off, UNSET, "stage {} unset", s.label());
+            assert!(off >= prev, "stage {} offset {off} < previous {prev}", s.label());
+            prev = off;
+            named += 1;
+        }
+        assert_eq!(named, 6);
+        assert!(rec.total_us >= prev, "total below last stage offset");
+    }
+
+    #[test]
+    fn stage_us_returns_durations_relative_to_previous_reached_stage() {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&BatchTiming { queue_us: 7, window_us: 3, forward_us: 90 });
+        let rec = t.finish("m", 200, 0, 1);
+        assert_eq!(rec.stage_us(Stage::QueueWait), Some(7));
+        assert_eq!(rec.stage_us(Stage::BatchWindow), Some(3));
+        assert_eq!(rec.stage_us(Stage::Forward), Some(90));
+        assert_eq!(rec.stage_us(Stage::Respond), None);
+    }
+
+    #[test]
+    fn unreached_stages_stay_unset() {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        let rec = t.finish("m", 400, 0, 0);
+        assert_ne!(rec.stages[Stage::Parse.index()], UNSET);
+        for s in [Stage::Admission, Stage::QueueWait, Stage::BatchWindow, Stage::Forward] {
+            assert_eq!(rec.stages[s.index()], UNSET);
+            assert_eq!(rec.stage_us(s), None);
+        }
+        assert_eq!(rec.status, 400);
+    }
+
+    #[test]
+    fn long_names_truncate_on_utf8_boundary() {
+        let long = "model_with_a_really_long_name_αβγδ";
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        let rec = t.finish(long, 200, 0, 1);
+        assert!(rec.name_len as usize <= NAME_CAP);
+        let m = rec.model();
+        assert!(long.starts_with(m), "{m:?} is not a prefix of {long:?}");
+        assert_ne!(m, "?", "truncation split a UTF-8 character");
+    }
+}

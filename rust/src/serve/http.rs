@@ -8,9 +8,20 @@
 //!   200 with `{"model", "class", "score", "latency_us", "batch_size",
 //!   "shard"}`, 400 on malformed input, 404 on unknown model, **429 when
 //!   every pool shard's bounded queue is full** (admission control).
-//! * `GET /v1/models` — available + resident models.
+//! * `GET /v1/models` — available + resident models, per-model GEMM
+//!   dispatch, and the process `force_scalar` state.
+//! * `GET /v1/models/{name}/profile?batch=N&reps=R` — per-layer wall
+//!   time / bytes / dispatch labels from a synthetic profiled forward.
+//! * `GET /v1/debug/trace?n=K` — the K most recent request traces from
+//!   the lock-free journal (stage offsets in µs from request start).
 //! * `GET /metrics` — Prometheus-style text (see [`super::prom`]).
 //! * `GET /healthz` — liveness.
+//!
+//! Every classify request carries a [`Trace`]: the gateway stamps
+//! parse/admission/respond, the pool batcher contributes
+//! queue_wait/batch_window/forward via [`crate::coordinator::Response`]
+//! timing, and the completed record feeds the journal, the per-stage
+//! histograms and the slow-request log ([`Obs::complete`]).
 //!
 //! Limits: bodies over [`MAX_BODY`] are rejected, chunked transfer
 //! encoding is not supported (501-adjacent 400), at most
@@ -30,6 +41,7 @@ use std::time::Duration;
 use super::prom;
 use super::registry::ModelRegistry;
 use crate::model::json;
+use crate::obs::{trace, Obs, Stage, Trace};
 
 /// Request body cap (a 3×32×32 image in long-form JSON is ~40 kB).
 pub const MAX_BODY: usize = 8 << 20;
@@ -72,16 +84,19 @@ pub struct Gateway {
 impl Gateway {
     /// Bind and start serving.  `addr` is `host:port`; port 0 picks an
     /// ephemeral port — read the real one back from [`Gateway::addr`].
+    /// Observability state (journal, stage histograms, slow-request
+    /// threshold) is built from the environment ([`Obs::from_env`]).
     pub fn start(registry: Arc<ModelRegistry>, addr: &str) -> Result<Gateway> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conn_handles = Arc::new(Mutex::new(Vec::new()));
+        let obs = Arc::new(Obs::from_env());
         let s = stop.clone();
         let ch = conn_handles.clone();
         let accept_handle = std::thread::Builder::new()
             .name("bmxnet-accept".into())
-            .spawn(move || accept_loop(listener, registry, s, ch))
+            .spawn(move || accept_loop(listener, registry, obs, s, ch))
             .context("spawn accept thread")?;
         Ok(Gateway { addr: local, stop, accept_handle: Some(accept_handle), conn_handles })
     }
@@ -121,6 +136,7 @@ impl Drop for Gateway {
 fn accept_loop(
     listener: TcpListener,
     registry: Arc<ModelRegistry>,
+    obs: Arc<Obs>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 ) {
@@ -140,12 +156,13 @@ fn accept_loop(
         active.fetch_add(1, Ordering::AcqRel);
         let guard = ConnGuard(active.clone());
         let registry = registry.clone();
+        let obs = obs.clone();
         let stop = stop.clone();
         let handle = std::thread::Builder::new()
             .name("bmxnet-conn".into())
             .spawn(move || {
                 let _guard = guard;
-                let _ = handle_connection(stream, &registry, &stop);
+                let _ = handle_connection(stream, &registry, &obs, &stop);
             });
         let mut g = conns.lock().unwrap();
         if let Ok(h) = handle {
@@ -161,6 +178,7 @@ fn accept_loop(
 fn handle_connection(
     stream: TcpStream,
     registry: &ModelRegistry,
+    obs: &Obs,
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     let _ = stream.set_nodelay(true);
@@ -187,7 +205,7 @@ fn handle_connection(
         match read_request(&mut reader) {
             Ok(Some(req)) => {
                 let keep_alive = req.keep_alive;
-                let resp = route(registry, &req);
+                let resp = route(registry, obs, &req);
                 write_response(&mut writer, &resp, keep_alive)?;
                 if !keep_alive {
                     return Ok(());
@@ -222,6 +240,8 @@ struct HttpRequest {
     method: String,
     /// Path with any query string stripped.
     path: String,
+    /// Raw query string (after `?`, empty when absent).
+    query: String,
     body: Vec<u8>,
     keep_alive: bool,
 }
@@ -312,8 +332,11 @@ fn read_request<R: BufRead>(reader: &mut R) -> ReadResult {
         Some("keep-alive") => true,
         _ => !http10,
     };
-    let path = target.split('?').next().unwrap_or("").to_string();
-    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Some(HttpRequest { method, path, query, body, keep_alive }))
 }
 
 struct HttpResponse {
@@ -400,17 +423,35 @@ fn json_string(s: &str) -> String {
 
 const CLASSIFY_PREFIX: &str = "/v1/models/";
 const CLASSIFY_SUFFIX: &str = ":classify";
+const PROFILE_SUFFIX: &str = "/profile";
 
-fn route(registry: &ModelRegistry, req: &HttpRequest) -> HttpResponse {
+/// First `key=` value in a query string, parsed as usize.
+fn query_usize(query: &str, key: &str) -> Option<usize> {
+    query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .and_then(|v| v.parse().ok())
+}
+
+fn route(registry: &ModelRegistry, obs: &Obs, req: &HttpRequest) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/models") => list_models(registry),
-        ("GET", "/metrics") => HttpResponse::text(200, prom::render(registry)),
+        ("GET", "/v1/debug/trace") => debug_trace(obs, &req.query),
+        ("GET", "/metrics") => HttpResponse::text(200, prom::render(registry, obs)),
         ("GET", "/healthz") => HttpResponse::json(200, "{\"status\": \"ok\"}".to_string()),
         ("POST", path)
             if path.starts_with(CLASSIFY_PREFIX) && path.ends_with(CLASSIFY_SUFFIX) =>
         {
             let name = &path[CLASSIFY_PREFIX.len()..path.len() - CLASSIFY_SUFFIX.len()];
-            classify(registry, name, &req.body)
+            classify(registry, obs, name, &req.body)
+        }
+        ("GET", path)
+            if path.starts_with(CLASSIFY_PREFIX)
+                && path.ends_with(PROFILE_SUFFIX)
+                && path.len() > CLASSIFY_PREFIX.len() + PROFILE_SUFFIX.len() =>
+        {
+            let name = &path[CLASSIFY_PREFIX.len()..path.len() - PROFILE_SUFFIX.len()];
+            model_profile(registry, name, &req.query)
         }
         ("GET" | "POST", _) => {
             HttpResponse::error(404, &format!("no route for {} {}", req.method, req.path))
@@ -424,36 +465,132 @@ fn list_models(registry: &ModelRegistry) -> HttpResponse {
         .list()
         .iter()
         .map(|m| {
+            let dispatch = match &m.dispatch {
+                Some(d) => json_string(d),
+                None => "null".to_string(),
+            };
             format!(
-                "{{\"name\": {}, \"source\": {}, \"loaded\": {}, \"resident_bytes\": {}}}",
+                "{{\"name\": {}, \"source\": {}, \"loaded\": {}, \"resident_bytes\": {}, \
+                 \"dispatch\": {}}}",
                 json_string(&m.name),
                 json_string(m.source),
                 m.loaded,
                 m.resident_bytes,
+                dispatch,
             )
         })
         .collect();
-    HttpResponse::json(200, format!("{{\"models\": [{}]}}", items.join(", ")))
+    HttpResponse::json(
+        200,
+        format!(
+            "{{\"models\": [{}], \"gemm_dispatch\": {}, \"force_scalar\": {}}}",
+            items.join(", "),
+            json_string(&format!(
+                "method {} · kernel {}",
+                crate::gemm::Method::auto().label(),
+                crate::gemm::simd::best_kernel().label()
+            )),
+            crate::gemm::simd::force_scalar(),
+        ),
+    )
 }
 
-fn classify(registry: &ModelRegistry, name: &str, body: &[u8]) -> HttpResponse {
+/// `GET /v1/debug/trace?n=K` — newest-first traces from the journal.
+fn debug_trace(obs: &Obs, query: &str) -> HttpResponse {
+    let n = query_usize(query, "n").unwrap_or(16).min(obs.journal.capacity());
+    let mut items = Vec::new();
+    for rec in obs.journal.recent(n) {
+        let mut stages = String::new();
+        for s in Stage::all() {
+            if rec.stages[s.index()] != trace::UNSET {
+                if !stages.is_empty() {
+                    stages.push_str(", ");
+                }
+                stages.push_str(&format!("\"{}\": {}", s.label(), rec.stages[s.index()]));
+            }
+        }
+        items.push(format!(
+            "{{\"id\": {}, \"model\": {}, \"status\": {}, \"shard\": {}, \"batch_size\": {}, \
+             \"start_unix_us\": {}, \"total_us\": {}, \"stages_us\": {{{}}}}}",
+            rec.id,
+            json_string(rec.model()),
+            rec.status,
+            rec.shard,
+            rec.batch,
+            rec.start_unix_us,
+            rec.total_us,
+            stages,
+        ));
+    }
+    HttpResponse::json(
+        200,
+        format!(
+            "{{\"total\": {}, \"dropped\": {}, \"traces\": [{}]}}",
+            obs.journal.total(),
+            obs.journal.dropped(),
+            items.join(", "),
+        ),
+    )
+}
+
+/// `GET /v1/models/{name}/profile?batch=N&reps=R` — profiled synthetic
+/// forward through the resident engine (loads the model if needed).
+fn model_profile(registry: &ModelRegistry, name: &str, query: &str) -> HttpResponse {
+    let batch = query_usize(query, "batch").unwrap_or(1).clamp(1, 64);
+    let reps = query_usize(query, "reps").unwrap_or(3).clamp(1, 100);
+    let model = match registry.get(name) {
+        Ok(m) => m,
+        Err(e) => {
+            let known = registry.list().iter().any(|m| m.name == name);
+            let status = if known { 500 } else { 404 };
+            return HttpResponse::error(status, &format!("model {name:?} unavailable: {e:#}"));
+        }
+    };
+    match model.engine.profile(batch, reps) {
+        Ok(mut report) => {
+            report.model = name.to_string();
+            HttpResponse::json(200, report.render_json())
+        }
+        Err(e) => HttpResponse::error(500, &format!("profile failed: {e:#}")),
+    }
+}
+
+fn classify(registry: &ModelRegistry, obs: &Obs, name: &str, body: &[u8]) -> HttpResponse {
+    let mut trace = Trace::begin();
+    let (resp, shard, batch) = classify_traced(registry, name, body, &mut trace);
+    trace.mark(Stage::Respond);
+    obs.complete(&trace.finish(name, resp.status, shard, batch));
+    resp
+}
+
+/// Classify body with stage stamps; returns (response, shard, batch_size)
+/// so the caller can finish and publish the trace on every exit path.
+fn classify_traced(
+    registry: &ModelRegistry,
+    name: &str,
+    body: &[u8],
+    trace: &mut Trace,
+) -> (HttpResponse, u16, u16) {
     let Ok(text) = std::str::from_utf8(body) else {
-        return HttpResponse::error(400, "body is not UTF-8");
+        return (HttpResponse::error(400, "body is not UTF-8"), 0, 0);
     };
     let parsed = match json::parse(text) {
         Ok(v) => v,
-        Err(e) => return HttpResponse::error(400, &format!("bad JSON body: {e}")),
+        Err(e) => return (HttpResponse::error(400, &format!("bad JSON body: {e}")), 0, 0),
     };
     let Some(image_v) = parsed.get("image").and_then(|v| v.as_array()) else {
-        return HttpResponse::error(400, "body must be {\"image\": [f32; C*H*W]}");
+        return (HttpResponse::error(400, "body must be {\"image\": [f32; C*H*W]}"), 0, 0);
     };
     let mut image = Vec::with_capacity(image_v.len());
     for v in image_v {
         match v.as_f64() {
             Some(f) => image.push(f as f32),
-            None => return HttpResponse::error(400, "\"image\" must contain only numbers"),
+            None => {
+                return (HttpResponse::error(400, "\"image\" must contain only numbers"), 0, 0)
+            }
         }
     }
+    trace.mark(Stage::Parse);
     let model = match registry.get(name) {
         Ok(m) => m,
         Err(e) => {
@@ -461,20 +598,25 @@ fn classify(registry: &ModelRegistry, name: &str, body: &[u8]) -> HttpResponse {
             // server-side fault (500), not a client-side unknown (404)
             let known = registry.list().iter().any(|m| m.name == name);
             let status = if known { 500 } else { 404 };
-            return HttpResponse::error(
-                status,
-                &format!("model {name:?} unavailable: {e:#}"),
+            return (
+                HttpResponse::error(status, &format!("model {name:?} unavailable: {e:#}")),
+                0,
+                0,
             );
         }
     };
     if image.len() != model.pool.image_len() {
-        return HttpResponse::error(
-            400,
-            &format!(
-                "model {name:?} expects {} floats, got {}",
-                model.pool.image_len(),
-                image.len()
+        return (
+            HttpResponse::error(
+                400,
+                &format!(
+                    "model {name:?} expects {} floats, got {}",
+                    model.pool.image_len(),
+                    image.len()
+                ),
             ),
+            0,
+            0,
         );
     }
     let pending = match model.pool.submit(image) {
@@ -483,25 +625,37 @@ fn classify(registry: &ModelRegistry, name: &str, body: &[u8]) -> HttpResponse {
             // every shard queue full: bounded-queue fast rejection
             let mut r = HttpResponse::error(429, &format!("model {name:?} at capacity, retry"));
             r.retry_after = true;
-            return r;
+            return (r, 0, 0);
         }
     };
+    trace.mark(Stage::Admission);
     let shard = pending.shard();
     match pending.wait() {
-        Ok(resp) => HttpResponse::json(
-            200,
-            format!(
-                "{{\"model\": {}, \"class\": {}, \"score\": {:.6}, \"latency_us\": {}, \
-                 \"batch_size\": {}, \"shard\": {}}}",
-                json_string(name),
-                resp.class,
-                resp.score,
-                resp.latency.as_micros(),
-                resp.batch_size,
-                shard,
-            ),
+        Ok(resp) => {
+            trace.absorb_batch_timing(&resp.timing);
+            (
+                HttpResponse::json(
+                    200,
+                    format!(
+                        "{{\"model\": {}, \"class\": {}, \"score\": {:.6}, \"latency_us\": {}, \
+                         \"batch_size\": {}, \"shard\": {}}}",
+                        json_string(name),
+                        resp.class,
+                        resp.score,
+                        resp.latency.as_micros(),
+                        resp.batch_size,
+                        shard,
+                    ),
+                ),
+                shard as u16,
+                resp.batch_size as u16,
+            )
+        }
+        Err(e) => (
+            HttpResponse::error(500, &format!("engine dropped the request: {e:#}")),
+            shard as u16,
+            0,
         ),
-        Err(e) => HttpResponse::error(500, &format!("engine dropped the request: {e:#}")),
     }
 }
 
@@ -546,6 +700,18 @@ mod tests {
     fn query_string_is_stripped() {
         let r = req("GET /metrics?x=1 HTTP/1.1\r\n\r\n").unwrap().unwrap();
         assert_eq!(r.path, "/metrics");
+        assert_eq!(r.query, "x=1");
+        let r = req("GET /metrics HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.query, "");
+    }
+
+    #[test]
+    fn query_usize_parses_first_match() {
+        assert_eq!(query_usize("n=5", "n"), Some(5));
+        assert_eq!(query_usize("batch=8&reps=2", "reps"), Some(2));
+        assert_eq!(query_usize("nn=9", "n"), None);
+        assert_eq!(query_usize("n=x", "n"), None);
+        assert_eq!(query_usize("", "n"), None);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     Backend, BatchPolicy, Client, MetricsSnapshot, Response, Server, ServerConfig,
@@ -25,11 +26,22 @@ pub struct PoolConfig {
     pub policy: BatchPolicy,
     /// Ingress queue bound per shard (admission control).
     pub queue_cap: usize,
+    /// How long [`ModelPool::snapshot_cached`] may serve a stale merged
+    /// snapshot. Merging re-sorts the pooled latency window (up to
+    /// `workers × LATENCY_WINDOW` samples), so uncached scrapes are the
+    /// most expensive read in the gateway; `/metrics` uses the cache.
+    /// `Duration::ZERO` disables caching.
+    pub metrics_ttl: Duration,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { workers: 2, policy: BatchPolicy::default(), queue_cap: 256 }
+        Self {
+            workers: 2,
+            policy: BatchPolicy::default(),
+            queue_cap: 256,
+            metrics_ttl: Duration::from_millis(250),
+        }
     }
 }
 
@@ -47,6 +59,9 @@ pub struct ModelPool {
     image_len: usize,
     /// Requests refused at admission (every shard queue full).
     rejected: AtomicU64,
+    metrics_ttl: Duration,
+    /// Last merged snapshot + when it was computed (see `snapshot_cached`).
+    snap_cache: Mutex<Option<(Instant, MetricsSnapshot)>>,
 }
 
 /// An accepted request: the response channel plus the shard bookkeeping.
@@ -91,7 +106,14 @@ impl ModelPool {
                 Shard { server, client, depth: Arc::new(AtomicUsize::new(0)) }
             })
             .collect();
-        ModelPool { shards, cursor: AtomicUsize::new(0), image_len, rejected: AtomicU64::new(0) }
+        ModelPool {
+            shards,
+            cursor: AtomicUsize::new(0),
+            image_len,
+            rejected: AtomicU64::new(0),
+            metrics_ttl: cfg.metrics_ttl,
+            snap_cache: Mutex::new(None),
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -106,6 +128,12 @@ impl ModelPool {
     /// Requests currently accepted but not yet delivered, across shards.
     pub fn depth(&self) -> usize {
         self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-shard queue depths, in shard order (the
+    /// `bmxnet_queue_depth{shard=...}` gauges).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).collect()
     }
 
     /// Route a request: shards ordered by queue depth (round-robin cursor
@@ -144,12 +172,29 @@ impl ModelPool {
     }
 
     /// Aggregate metrics across shards (losslessly merged percentiles),
-    /// with admission rejections folded into `rejected`.
+    /// with admission rejections folded into `rejected`.  Always fresh —
+    /// scrape paths should prefer [`ModelPool::snapshot_cached`].
     pub fn snapshot(&self) -> MetricsSnapshot {
         let snaps: Vec<MetricsSnapshot> = self.shard_snapshots();
         let mut merged = MetricsSnapshot::merge(snaps.iter());
         merged.rejected += self.rejected.load(Ordering::Relaxed);
         merged
+    }
+
+    /// [`ModelPool::snapshot`] behind a `metrics_ttl` cache, so a scrape
+    /// storm pays for one clone+sort of the pooled latency window per TTL
+    /// instead of one per scrape.  Concurrent scrapes serialize on the
+    /// cache lock: the first recomputes, the rest reuse its result.
+    pub fn snapshot_cached(&self) -> MetricsSnapshot {
+        let mut g = self.snap_cache.lock().unwrap();
+        if let Some((at, snap)) = g.as_ref() {
+            if at.elapsed() < self.metrics_ttl {
+                return snap.clone();
+            }
+        }
+        let snap = self.snapshot();
+        *g = Some((Instant::now(), snap.clone()));
+        snap
     }
 
     /// Per-shard metrics, in shard order.
@@ -247,6 +292,7 @@ mod tests {
                 workers: 2,
                 policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
                 queue_cap: 8,
+                ..Default::default()
             },
         );
         let a = pool.submit(img(0)).unwrap();
@@ -268,6 +314,7 @@ mod tests {
                 workers: 2,
                 policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
                 queue_cap: 1,
+                ..Default::default()
             },
         );
         let mut accepted = Vec::new();
@@ -291,6 +338,62 @@ mod tests {
     }
 
     #[test]
+    fn cached_snapshot_serves_stale_within_ttl_and_refreshes_after() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(0)),
+            &PoolConfig {
+                workers: 1,
+                metrics_ttl: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        );
+        pool.classify(img(0)).unwrap();
+        assert_eq!(pool.snapshot_cached().requests, 1);
+        pool.classify(img(1)).unwrap();
+        // within the TTL the cache serves the stale merge...
+        assert_eq!(pool.snapshot_cached().requests, 1, "cache recomputed inside TTL");
+        // ...while the uncached path is always fresh
+        assert_eq!(pool.snapshot().requests, 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_ttl_disables_the_snapshot_cache() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(0)),
+            &PoolConfig { workers: 1, metrics_ttl: Duration::ZERO, ..Default::default() },
+        );
+        pool.classify(img(2)).unwrap();
+        assert_eq!(pool.snapshot_cached().requests, 1);
+        pool.classify(img(3)).unwrap();
+        assert_eq!(pool.snapshot_cached().requests, 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shard_depths_tracks_in_flight_per_shard() {
+        let pool = ModelPool::start(
+            Arc::new(Mock::slow(20)),
+            &PoolConfig {
+                workers: 2,
+                policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+                queue_cap: 8,
+                ..Default::default()
+            },
+        );
+        assert_eq!(pool.shard_depths(), vec![0, 0]);
+        let a = pool.submit(img(0)).unwrap();
+        let b = pool.submit(img(1)).unwrap();
+        let depths = pool.shard_depths();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths.iter().sum::<usize>(), 2);
+        a.wait().unwrap();
+        b.wait().unwrap();
+        assert_eq!(pool.shard_depths().iter().sum::<usize>(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
     fn wrong_image_length_is_rejected_up_front() {
         let pool = ModelPool::start(Arc::new(Mock::slow(0)), &PoolConfig::default());
         assert!(pool.submit(vec![0.0; 3]).is_err());
@@ -306,6 +409,7 @@ mod tests {
                 workers: 2,
                 policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(2) },
                 queue_cap: 64,
+                ..Default::default()
             },
         );
         let pending: Vec<_> = (0..12).map(|i| pool.submit(img(i % 4)).unwrap()).collect();

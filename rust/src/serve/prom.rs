@@ -5,8 +5,16 @@
 //! invariant consumers can rely on: for every model,
 //! `sum over size of (size * bmxnet_batch_size_total)` equals
 //! `bmxnet_requests_total` — asserted by `tests/serve_gateway.rs`.
+//!
+//! Scrape cost: per-model snapshots come from
+//! [`crate::serve::ModelPool::snapshot_cached`], so a scrape storm inside
+//! the pool's `metrics_ttl` re-reads one cached merge instead of locking
+//! every shard's ring each time.  Process-wide families (stage latency
+//! histograms, kernel call counters, trace journal totals) read the
+//! lock-free [`crate::obs`] state directly.
 
 use crate::coordinator::MetricsSnapshot;
+use crate::obs::{counters, Obs};
 
 use super::registry::{ModelInfo, ModelRegistry};
 
@@ -20,12 +28,15 @@ fn label_escape(s: &str) -> String {
 }
 
 /// Render the whole registry: per-model counters, batch-size histogram
-/// and latency quantiles, aggregated across each model's pool shards.
-pub fn render(registry: &ModelRegistry) -> String {
+/// and latency quantiles, aggregated across each model's pool shards —
+/// plus the process-wide observability families from `obs`.
+pub fn render(registry: &ModelRegistry, obs: &Obs) -> String {
     let loaded = registry.loaded_models();
-    let rows: Vec<(ModelInfo, MetricsSnapshot, usize)> = loaded
+    let rows: Vec<(ModelInfo, MetricsSnapshot, usize, Vec<usize>)> = loaded
         .iter()
-        .map(|m| (m.info.clone(), m.pool.snapshot(), m.pool.workers()))
+        .map(|m| {
+            (m.info.clone(), m.pool.snapshot_cached(), m.pool.workers(), m.pool.shard_depths())
+        })
         .collect();
 
     let mut out = String::new();
@@ -38,7 +49,7 @@ pub fn render(registry: &ModelRegistry) -> String {
         "gauge",
         "Packed payload bytes of a resident model.",
     );
-    for (info, _, _) in &rows {
+    for (info, _, _, _) in &rows {
         out.push_str(&format!(
             "bmxnet_resident_bytes{{model=\"{}\"}} {}\n",
             label_escape(&info.name),
@@ -47,7 +58,7 @@ pub fn render(registry: &ModelRegistry) -> String {
     }
 
     push_family(&mut out, "bmxnet_pool_workers", "gauge", "Shards serving a model.");
-    for (info, _, workers) in &rows {
+    for (info, _, workers, _) in &rows {
         out.push_str(&format!(
             "bmxnet_pool_workers{{model=\"{}\"}} {}\n",
             label_escape(&info.name),
@@ -55,8 +66,25 @@ pub fn render(registry: &ModelRegistry) -> String {
         ));
     }
 
+    push_family(
+        &mut out,
+        "bmxnet_queue_depth",
+        "gauge",
+        "In-flight requests per pool shard at scrape time.",
+    );
+    for (info, _, _, depths) in &rows {
+        for (shard, depth) in depths.iter().enumerate() {
+            out.push_str(&format!(
+                "bmxnet_queue_depth{{model=\"{}\",shard=\"{}\"}} {}\n",
+                label_escape(&info.name),
+                shard,
+                depth
+            ));
+        }
+    }
+
     push_family(&mut out, "bmxnet_requests_total", "counter", "Requests answered per model.");
-    for (info, snap, _) in &rows {
+    for (info, snap, _, _) in &rows {
         out.push_str(&format!(
             "bmxnet_requests_total{{model=\"{}\"}} {}\n",
             label_escape(&info.name),
@@ -70,7 +98,7 @@ pub fn render(registry: &ModelRegistry) -> String {
         "counter",
         "Requests dropped by admission control or engine failure.",
     );
-    for (info, snap, _) in &rows {
+    for (info, snap, _, _) in &rows {
         out.push_str(&format!(
             "bmxnet_rejected_total{{model=\"{}\"}} {}\n",
             label_escape(&info.name),
@@ -79,7 +107,7 @@ pub fn render(registry: &ModelRegistry) -> String {
     }
 
     push_family(&mut out, "bmxnet_batches_total", "counter", "Engine forward passes per model.");
-    for (info, snap, _) in &rows {
+    for (info, snap, _, _) in &rows {
         out.push_str(&format!(
             "bmxnet_batches_total{{model=\"{}\"}} {}\n",
             label_escape(&info.name),
@@ -93,7 +121,7 @@ pub fn render(registry: &ModelRegistry) -> String {
         "counter",
         "Batches dispatched at each batch size; sum(size*count) == requests.",
     );
-    for (info, snap, _) in &rows {
+    for (info, snap, _, _) in &rows {
         for &(size, count) in &snap.batch_hist {
             out.push_str(&format!(
                 "bmxnet_batch_size_total{{model=\"{}\",size=\"{}\"}} {}\n",
@@ -110,7 +138,7 @@ pub fn render(registry: &ModelRegistry) -> String {
         "summary",
         "Request latency quantiles in microseconds (queue + compute).",
     );
-    for (info, snap, _) in &rows {
+    for (info, snap, _, _) in &rows {
         for (q, v) in [(0.5, snap.p50), (0.95, snap.p95), (0.99, snap.p99)] {
             out.push_str(&format!(
                 "bmxnet_latency_us{{model=\"{}\",quantile=\"{}\"}} {}\n",
@@ -119,13 +147,76 @@ pub fn render(registry: &ModelRegistry) -> String {
                 v.as_micros()
             ));
         }
+        // _count/_sum are monotone (unlike the windowed quantile ring), so
+        // rate(bmxnet_latency_us_sum[1m]) / rate(_count[1m]) works.
+        out.push_str(&format!(
+            "bmxnet_latency_us_count{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            snap.lat_count
+        ));
+        out.push_str(&format!(
+            "bmxnet_latency_us_sum{{model=\"{}\"}} {}\n",
+            label_escape(&info.name),
+            snap.lat_sum_us
+        ));
     }
+
+    push_family(
+        &mut out,
+        "bmxnet_stage_latency_us",
+        "histogram",
+        "Per-stage request latency in microseconds \
+         (parse, admission, queue_wait, batch_window, forward, respond).",
+    );
+    for h in obs.stages.snapshot() {
+        let stage = h.stage;
+        for (i, &le) in counters::STAGE_BUCKETS.iter().enumerate() {
+            out.push_str(&format!(
+                "bmxnet_stage_latency_us_bucket{{stage=\"{stage}\",le=\"{le}\"}} {}\n",
+                h.buckets[i]
+            ));
+        }
+        out.push_str(&format!(
+            "bmxnet_stage_latency_us_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {}\n",
+            h.buckets[counters::STAGE_BUCKETS.len()]
+        ));
+        out.push_str(&format!("bmxnet_stage_latency_us_sum{{stage=\"{stage}\"}} {}\n", h.sum_us));
+        out.push_str(&format!("bmxnet_stage_latency_us_count{{stage=\"{stage}\"}} {}\n", h.count));
+    }
+
+    push_family(
+        &mut out,
+        "bmxnet_kernel_calls_total",
+        "counter",
+        "GEMM entry calls by dispatch method and resolved kernel.",
+    );
+    for (method, kernel, calls) in counters::gemm_calls() {
+        out.push_str(&format!(
+            "bmxnet_kernel_calls_total{{method=\"{method}\",kernel=\"{kernel}\"}} {calls}\n"
+        ));
+    }
+
+    push_family(
+        &mut out,
+        "bmxnet_trace_total",
+        "counter",
+        "Request traces published to the debug journal.",
+    );
+    out.push_str(&format!("bmxnet_trace_total {}\n", obs.journal.total()));
+    push_family(
+        &mut out,
+        "bmxnet_trace_dropped_total",
+        "counter",
+        "Traces dropped on journal slot contention.",
+    );
+    out.push_str(&format!("bmxnet_trace_dropped_total {}\n", obs.journal.dropped()));
     out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::{Stage, Trace};
     use crate::serve::registry::RegistryConfig;
 
     #[test]
@@ -137,8 +228,34 @@ mod tests {
     #[test]
     fn empty_registry_renders_zero_gauge() {
         let reg = ModelRegistry::new(RegistryConfig::new(std::env::temp_dir().join("nope")));
-        let text = render(&reg);
+        let obs = Obs::with_slots(8);
+        let text = render(&reg, &obs);
         assert!(text.contains("bmxnet_models_loaded 0\n"), "{text}");
         assert!(text.contains("# TYPE bmxnet_requests_total counter"), "{text}");
+        // process-wide families render even with no models
+        assert!(text.contains("# TYPE bmxnet_stage_latency_us histogram"), "{text}");
+        assert!(text.contains("# TYPE bmxnet_kernel_calls_total counter"), "{text}");
+        assert!(text.contains("bmxnet_trace_total 0\n"), "{text}");
+    }
+
+    #[test]
+    fn stage_histogram_counts_completed_traces() {
+        let reg = ModelRegistry::new(RegistryConfig::new(std::env::temp_dir().join("nope")));
+        let obs = Obs::with_slots(8);
+        let mut t = Trace::begin();
+        for s in Stage::all() {
+            t.mark(s);
+        }
+        obs.complete(&t.finish("m", 200, 0, 1));
+        let text = render(&reg, &obs);
+        assert!(text.contains("bmxnet_trace_total 1\n"), "{text}");
+        assert!(
+            text.contains("bmxnet_stage_latency_us_count{stage=\"parse\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("bmxnet_stage_latency_us_bucket{stage=\"forward\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
     }
 }

@@ -110,6 +110,10 @@ fn fingerprint_of(path: &Path) -> Option<Fingerprint> {
 pub struct LoadedModel {
     pub info: ModelInfo,
     pub pool: ModelPool,
+    /// The engine the pool shards share — exposed so diagnostics
+    /// (`GET /v1/models/{name}/profile`, `dispatch_summary`) can run
+    /// against the exact loaded weights without a second load.
+    pub engine: Arc<Engine>,
     fingerprint: Fingerprint,
 }
 
@@ -121,6 +125,9 @@ pub struct ModelStatus {
     pub source: &'static str,
     pub loaded: bool,
     pub resident_bytes: usize,
+    /// [`Engine::dispatch_summary`] for resident models; `None` until
+    /// the model is loaded.
+    pub dispatch: Option<String>,
 }
 
 struct Entry {
@@ -252,10 +259,11 @@ impl ModelRegistry {
         names
             .into_iter()
             .map(|(name, source)| {
-                let resident = g.loaded.get(&name).map(|e| e.model.info.resident_bytes);
+                let entry = g.loaded.get(&name);
                 ModelStatus {
-                    loaded: resident.is_some(),
-                    resident_bytes: resident.unwrap_or(0),
+                    loaded: entry.is_some(),
+                    resident_bytes: entry.map_or(0, |e| e.model.info.resident_bytes),
+                    dispatch: entry.map(|e| e.model.engine.dispatch_summary()),
                     name,
                     source,
                 }
@@ -317,8 +325,8 @@ impl ModelRegistry {
             classes: engine.classes(),
             resident_bytes,
         };
-        let pool = ModelPool::start(engine, &self.cfg.pool);
-        Ok(LoadedModel { info, pool, fingerprint })
+        let pool = ModelPool::start(engine.clone(), &self.cfg.pool);
+        Ok(LoadedModel { info, pool, engine, fingerprint })
     }
 }
 
@@ -472,7 +480,10 @@ mod tests {
         let after = reg.list();
         let b = after.iter().find(|m| m.name == "b").unwrap();
         assert!(b.loaded && b.resident_bytes > 0);
-        assert!(!after.iter().find(|m| m.name == "a").unwrap().loaded);
+        let summary = b.dispatch.as_deref().expect("loaded model must report dispatch");
+        assert!(summary.contains("method"), "dispatch summary malformed: {summary}");
+        let a = after.iter().find(|m| m.name == "a").unwrap();
+        assert!(!a.loaded && a.dispatch.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,216 @@
+//! End-to-end observability over real loopback TCP: classify requests
+//! must leave complete stage traces in `/v1/debug/trace`, per-stage
+//! histograms and kernel-call counters in `/metrics`, dispatch info in
+//! `/v1/models`, and a per-layer profile at `/v1/models/{name}/profile`.
+//!
+//! Needs no artifacts: the model is a synthetic packed LeNet written to a
+//! temp models dir (same idiom as `tests/serve_gateway.rs`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::coordinator::BatchPolicy;
+use repro::data::Kind;
+use repro::model::bmx::synth_lenet;
+use repro::model::json;
+use repro::obs::Stage;
+use repro::serve::{Gateway, ModelRegistry, PoolConfig, RegistryConfig};
+
+fn temp_models_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("obs_gateway_{}_{case}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Tiny HTTP/1.1 client: one request, `connection: close`, parsed reply.
+fn http_request(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect to gateway");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nhost: test\r\nconnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "content-type: application/json\r\ncontent-length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"))
+        .parse()
+        .unwrap();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn classify_body(img: &[f32]) -> String {
+    let nums: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"image\": [{}]}}", nums.join(","))
+}
+
+#[test]
+fn traces_metrics_dispatch_and_profile_end_to_end() {
+    let dir = temp_models_dir("e2e");
+    synth_lenet(11, 1).unwrap().save(dir.join("lenet_bin.bmx")).unwrap();
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+            queue_cap: 64,
+            ..Default::default()
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start(registry, "127.0.0.1:0").unwrap();
+    let addr = gateway.addr().to_string();
+    let ds = Kind::Digits.generate(4, 5);
+
+    for i in 0..4 {
+        let (status, resp) = http_request(
+            &addr,
+            "POST",
+            "/v1/models/lenet_bin:classify",
+            Some(&classify_body(ds.image(i))),
+        );
+        assert_eq!(status, 200, "classify {i} failed: {resp}");
+    }
+    // an invalid request must also leave a (400) trace
+    let (status, _) =
+        http_request(&addr, "POST", "/v1/models/lenet_bin:classify", Some("not json"));
+    assert_eq!(status, 400);
+
+    // --- /v1/debug/trace: 5 requests, newest-first, named monotone stages
+    let (status, text) = http_request(&addr, "GET", "/v1/debug/trace?n=8", None);
+    assert_eq!(status, 200, "{text}");
+    let v = json::parse(&text).unwrap();
+    assert!(v.get("total").and_then(|t| t.as_usize()).unwrap() >= 5, "{text}");
+    let traces = v.get("traces").and_then(|t| t.as_array()).unwrap();
+    assert!(traces.len() >= 5, "want >=5 traces, got {}: {text}", traces.len());
+    // newest first: the 400 request is trace[0]
+    assert_eq!(traces[0].get("status").and_then(|s| s.as_usize()), Some(400));
+    let ok_trace = traces
+        .iter()
+        .find(|t| t.get("status").and_then(|s| s.as_usize()) == Some(200))
+        .unwrap_or_else(|| panic!("no 200 trace in {text}"));
+    assert_eq!(ok_trace.get("model").and_then(|m| m.as_str()), Some("lenet_bin"));
+    assert!(ok_trace.get("batch_size").and_then(|b| b.as_usize()).unwrap() >= 1);
+    let stages = ok_trace
+        .get("stages_us")
+        .and_then(|s| s.as_object())
+        .unwrap_or_else(|| panic!("no stages_us object in {text}"));
+    assert!(
+        stages.len() >= 5,
+        "a served request must reach >=5 named stages, got {}: {text}",
+        stages.len()
+    );
+    // offsets are monotone in stage order
+    let mut prev = 0u64;
+    for s in Stage::all() {
+        if let Some(off) = stages.get(s.label()).and_then(|v| v.as_f64()) {
+            let off = off as u64;
+            assert!(off >= prev, "stage {} offset {off} < {prev}: {text}", s.label());
+            prev = off;
+        }
+    }
+    let total = ok_trace.get("total_us").and_then(|t| t.as_usize()).unwrap() as u64;
+    assert!(total >= prev, "total_us {total} below last stage offset {prev}");
+
+    // --- /metrics: new families present and consistent
+    let mut metrics = String::new();
+    for _ in 0..50 {
+        let (status, text) = http_request(&addr, "GET", "/metrics", None);
+        assert_eq!(status, 200);
+        metrics = text;
+        if metrics.contains("bmxnet_requests_total{model=\"lenet_bin\"} 4") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for family in [
+        "# TYPE bmxnet_stage_latency_us histogram",
+        "bmxnet_stage_latency_us_bucket{stage=\"parse\",le=\"+Inf\"}",
+        "bmxnet_stage_latency_us_bucket{stage=\"forward\",le=\"+Inf\"}",
+        "bmxnet_stage_latency_us_sum{stage=\"respond\"}",
+        "# TYPE bmxnet_kernel_calls_total counter",
+        "bmxnet_queue_depth{model=\"lenet_bin\",shard=\"0\"}",
+        "bmxnet_latency_us_count{model=\"lenet_bin\"}",
+        "bmxnet_latency_us_sum{model=\"lenet_bin\"}",
+        "bmxnet_trace_total",
+    ] {
+        assert!(metrics.contains(family), "missing {family} in:\n{metrics}");
+    }
+    // the binary layers ran, so a kernel counter line must be nonzero
+    let kernel_line = metrics
+        .lines()
+        .find(|l| l.starts_with("bmxnet_kernel_calls_total{"))
+        .unwrap_or_else(|| panic!("no kernel call samples in:\n{metrics}"));
+    let calls: u64 = kernel_line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(calls > 0, "kernel counter is zero: {kernel_line}");
+    assert!(kernel_line.contains("method=\"") && kernel_line.contains("kernel=\""));
+
+    // --- /v1/models: per-model dispatch + process force_scalar state
+    let (status, list) = http_request(&addr, "GET", "/v1/models", None);
+    assert_eq!(status, 200);
+    let v = json::parse(&list).unwrap();
+    assert!(v.get("gemm_dispatch").and_then(|d| d.as_str()).unwrap().contains("method"));
+    assert!(
+        matches!(v.get("force_scalar"), Some(json::Value::Bool(_))),
+        "force_scalar missing: {list}"
+    );
+    let models = v.get("models").and_then(|m| m.as_array()).unwrap();
+    let entry = models
+        .iter()
+        .find(|m| m.get("name").and_then(|n| n.as_str()) == Some("lenet_bin"))
+        .unwrap();
+    let dispatch = entry.get("dispatch").and_then(|d| d.as_str()).unwrap();
+    assert!(dispatch.contains("method"), "dispatch line malformed: {dispatch}");
+
+    // --- /v1/models/{name}/profile: per-layer timings with labels
+    let (status, prof) =
+        http_request(&addr, "GET", "/v1/models/lenet_bin/profile?batch=2&reps=2", None);
+    assert_eq!(status, 200, "{prof}");
+    let v = json::parse(&prof).unwrap();
+    assert_eq!(v.get("model").and_then(|m| m.as_str()), Some("lenet_bin"));
+    assert_eq!(v.get("batch").and_then(|b| b.as_usize()), Some(2));
+    let layers = v.get("layers").and_then(|l| l.as_array()).unwrap();
+    assert!(layers.len() >= 10, "lenet profile should have >=10 layers: {prof}");
+    let conv2 = layers
+        .iter()
+        .find(|l| l.get("name").and_then(|n| n.as_str()) == Some("conv2"))
+        .unwrap_or_else(|| panic!("no conv2 layer in {prof}"));
+    assert!(conv2.get("method").and_then(|m| m.as_str()).is_some());
+    assert!(conv2.get("kernel").and_then(|k| k.as_str()).is_some());
+    // unknown model 404s
+    let (status, _) = http_request(&addr, "GET", "/v1/models/nope/profile", None);
+    assert_eq!(status, 404);
+
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,126 @@
+//! Observability overhead budget: the instrumented hot path must not
+//! allocate (DESIGN.md §Observability).
+//!
+//! A counting global allocator wraps `System` and tallies every
+//! `alloc`/`alloc_zeroed`/`realloc` in the process; each assertion warms
+//! its path first (lazy statics, CPU-feature detection), then measures
+//! the allocation-count delta across many iterations and requires it to
+//! be zero at least once out of several attempts (other test threads in
+//! the same binary may allocate concurrently, so a single noisy run must
+//! not flake the suite — this file has exactly one #[test] to keep the
+//! binary single-threaded anyway).
+//!
+//! The `unsafe` here is confined to forwarding the `GlobalAlloc` trait to
+//! `System`; library code stays safe (`gemm/simd.rs` is the one unsafe
+//! library module).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use repro::obs::{journal::Journal, layer, BatchTiming, Obs, Stage, StageStats, Trace};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` repeatedly; pass if any attempt saw zero allocations.
+fn assert_alloc_free(what: &str, mut f: impl FnMut()) {
+    let mut best = u64::MAX;
+    for _ in 0..5 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..100 {
+            f();
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        best = best.min(delta);
+        if best == 0 {
+            return;
+        }
+    }
+    panic!("{what}: allocated {best} times in 100 iterations (want 0)");
+}
+
+#[test]
+fn disabled_observability_does_not_allocate() {
+    // Warm every lazy path outside the measured windows: journal + stats
+    // construction, CPU feature detection behind kernel dispatch, the
+    // env read in from_env, and one full trace publish.
+    let obs = Obs::with_slots(64);
+    let journal = Journal::new(64);
+    let stats = StageStats::new();
+    let _ = repro::gemm::simd::best_kernel();
+    let timing = BatchTiming { queue_us: 3, window_us: 2, forward_us: 40 };
+    let mut warm = Trace::begin();
+    warm.mark(Stage::Parse);
+    warm.absorb_batch_timing(&timing);
+    let rec = warm.finish("warmup", 200, 0, 1);
+    obs.complete(&rec);
+    journal.publish(&rec);
+    stats.observe_record(&rec);
+
+    // 1. The layer() hook with no profiler: one branch, no name string.
+    assert_alloc_free("layer(None)", || {
+        let v = layer(
+            None,
+            || unreachable!("name closure must not run when disabled"),
+            "tanh",
+            None,
+            4096,
+            || 7u64,
+        );
+        assert_eq!(v, 7);
+    });
+
+    // 2. A full trace lifecycle: begin, marks, batch fold, finish.
+    assert_alloc_free("trace lifecycle", || {
+        let mut t = Trace::begin();
+        t.mark(Stage::Parse);
+        t.mark(Stage::Admission);
+        t.absorb_batch_timing(&timing);
+        t.mark(Stage::Respond);
+        let r = t.finish("lenet_bin", 200, 1, 8);
+        assert_eq!(r.status, 200);
+    });
+
+    // 3. Stage histogram observation.
+    assert_alloc_free("StageStats::observe_record", || {
+        stats.observe_record(&rec);
+    });
+
+    // 4. Journal publish (seqlock slot write).
+    assert_alloc_free("Journal::publish", || {
+        journal.publish(&rec);
+    });
+
+    // 5. The whole per-request completion path (no slow log configured).
+    assert!(obs.slow_req_us.is_none() || std::env::var_os("BMXNET_SLOW_REQ_US").is_some());
+    if obs.slow_req_us.is_none() {
+        assert_alloc_free("Obs::complete", || {
+            obs.complete(&rec);
+        });
+    }
+}

@@ -146,6 +146,7 @@ fn two_models_64_inflight_routing_and_metrics() {
             workers: 2,
             policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(2) },
             queue_cap: 128,
+            ..Default::default()
         },
         ..RegistryConfig::new(dir.clone())
     }));
@@ -235,6 +236,7 @@ fn bounded_queue_rejects_with_429_under_burst() {
             workers: 1,
             policy: BatchPolicy { max_batch: 1, window: Duration::ZERO },
             queue_cap: 1,
+            ..Default::default()
         },
         ..RegistryConfig::new(dir.clone())
     }));

@@ -1,0 +1,41 @@
+#!/usr/bin/env sh
+# Profiler smoke test: run `bmxnet profile` against a synthetic packed
+# LeNet, check the human table and the JSON report (per-layer rows with
+# GEMM method/kernel labels).  Used by `make profile-smoke` and CI.
+set -eu
+
+BIN=${BIN:-target/release/bmxnet}
+
+if [ ! -x "$BIN" ]; then
+    echo "profile-smoke: $BIN not built (run \`make build\` first)" >&2
+    exit 1
+fi
+
+DIR=$(mktemp -d /tmp/bmxnet_profile_smoke.XXXXXX)
+cleanup() { rm -rf "$DIR" || true; }
+trap cleanup EXIT INT TERM
+
+"$BIN" synth-models --out "$DIR"
+
+TABLE=$("$BIN" profile --bmx "$DIR/lenet_bin.bmx" --batch 4 --reps 2)
+echo "$TABLE"
+for NEEDLE in conv2 fc1 xnor_fused dispatch; do
+    echo "$TABLE" | grep -q "$NEEDLE" \
+        || { echo "profile-smoke: table missing $NEEDLE" >&2; exit 1; }
+done
+
+JSON_OUT=$DIR/profile.json
+"$BIN" profile --model lenet_bin --models-dir "$DIR" --batch 4 --reps 2 \
+    --json "$JSON_OUT" >/dev/null
+for NEEDLE in '"schema": 1' '"bench": "profile"' '"model": "lenet_bin"' \
+    '"name": "conv2"' '"method": "xnor_fused"' '"kernel"'; do
+    grep -qF "$NEEDLE" "$JSON_OUT" \
+        || { echo "profile-smoke: JSON missing $NEEDLE" >&2; exit 1; }
+done
+
+# forced-scalar runs must label the scalar kernel
+BMXNET_FORCE_SCALAR=1 "$BIN" profile --bmx "$DIR/lenet_bin.bmx" \
+    --batch 2 --reps 1 --json | grep -qF '"kernel": "scalar"' \
+    || { echo "profile-smoke: BMXNET_FORCE_SCALAR=1 did not pin scalar" >&2; exit 1; }
+
+echo "profile-smoke: OK"

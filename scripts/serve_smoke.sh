@@ -71,7 +71,34 @@ done
 
 # counters are recorded just after the reply is written; give them a beat
 sleep 0.5
-curl -fsS "http://$ADDR/metrics" | grep -q 'bmxnet_requests_total{model="lenet_bin"} 1' \
+METRICS=$(curl -fsS "http://$ADDR/metrics")
+echo "$METRICS" | grep -q 'bmxnet_requests_total{model="lenet_bin"} 1' \
     || { echo "serve-smoke: /metrics missing lenet_bin request count" >&2; exit 1; }
+
+# observability families (PR 7): per-stage histograms, kernel counters,
+# per-shard queue depth, monotone latency count/sum
+for FAMILY in \
+    'bmxnet_stage_latency_us_bucket{stage="parse"' \
+    'bmxnet_stage_latency_us_bucket{stage="forward"' \
+    'bmxnet_kernel_calls_total{method=' \
+    'bmxnet_queue_depth{model="lenet_bin",shard="0"}' \
+    'bmxnet_latency_us_count{model="lenet_bin"}' \
+    'bmxnet_latency_us_sum{model="lenet_bin"}' \
+    'bmxnet_trace_total'; do
+    echo "$METRICS" | grep -qF "$FAMILY" \
+        || { echo "serve-smoke: /metrics missing $FAMILY" >&2; exit 1; }
+done
+
+# the debug trace journal has the classify requests, with named stages
+TRACES=$(curl -fsS "http://$ADDR/v1/debug/trace?n=4")
+echo "serve-smoke: traces -> $TRACES"
+for KEY in '"traces"' '"stages_us"' '"forward"' '"respond"'; do
+    echo "$TRACES" | grep -qF "$KEY" \
+        || { echo "serve-smoke: /v1/debug/trace missing $KEY" >&2; exit 1; }
+done
+
+# per-model dispatch surfaces in the listing
+curl -fsS "http://$ADDR/v1/models" | grep -q '"force_scalar"' \
+    || { echo "serve-smoke: /v1/models missing force_scalar" >&2; exit 1; }
 
 echo "serve-smoke: OK"
