@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: build test doc bench-compile serve-smoke profile-smoke fmt-check verify artifacts clean
+.PHONY: build test doc bench-compile serve-smoke profile-smoke perf-smoke fmt-check verify artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -29,10 +29,15 @@ serve-smoke: build
 profile-smoke: build
 	sh scripts/profile_smoke.sh
 
+# Quick bench-suite under forced-scalar dispatch: every family emits a
+# schema-2 record, self-compare passes, an injected regression fails.
+perf-smoke: build
+	sh scripts/perf_smoke.sh
+
 fmt-check:
 	$(CARGO) fmt --check
 
-verify: build test doc bench-compile serve-smoke profile-smoke
+verify: build test doc bench-compile serve-smoke profile-smoke perf-smoke
 
 # Emit the AOT HLO-text artifacts + manifest (optional; needs JAX).
 # The Rust side skips artifact-driven tests when this has not run.

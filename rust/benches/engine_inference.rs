@@ -1,15 +1,15 @@
 //! Binary-engine inference latency/throughput + GEMM-method ablation.
 //!
 //!     cargo bench --bench engine_inference
+//!     BENCH_JSON=out.json cargo bench --bench engine_inference
 //!
-//! Measures the deployed path (the role of the paper's mobile apps):
-//! converted `.bmx` LeNet and mini-ResNet classified by the Rust xnor
-//! engine at several batch sizes, plus an ablation over the xnor kernel
-//! variant used inside QConv/QFC (DESIGN.md calls this design choice out).
+//! Thin driver over the `engine` family of `bench::suite` (synthetic
+//! packed LeNets — runs without artifacts; knobs: BENCH_QUICK,
+//! BENCH_REPS).  When `make artifacts` has been run, the converted real
+//! models are additionally timed as a cross-check.
 
-use repro::bench::harness::{time_best_of, BenchTable};
+use repro::bench::{run_family, time_stats, BenchTable, SuiteOpts};
 use repro::data::Kind;
-use repro::gemm::{xnor_gemm_prepacked, Method, PackedMatrix, Side};
 use repro::model::bmx::convert;
 use repro::model::ckpt::Checkpoint;
 use repro::model::inventory::{self, Stem};
@@ -18,17 +18,22 @@ use repro::runtime::Manifest;
 use repro::tensor::Tensor;
 
 fn main() {
+    let opts = SuiteOpts::from_env();
+    let record = run_family("engine", &opts).expect("engine family");
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded engine family to {path}");
+    }
+
+    // Artifact cross-check: the converted real models (trained-shape
+    // checkpoints), same protocol, not part of the comparable record.
     let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) else {
-        println!("artifacts not built; run `make artifacts` first");
+        println!("(artifacts not built; converted-model cross-check skipped)");
         return;
     };
-    let reps: usize = std::env::var("BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(3);
-
+    let reps = if opts.reps > 0 { opts.reps } else { 3 };
     let mut table = BenchTable::new(
-        "Engine inference (rust xnor path)",
+        "Cross-check: converted artifact models (rust xnor path)",
         &["model", "batch", "ms/batch", "img/s"],
     );
     for (model, kind) in [
@@ -52,39 +57,14 @@ fn main() {
             let ds = kind.generate(batch, 3);
             let [c, h, w] = engine.input_shape();
             let x = Tensor::new(vec![batch, c, h, w], ds.images.clone());
-            let d = time_best_of(reps, || engine.forward(&x).unwrap());
+            let s = time_stats(reps, || engine.forward(&x).unwrap());
             table.row(vec![
                 model.into(),
                 batch.to_string(),
-                format!("{:.2}", d.as_secs_f64() * 1e3),
-                format!("{:.0}", batch as f64 / d.as_secs_f64()),
+                format!("{:.2}", s.median),
+                format!("{:.0}", batch as f64 / (s.median / 1e3).max(1e-9)),
             ]);
         }
     }
     table.print();
-
-    // Ablation: xnor kernel variant on the LeNet QConv2 workload
-    // (rows = batch*8*8 im2col rows, K = 32*5*5 = 800, N = 64 filters).
-    let mut ab = BenchTable::new(
-        "Ablation: xnor kernel variant on the QConv2 GEMM (b=32)",
-        &["method", "us/call", "speedup vs xnor_32"],
-    );
-    let (m, n, k) = (32 * 64, 64, 800);
-    let mut rng = repro::data::Rng::new(5);
-    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
-    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-    let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
-    let pb = PackedMatrix::pack_cols(&b, k, n);
-    let mut base = None;
-    for method in Method::available().into_iter().filter(|m| m.is_binary()) {
-        let d = time_best_of(reps, || xnor_gemm_prepacked(method, &pa, &pb));
-        let us = d.as_secs_f64() * 1e6;
-        let b0 = *base.get_or_insert(us);
-        ab.row(vec![
-            method.label().into(),
-            format!("{us:.0}"),
-            format!("{:.2}x", b0 / us),
-        ]);
-    }
-    ab.print();
 }

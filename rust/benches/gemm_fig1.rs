@@ -3,55 +3,38 @@
 //!
 //!     cargo bench --bench gemm_fig1            # reduced (batch 20)
 //!     BENCH_FULL=1 cargo bench --bench gemm_fig1   # paper-exact batch 200
+//!     BENCH_JSON=out.json cargo bench --bench gemm_fig1  # perf record
+//!
+//! Thin driver over `bench::suite::run_gemm_figures` (also behind
+//! `bmxnet bench-suite`); knobs: BENCH_FULL, BENCH_QUICK, BENCH_REPS,
+//! BENCH_JSON.
 //!
 //! Paper reference (4-core i5, batch 200): naive ≈ 19,000 ms at C=512;
 //! xnor_64_omp ≈ 125× over naive and ≈ 50× over Cblas; binarization
 //! included still ≈ 13× over Cblas.
 
-use repro::bench::{fig1_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
-use repro::gemm::simd;
+use repro::bench::{run_gemm_figures, SuiteOpts};
 
 fn main() {
-    let full = std::env::var("BENCH_FULL").is_ok();
-    let reps: usize = std::env::var("BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2);
-    let ws = fig1_workloads(!full);
-    let rows = run_gemm_figure(
-        "Figure 1: GEMM processing time vs input channels (M=64, 5x5)",
-        "C",
-        &ws,
-        reps,
-        true,
-    );
+    let opts = SuiteOpts::from_env();
+    let (figs, record) = run_gemm_figures(&[1], &opts).expect("figure 1");
+    let rows = &figs[0].rows;
     // paper-shape summary: who wins and by what factor at C=256
-    let c256 = rows.iter().find(|r| r.x == 256).expect("C=256 row");
-    let labels: Vec<&str> = c256.timings.iter().map(|(l, _)| *l).collect();
-    let blocked = labels.iter().position(|&l| l == "cblas").unwrap();
-    let omp = labels.iter().position(|&l| l == "xnor_64_omp").unwrap();
-    println!(
-        "\nC=256: xnor_64_omp {:.1}x vs naive, {:.1}x vs cblas (paper: ~125x, ~50x on 4 cores)",
-        c256.speedup(omp),
-        c256.speedup(omp) / c256.speedup(blocked),
-    );
-    if !full {
+    if let Some(c256) = rows.iter().find(|r| r.x == 256) {
+        let labels: Vec<&str> = c256.timings.iter().map(|(l, _)| *l).collect();
+        let blocked = labels.iter().position(|&l| l == "cblas").unwrap();
+        let omp = labels.iter().position(|&l| l == "xnor_64_omp").unwrap();
+        println!(
+            "\nC=256: xnor_64_omp {:.1}x vs naive, {:.1}x vs cblas (paper: ~125x, ~50x on 4 cores)",
+            c256.speedup(omp),
+            c256.speedup(omp) / c256.speedup(blocked),
+        );
+    }
+    if !opts.full {
         println!("(reduced batch 20; set BENCH_FULL=1 for paper-exact shapes)");
     }
     if let Ok(path) = std::env::var("BENCH_JSON") {
-        let provenance = format!(
-            "cargo bench gemm_fig1 · {} · kernel {} · {} · best-of-{reps}",
-            std::env::consts::ARCH,
-            simd::best_kernel().label(),
-            if full { "paper-exact" } else { "reduced" },
-        );
-        let rec = GemmFigureRecord {
-            figure: "fig1".into(),
-            xlabel: "C".into(),
-            absolute_times: true,
-            rows,
-        };
-        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        record.write(&path).expect("write BENCH_JSON");
         println!("recorded fig1 to {path}");
     }
 }

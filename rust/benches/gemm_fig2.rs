@@ -3,48 +3,28 @@
 //!
 //!     cargo bench --bench gemm_fig2
 //!     BENCH_FULL=1 cargo bench --bench gemm_fig2
+//!
+//! Thin driver over `bench::suite::run_gemm_figures`; knobs: BENCH_FULL,
+//! BENCH_QUICK, BENCH_REPS, BENCH_JSON.
 
-use repro::bench::{fig2_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
-use repro::gemm::simd;
+use repro::bench::{run_gemm_figures, SuiteOpts};
 
 fn main() {
-    let full = std::env::var("BENCH_FULL").is_ok();
-    let reps: usize = std::env::var("BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2);
-    let ws = fig2_workloads(!full);
-    let rows = run_gemm_figure(
-        "Figure 2: speedup vs naive, varying filter number (C=256, 5x5)",
-        "filters",
-        &ws,
-        reps,
-        false,
-    );
+    let opts = SuiteOpts::from_env();
+    let (figs, record) = run_gemm_figures(&[2], &opts).expect("figure 2");
+    let rows = &figs[0].rows;
     // paper shape: speedup grows with filter count (better A-row reuse)
     let omp = rows[0].timings.iter().position(|(l, _)| *l == "xnor_64_omp").unwrap();
-    let first = rows.first().unwrap().speedup(omp);
-    let last = rows.last().unwrap().speedup(omp);
     println!(
-        "\nxnor_64_omp speedup: {first:.1}x @ {} filters -> {last:.1}x @ {} filters \
+        "\nxnor_64_omp speedup: {:.1}x @ {} filters -> {:.1}x @ {} filters \
          (paper: rises with filter number)",
+        rows.first().unwrap().speedup(omp),
         rows.first().unwrap().x,
+        rows.last().unwrap().speedup(omp),
         rows.last().unwrap().x
     );
     if let Ok(path) = std::env::var("BENCH_JSON") {
-        let provenance = format!(
-            "cargo bench gemm_fig2 · {} · kernel {} · {} · best-of-{reps}",
-            std::env::consts::ARCH,
-            simd::best_kernel().label(),
-            if full { "paper-exact" } else { "reduced" },
-        );
-        let rec = GemmFigureRecord {
-            figure: "fig2".into(),
-            xlabel: "filters".into(),
-            absolute_times: false,
-            rows,
-        };
-        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        record.write(&path).expect("write BENCH_JSON");
         println!("recorded fig2 to {path}");
     }
 }

@@ -3,45 +3,29 @@
 //!
 //!     cargo bench --bench gemm_fig3
 //!     BENCH_FULL=1 cargo bench --bench gemm_fig3
+//!
+//! Thin driver over `bench::suite::run_gemm_figures`; knobs: BENCH_FULL,
+//! BENCH_QUICK, BENCH_REPS, BENCH_JSON.
 
-use repro::bench::{fig3_workloads, run_gemm_figure, write_gemm_json, GemmFigureRecord};
-use repro::gemm::simd;
+use repro::bench::{run_gemm_figures, SuiteOpts};
 
 fn main() {
-    let full = std::env::var("BENCH_FULL").is_ok();
-    let reps: usize = std::env::var("BENCH_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2);
-    let ws = fig3_workloads(!full);
-    let rows = run_gemm_figure(
-        "Figure 3: speedup vs naive, varying kernel size (C=256, filters=64)",
-        "kernel",
-        &ws,
-        reps,
-        false,
-    );
+    let opts = SuiteOpts::from_env();
+    let (figs, record) = run_gemm_figures(&[3], &opts).expect("figure 3");
+    let rows = &figs[0].rows;
     let omp = rows[0].timings.iter().position(|(l, _)| *l == "xnor_64_omp").unwrap();
     println!(
-        "\nxnor_64_omp speedup: {:.1}x @ 1x1 -> {:.1}x @ 8x8 \
+        "\nxnor_64_omp speedup: {:.1}x @ {}x{} -> {:.1}x @ {}x{} \
          (paper: grows with K = k^2 * C)",
         rows.first().unwrap().speedup(omp),
-        rows.last().unwrap().speedup(omp)
+        rows.first().unwrap().x,
+        rows.first().unwrap().x,
+        rows.last().unwrap().speedup(omp),
+        rows.last().unwrap().x,
+        rows.last().unwrap().x
     );
     if let Ok(path) = std::env::var("BENCH_JSON") {
-        let provenance = format!(
-            "cargo bench gemm_fig3 · {} · kernel {} · {} · best-of-{reps}",
-            std::env::consts::ARCH,
-            simd::best_kernel().label(),
-            if full { "paper-exact" } else { "reduced" },
-        );
-        let rec = GemmFigureRecord {
-            figure: "fig3".into(),
-            xlabel: "kernel".into(),
-            absolute_times: false,
-            rows,
-        };
-        write_gemm_json(&path, &provenance, &[rec]).expect("write BENCH_JSON");
+        record.write(&path).expect("write BENCH_JSON");
         println!("recorded fig3 to {path}");
     }
 }

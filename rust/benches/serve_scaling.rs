@@ -1,45 +1,25 @@
 //! Serving-gateway scaling: offered load (closed-loop producers) swept
-//! against pool worker count over the converted binary LeNet.
+//! against pool worker count over the packed binary LeNet.
 //!
 //!     cargo bench --bench serve_scaling
+//!     BENCH_JSON=out.json cargo bench --bench serve_scaling
 //!
-//! Falls back to a synthetic spin-loop backend when `make artifacts` has
-//! not run, so the sweep is runnable anywhere.  Record results in
-//! EXPERIMENTS.md §Serve scaling (`BENCH_serve_scaling.json`).
+//! Thin driver over the `serve` family of `bench::suite` (synthetic
+//! packed LeNet — the real xnor engine, no artifacts needed; knobs:
+//! BENCH_QUICK, BENCH_REPS, BENCH_REQUESTS).  Record results in
+//! EXPERIMENTS.md §Serve scaling (`BENCH_serve.json`).
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use repro::bench::{run_serve_scaling, serve_scaling_workloads, SyntheticBackend};
-use repro::coordinator::{Backend, BatchPolicy};
-use repro::model::bmx::convert;
-use repro::model::ckpt::Checkpoint;
-use repro::model::inventory;
-use repro::nn::Engine;
-use repro::runtime::Manifest;
+use repro::bench::{run_family, SuiteOpts};
 
 fn main() {
-    let requests: usize = std::env::var("BENCH_REQUESTS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(256);
-    let backend: Arc<dyn Backend> = match Manifest::load(repro::ARTIFACTS_DIR) {
-        Ok(man) => {
-            let entry = man.model("lenet_bin").unwrap();
-            let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
-            let names = inventory::lenet(true).binary_names();
-            let bmx = convert(&ck, &names, &entry.bmx_meta()).unwrap();
-            Arc::new(Engine::from_bmx(&bmx).unwrap())
-        }
-        Err(_) => {
-            println!("(artifacts not built: sweeping over the synthetic spin backend)");
-            Arc::new(SyntheticBackend { cost_per_image: Duration::from_micros(200) })
-        }
-    };
-    let policy = BatchPolicy { max_batch: 32, window: Duration::from_millis(2) };
-    run_serve_scaling(backend, &serve_scaling_workloads(requests), policy, 4096);
+    let opts = SuiteOpts::from_env();
+    let record = run_family("serve", &opts).expect("serve family");
     println!(
         "(closed-loop: each producer waits for its reply before sending the next; \
          req/s at fixed producers is the scaling signal as workers grow)"
     );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded serve family to {path}");
+    }
 }

@@ -1,85 +1,21 @@
 //! Serving coordinator throughput/latency + batching-policy ablation.
 //!
 //!     cargo bench --bench serving_throughput
+//!     BENCH_JSON=out.json cargo bench --bench serving_throughput
 //!
-//! Sweeps the dynamic batcher's (max_batch, window) knobs under a closed-
-//! loop multi-producer load over the converted binary LeNet — the knobs a
-//! serving system tunes (DESIGN.md §Perf: batcher overhead target).
+//! Thin driver over the `serve_policy` family of `bench::suite`: sweeps
+//! the dynamic batcher's (max_batch, window) knobs under a closed-loop
+//! multi-producer load over the packed binary LeNet (DESIGN.md §Perf:
+//! batcher overhead target).  Knobs: BENCH_QUICK, BENCH_REPS,
+//! BENCH_REQUESTS.
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-use repro::bench::harness::BenchTable;
-use repro::coordinator::{BatchPolicy, Server, ServerConfig};
-use repro::data::Kind;
-use repro::model::bmx::convert;
-use repro::model::ckpt::Checkpoint;
-use repro::model::inventory;
-use repro::nn::Engine;
-use repro::runtime::Manifest;
+use repro::bench::{run_family, SuiteOpts};
 
 fn main() {
-    let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) else {
-        println!("artifacts not built; run `make artifacts` first");
-        return;
-    };
-    let entry = man.model("lenet_bin").unwrap();
-    let ck = Checkpoint::load(man.path(&entry.init_ckpt)).unwrap();
-    let names = inventory::lenet(true).binary_names();
-    let engine =
-        Arc::new(Engine::from_bmx(&convert(&ck, &names, &entry.bmx_meta()).unwrap()).unwrap());
-
-    let requests: usize = std::env::var("BENCH_REQUESTS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(256);
-    let producers = 4;
-    let ds = Kind::Digits.generate(requests, 19);
-
-    let mut table = BenchTable::new(
-        "Serving throughput: batching policy sweep",
-        &["max_batch", "window", "req/s", "mean_batch", "p50", "p95", "p99"],
-    );
-    for (max_batch, window_ms) in
-        [(1usize, 0u64), (8, 1), (8, 4), (32, 1), (32, 4), (32, 16)]
-    {
-        let server = Server::start(
-            engine.clone(),
-            ServerConfig {
-                policy: BatchPolicy {
-                    max_batch,
-                    window: Duration::from_millis(window_ms),
-                },
-                queue_cap: 4096,
-            },
-        );
-        let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for p in 0..producers {
-                let client = server.client();
-                let ds = &ds;
-                s.spawn(move || {
-                    for i in (p..requests).step_by(producers) {
-                        let _ = client.classify(ds.image(i).to_vec()).unwrap();
-                    }
-                });
-            }
-        });
-        let wall = t0.elapsed();
-        let snap = server.shutdown();
-        table.row(vec![
-            max_batch.to_string(),
-            format!("{window_ms}ms"),
-            format!("{:.0}", requests as f64 / wall.as_secs_f64()),
-            format!("{:.1}", snap.mean_batch),
-            format!("{:.1}ms", snap.p50.as_secs_f64() * 1e3),
-            format!("{:.1}ms", snap.p95.as_secs_f64() * 1e3),
-            format!("{:.1}ms", snap.p99.as_secs_f64() * 1e3),
-        ]);
+    let opts = SuiteOpts::from_env();
+    let record = run_family("serve_policy", &opts).expect("serve_policy family");
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded serve_policy family to {path}");
     }
-    table.print();
-    println!(
-        "(closed-loop, {producers} producers, {requests} requests; \
-         batch=1/window=0 row is the no-batching baseline)"
-    );
 }

@@ -2,50 +2,28 @@
 //! binary vs full precision, with byte-exact converter measurements.
 //!
 //!     cargo bench --bench table1_sizes
+//!     BENCH_JSON=out.json cargo bench --bench table1_sizes
 //!
-//! Paper reference: LeNet 206 kB / 4.6 MB; ResNet-18 1.5 MB / 44.7 MB (29×).
-//! The accuracy columns are produced by the training examples
-//! (`cargo run --release --example table_accuracy`) — see EXPERIMENTS.md.
+//! Thin driver over the `tables` family of `bench::suite` (prints the
+//! Table 1 and Table 2 accounting; cells are exact byte counts with a
+//! zero noise floor, so `bench-compare` flags any converter/inventory
+//! change).  Paper reference: LeNet 206 kB / 4.6 MB; ResNet-18 1.5 MB /
+//! 44.7 MB (29×).  The accuracy columns are produced by the training
+//! examples (`cargo run --release --example table_accuracy`) — see
+//! EXPERIMENTS.md.
 
-use repro::bench::harness::BenchTable;
+use repro::bench::{run_family, BenchTable, SuiteOpts};
 use repro::model::bmx::convert;
 use repro::model::ckpt::Checkpoint;
-use repro::model::inventory::{self, Stem};
+use repro::model::inventory;
 use repro::runtime::Manifest;
 
-const MB: f64 = 1024.0 * 1024.0;
-const KB: f64 = 1024.0;
-
 fn main() {
-    let mut table = BenchTable::new(
-        "Table 1: model sizes (binary / full precision)",
-        &["dataset", "arch", "binary", "fp32", "ratio", "paper"],
-    );
-
-    // LeNet — exact inventory accounting.
-    let lenet_bin = inventory::lenet(true);
-    let lenet_fp = inventory::lenet(false);
-    table.row(vec![
-        "MNIST".into(),
-        "LeNet".into(),
-        format!("{:.0} kB", lenet_bin.bmx_bytes() as f64 / KB),
-        format!("{:.1} MB", lenet_fp.fp32_bytes() as f64 / MB),
-        format!("{:.1}x", lenet_fp.fp32_bytes() as f64 / lenet_bin.bmx_bytes() as f64),
-        "206kB / 4.6MB".into(),
-    ]);
-
-    // ResNet-18 (real width 64) — exact inventory accounting.
-    let rn_bin = inventory::resnet18(64, 10, Stem::Cifar, &[]);
-    let rn_fp = inventory::resnet18(64, 10, Stem::Cifar, &[1, 2, 3, 4]);
-    table.row(vec![
-        "CIFAR-10".into(),
-        "ResNet-18".into(),
-        format!("{:.1} MB", rn_bin.bmx_bytes() as f64 / MB),
-        format!("{:.1} MB", rn_fp.fp32_bytes() as f64 / MB),
-        format!("{:.1}x", rn_fp.fp32_bytes() as f64 / rn_bin.bmx_bytes() as f64),
-        "1.5MB / 44.7MB (29x)".into(),
-    ]);
-    table.print();
+    let record = run_family("tables", &SuiteOpts::from_env()).expect("tables family");
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded tables family to {path}");
+    }
 
     // Converter cross-check on the real artifacts (trained-shape ckpts).
     if let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) {

@@ -3,43 +3,26 @@
 //! paper's table, plus the converter cross-check on the mini artifacts.
 //!
 //!     cargo bench --bench table2_partial
+//!     BENCH_JSON=out.json cargo bench --bench table2_partial
 //!
-//! Paper reference sizes: none 3.6 MB · 1st 4.1 · 2nd 5.6 · 3rd 11.3 ·
-//! 4th 36 · 1st+2nd 6.2 · all 47 MB.  The accuracy trend columns come from
+//! Thin driver over the `tables` family of `bench::suite` (Tables 1 and 2
+//! are one family: byte-exact cells, zero noise floor).  Paper reference
+//! sizes: none 3.6 MB · 1st 4.1 · 2nd 5.6 · 3rd 11.3 · 4th 36 ·
+//! 1st+2nd 6.2 · all 47 MB.  The accuracy trend columns come from
 //! training the mini variants (`--example table_accuracy`).
 
-use repro::bench::harness::BenchTable;
+use repro::bench::{run_family, BenchTable, SuiteOpts};
 use repro::model::bmx::convert;
 use repro::model::ckpt::Checkpoint;
 use repro::model::inventory::{self, Stem};
 use repro::runtime::Manifest;
 
-const MB: f64 = 1024.0 * 1024.0;
-
-const ROWS: [(&str, &[usize], &str); 7] = [
-    ("none", &[], "3.6MB"),
-    ("1st", &[1], "4.1MB"),
-    ("2nd", &[2], "5.6MB"),
-    ("3rd", &[3], "11.3MB"),
-    ("4th", &[4], "36MB"),
-    ("1st,2nd", &[1, 2], "6.2MB"),
-    ("all", &[1, 2, 3, 4], "47MB"),
-];
-
 fn main() {
-    let mut table = BenchTable::new(
-        "Table 2: ResNet-18 ImageNet sizes by full-precision stage",
-        &["fp stage", "size (ours)", "size (paper)"],
-    );
-    for (label, fp_stages, paper) in ROWS {
-        let inv = inventory::resnet18(64, 1000, Stem::Imagenet, fp_stages);
-        table.row(vec![
-            label.into(),
-            format!("{:.1} MB", inv.bmx_bytes() as f64 / MB),
-            paper.into(),
-        ]);
+    let record = run_family("tables", &SuiteOpts::from_env()).expect("tables family");
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded tables family to {path}");
     }
-    table.print();
 
     // Converter cross-check on the trainable mini variants.
     if let Ok(man) = Manifest::load(repro::ARTIFACTS_DIR) {

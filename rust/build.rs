@@ -1,0 +1,45 @@
+//! Build-time provenance capture for perf records (bench/record.rs).
+//!
+//! Emits two env vars compiled into the binary via `option_env!`:
+//! `BMXNET_RUSTC_VERSION` (the exact compiler that produced this build)
+//! and `BMXNET_GIT_DESCRIBE` (commit id + dirty marker of the source
+//! tree).  Perf numbers are meaningless without the binary's identity —
+//! `Provenance::capture` stamps both into every `PerfRecord`.
+//!
+//! Both probes degrade to absence (not failure) when the tool is missing
+//! or the checkout has no `.git`: `option_env!` then yields `None` and
+//! the record says `unknown`.  A build script must never be the reason
+//! tier-1 fails.
+
+use std::process::Command;
+
+fn probe(cmd: &str, args: &[&str]) -> Option<String> {
+    let out = Command::new(cmd).args(args).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    let line = text.lines().next()?.trim().to_string();
+    if line.is_empty() {
+        None
+    } else {
+        Some(line)
+    }
+}
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    if let Some(v) = probe(&rustc, &["--version"]) {
+        println!("cargo:rustc-env=BMXNET_RUSTC_VERSION={v}");
+    }
+    // --always falls back to the bare commit id when no tag exists;
+    // --dirty marks uncommitted changes so a record can't masquerade as
+    // a clean build of some commit.
+    if let Some(v) = probe("git", &["describe", "--always", "--dirty", "--tags"]) {
+        println!("cargo:rustc-env=BMXNET_GIT_DESCRIBE={v}");
+    }
+    // Re-run when HEAD moves so the stamp tracks the checkout, without
+    // forcing a rebuild on every unrelated file change.
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -1,0 +1,391 @@
+//! Noise-aware comparison of two [`PerfRecord`]s — the `bmxnet
+//! bench-compare` CI gate.
+//!
+//! Records are aligned cell-by-cell on the exact cell id.  A delta only
+//! counts when it clears the **noise floor** `min_effect_mad ×
+//! max(base.mad, new.mad)` (MAD is the per-cell dispersion over reps the
+//! suite recorded); within the floor the cell is [`Verdict::WithinNoise`]
+//! regardless of the percentage.  Above the floor, the cell's unit
+//! decides direction (`ms`/`bytes` lower-is-better, `req_s` higher), and
+//! the gate fails — exit non-zero — when any regression reaches
+//! `fail_on_pct`.
+//!
+//! Cells present on one side only are reported ([`Verdict::MissingBase`]
+//! / [`Verdict::MissingNew`]) but never fail the gate: bench families
+//! legitimately grow and shrink cells as hardware kernel sets differ.
+//! Comparing records of *different families* or a cell whose unit changed
+//! is an error — that is a schema mismatch, not a perf delta.
+
+use anyhow::{bail, Result};
+
+use super::record::{Cell, PerfRecord, Unit};
+
+/// Gate thresholds (`--fail-on`, `--min-effect`).
+#[derive(Debug, Clone, Copy)]
+pub struct CompareOpts {
+    /// Fail when a regression's |delta| reaches this percentage.
+    pub fail_on_pct: f64,
+    /// Noise floor multiplier: deltas within `min_effect_mad × max(MADs)`
+    /// are suppressed.
+    pub min_effect_mad: f64,
+}
+
+impl Default for CompareOpts {
+    fn default() -> Self {
+        CompareOpts { fail_on_pct: 10.0, min_effect_mad: 3.0 }
+    }
+}
+
+/// What the gate concluded about one cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Got worse by more than the noise floor.
+    Regressed,
+    /// Got better by more than the noise floor.
+    Improved,
+    /// Delta within the noise floor (or both medians zero).
+    WithinNoise,
+    /// Cell only in the new record.
+    MissingBase,
+    /// Cell only in the base record.
+    MissingNew,
+}
+
+impl Verdict {
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Improved => "improved",
+            Verdict::WithinNoise => "~noise",
+            Verdict::MissingBase => "new cell",
+            Verdict::MissingNew => "removed",
+        }
+    }
+}
+
+/// One aligned cell with its delta and verdict.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    pub id: String,
+    pub unit: Unit,
+    /// Base / new medians (0.0 on the missing side).
+    pub base: f64,
+    pub new: f64,
+    /// Signed percentage, positive = regression in the unit's direction.
+    /// 0.0 for missing cells.
+    pub pct: f64,
+    /// The noise floor this delta was tested against (ms/bytes/req_s).
+    pub floor: f64,
+    pub verdict: Verdict,
+}
+
+/// The full comparison of one record pair.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub bench: String,
+    pub opts: CompareOpts,
+    /// Every aligned cell, base-record order first, then new-only cells.
+    pub deltas: Vec<CellDelta>,
+}
+
+/// Compare two records of the same family.
+pub fn compare(base: &PerfRecord, new: &PerfRecord, opts: CompareOpts) -> Result<CompareReport> {
+    if base.bench != new.bench {
+        bail!(
+            "cannot compare different bench families: base is {:?}, new is {:?}",
+            base.bench,
+            new.bench
+        );
+    }
+    let mut deltas = Vec::new();
+    for b in &base.cells {
+        match new.cell(&b.id) {
+            None => deltas.push(missing(b, Verdict::MissingNew)),
+            Some(n) => deltas.push(align(b, n, opts)?),
+        }
+    }
+    for n in &new.cells {
+        if base.cell(&n.id).is_none() {
+            deltas.push(missing(n, Verdict::MissingBase));
+        }
+    }
+    Ok(CompareReport { bench: base.bench.clone(), opts, deltas })
+}
+
+fn missing(c: &Cell, verdict: Verdict) -> CellDelta {
+    let (base, new) = match verdict {
+        Verdict::MissingNew => (c.stats.median, 0.0),
+        _ => (0.0, c.stats.median),
+    };
+    CellDelta { id: c.id.clone(), unit: c.unit, base, new, pct: 0.0, floor: 0.0, verdict }
+}
+
+fn align(b: &Cell, n: &Cell, opts: CompareOpts) -> Result<CellDelta> {
+    if b.unit != n.unit {
+        bail!(
+            "cell {:?} changed unit between records: {} vs {}",
+            b.id,
+            b.unit.label(),
+            n.unit.label()
+        );
+    }
+    let (base, new) = (b.stats.median, n.stats.median);
+    let floor = opts.min_effect_mad * b.stats.mad.max(n.stats.mad);
+    // Signed so that positive = worse: for lower-is-better units an
+    // increase regresses; for req/s a decrease does.
+    let raw = new - base;
+    let worse = if b.unit.lower_is_better() { raw } else { -raw };
+    let pct = if base.abs() > 0.0 { 100.0 * worse / base.abs() } else { 0.0 };
+    let verdict = if raw.abs() <= floor || base == new {
+        Verdict::WithinNoise
+    } else if worse > 0.0 {
+        Verdict::Regressed
+    } else {
+        Verdict::Improved
+    };
+    Ok(CellDelta { id: b.id.clone(), unit: b.unit, base, new, pct, floor, verdict })
+}
+
+impl CompareReport {
+    /// True when any regression reaches the failure threshold — the
+    /// non-zero-exit condition.
+    pub fn failed(&self) -> bool {
+        self.deltas
+            .iter()
+            .any(|d| d.verdict == Verdict::Regressed && d.pct >= self.opts.fail_on_pct)
+    }
+
+    fn counts(&self) -> (usize, usize, usize, usize) {
+        let (mut reg, mut imp, mut noise, mut miss) = (0, 0, 0, 0);
+        for d in &self.deltas {
+            match d.verdict {
+                Verdict::Regressed => reg += 1,
+                Verdict::Improved => imp += 1,
+                Verdict::WithinNoise => noise += 1,
+                _ => miss += 1,
+            }
+        }
+        (reg, imp, noise, miss)
+    }
+
+    /// Human table: cells that cleared the noise floor plus missing
+    /// cells, with a one-line summary of what was suppressed.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let (reg, imp, noise, miss) = self.counts();
+        out.push_str(&format!(
+            "bench-compare [{}]: {} cells — {} regressed, {} improved, {} within noise, {} missing\n",
+            self.bench,
+            self.deltas.len(),
+            reg,
+            imp,
+            noise,
+            miss
+        ));
+        out.push_str(&format!(
+            "(noise floor {:.1}×MAD, fail threshold {:.1}%)\n",
+            self.opts.min_effect_mad, self.opts.fail_on_pct
+        ));
+        let shown: Vec<&CellDelta> =
+            self.deltas.iter().filter(|d| d.verdict != Verdict::WithinNoise).collect();
+        if shown.is_empty() {
+            out.push_str("all deltas within the noise floor\n");
+            return out;
+        }
+        let wid = shown.iter().map(|d| d.id.len()).max().unwrap_or(4).max(4);
+        out.push_str(&format!(
+            "{:wid$}  {:>12}  {:>12}  {:>8}  {}\n",
+            "cell", "base", "new", "delta", "verdict"
+        ));
+        for d in shown {
+            let delta = match d.verdict {
+                Verdict::MissingBase | Verdict::MissingNew => "-".to_string(),
+                _ => format!("{:+.1}%", if d.unit.lower_is_better() { d.pct } else { -d.pct }),
+            };
+            out.push_str(&format!(
+                "{:wid$}  {:>12}  {:>12}  {:>8}  {}{}\n",
+                d.id,
+                fmt_val(d.base, d.unit),
+                fmt_val(d.new, d.unit),
+                delta,
+                d.verdict.label(),
+                if d.verdict == Verdict::Regressed && d.pct >= self.opts.fail_on_pct {
+                    "  << FAIL"
+                } else {
+                    ""
+                },
+            ));
+        }
+        out
+    }
+
+    /// Machine verdict for CI logs.
+    pub fn render_json(&self) -> String {
+        let (reg, imp, noise, miss) = self.counts();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", super::record::json_str(&self.bench)));
+        out.push_str(&format!("  \"failed\": {},\n", self.failed()));
+        out.push_str(&format!("  \"fail_on_pct\": {:.3},\n", self.opts.fail_on_pct));
+        out.push_str(&format!("  \"min_effect_mad\": {:.3},\n", self.opts.min_effect_mad));
+        out.push_str(&format!(
+            "  \"counts\": {{\"regressed\": {reg}, \"improved\": {imp}, \"within_noise\": {noise}, \"missing\": {miss}}},\n"
+        ));
+        out.push_str("  \"cells\": [\n");
+        for (i, d) in self.deltas.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"id\": {}, \"unit\": {}, \"base\": {:.6}, \"new\": {:.6}, \"pct_worse\": {:.3}, \"floor\": {:.6}, \"verdict\": {}}}{}\n",
+                super::record::json_str(&d.id),
+                super::record::json_str(d.unit.label()),
+                d.base,
+                d.new,
+                d.pct,
+                d.floor,
+                super::record::json_str(d.verdict.label()),
+                if i + 1 < self.deltas.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn fmt_val(v: f64, unit: Unit) -> String {
+    match unit {
+        Unit::Ms => format!("{v:.3}ms"),
+        Unit::Bytes => format!("{v:.0}B"),
+        Unit::ReqPerSec => format!("{v:.0}req/s"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::Stats;
+    use crate::bench::record::Provenance;
+
+    fn rec(bench: &str, cells: &[(&str, Unit, f64, f64)]) -> PerfRecord {
+        let mut r = PerfRecord::new(bench, Provenance::capture("test"));
+        for &(id, unit, median, mad) in cells {
+            r.push(id, unit, Stats { median, min: median, mad, reps: 3 });
+        }
+        r
+    }
+
+    #[test]
+    fn self_compare_is_all_within_noise_and_passes() {
+        let r = rec("gemm", &[("a", Unit::Ms, 5.0, 0.2), ("b", Unit::ReqPerSec, 100.0, 2.0)]);
+        let rep = compare(&r, &r, CompareOpts::default()).unwrap();
+        assert!(!rep.failed());
+        assert!(rep.deltas.iter().all(|d| d.verdict == Verdict::WithinNoise));
+        assert!(rep.render_table().contains("all deltas within the noise floor"));
+    }
+
+    #[test]
+    fn regression_above_floor_and_threshold_fails() {
+        let base = rec("gemm", &[("a", Unit::Ms, 10.0, 0.1)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 15.0, 0.1)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Regressed);
+        assert!((rep.deltas[0].pct - 50.0).abs() < 1e-9);
+        assert!(rep.failed());
+        assert!(rep.render_table().contains("<< FAIL"));
+        assert!(rep.render_json().contains("\"failed\": true"));
+    }
+
+    #[test]
+    fn improvement_never_fails() {
+        let base = rec("gemm", &[("a", Unit::Ms, 10.0, 0.1)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 5.0, 0.1)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Improved);
+        assert!(rep.deltas[0].pct < 0.0);
+        assert!(!rep.failed());
+    }
+
+    #[test]
+    fn req_s_direction_is_inverted() {
+        // throughput DROP is the regression
+        let base = rec("serve", &[("w=1/req_s", Unit::ReqPerSec, 100.0, 0.5)]);
+        let new = rec("serve", &[("w=1/req_s", Unit::ReqPerSec, 60.0, 0.5)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Regressed);
+        assert!((rep.deltas[0].pct - 40.0).abs() < 1e-9);
+        assert!(rep.failed());
+        // throughput GAIN improves
+        let up = rec("serve", &[("w=1/req_s", Unit::ReqPerSec, 160.0, 0.5)]);
+        let rep = compare(&base, &up, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Improved);
+    }
+
+    #[test]
+    fn noise_floor_suppresses_large_percentage_on_noisy_cell() {
+        // +40% but MAD is huge: within 3×MAD floor -> suppressed
+        let base = rec("gemm", &[("a", Unit::Ms, 1.0, 0.2)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 1.4, 0.2)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::WithinNoise);
+        assert!(!rep.failed());
+        // same delta with a tight MAD -> regression
+        let base = rec("gemm", &[("a", Unit::Ms, 1.0, 0.01)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 1.4, 0.01)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Regressed);
+        assert!(rep.failed());
+    }
+
+    #[test]
+    fn threshold_edge_is_inclusive() {
+        let base = rec("gemm", &[("a", Unit::Ms, 10.0, 0.0)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 11.0, 0.0)]);
+        // exactly 10% with fail_on 10% -> fails
+        let rep = compare(&base, &new, CompareOpts { fail_on_pct: 10.0, min_effect_mad: 3.0 })
+            .unwrap();
+        assert!(rep.failed());
+        // raise the threshold past it -> regressed but gate passes
+        let rep = compare(&base, &new, CompareOpts { fail_on_pct: 10.1, min_effect_mad: 3.0 })
+            .unwrap();
+        assert_eq!(rep.deltas[0].verdict, Verdict::Regressed);
+        assert!(!rep.failed());
+    }
+
+    #[test]
+    fn missing_cells_reported_but_never_fail() {
+        let base = rec("gemm", &[("a", Unit::Ms, 1.0, 0.0), ("gone", Unit::Ms, 2.0, 0.0)]);
+        let new = rec("gemm", &[("a", Unit::Ms, 1.0, 0.0), ("added", Unit::Ms, 3.0, 0.0)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        assert!(!rep.failed());
+        let gone = rep.deltas.iter().find(|d| d.id == "gone").unwrap();
+        assert_eq!(gone.verdict, Verdict::MissingNew);
+        let added = rep.deltas.iter().find(|d| d.id == "added").unwrap();
+        assert_eq!(added.verdict, Verdict::MissingBase);
+        let table = rep.render_table();
+        assert!(table.contains("removed") && table.contains("new cell"));
+    }
+
+    #[test]
+    fn family_and_unit_mismatch_error() {
+        let a = rec("gemm", &[("a", Unit::Ms, 1.0, 0.0)]);
+        let b = rec("serve", &[("a", Unit::Ms, 1.0, 0.0)]);
+        assert!(compare(&a, &b, CompareOpts::default())
+            .unwrap_err()
+            .to_string()
+            .contains("different bench families"));
+        let c = rec("gemm", &[("a", Unit::Bytes, 1.0, 0.0)]);
+        assert!(compare(&a, &c, CompareOpts::default())
+            .unwrap_err()
+            .to_string()
+            .contains("changed unit"));
+    }
+
+    #[test]
+    fn zero_base_median_does_not_divide_by_zero() {
+        let base = rec("tables", &[("a", Unit::Bytes, 0.0, 0.0)]);
+        let new = rec("tables", &[("a", Unit::Bytes, 5.0, 0.0)]);
+        let rep = compare(&base, &new, CompareOpts::default()).unwrap();
+        // above floor so flagged, but pct stays finite (0 by convention)
+        assert_eq!(rep.deltas[0].verdict, Verdict::Regressed);
+        assert_eq!(rep.deltas[0].pct, 0.0);
+        assert!(!rep.failed(), "0% never reaches the threshold");
+    }
+}

@@ -1,5 +1,5 @@
-//! Shared driver for the Figure 1–3 GEMM benchmarks (used by both the
-//! `bmxnet bench-gemm` CLI and the `cargo bench` targets).
+//! Shared driver for the Figure 1–3 GEMM benchmarks (used by the
+//! `bmxnet bench-gemm` / `bench-suite` CLI and the `cargo bench` targets).
 //!
 //! Measurement protocol (matches the paper's):
 //! * float methods time the full GEMM on float operands;
@@ -14,30 +14,32 @@
 //! Columns cover [`Method::available`] — what the running CPU can
 //! execute — so a recorded figure from an AVX2 box and one from a NEON box
 //! carry different (correctly labelled) column sets.
+//!
+//! Every timing is a [`Stats`] (median/min/MAD over reps, via
+//! [`time_stats`]); tables print the median, records keep the full stats.
 
-use std::time::Duration;
-
-use super::harness::{fmt_ms, time_best_of, BenchTable};
+use super::harness::{fmt_ms_val, time_stats, BenchTable, Stats};
 use super::workloads::GemmWorkload;
 use crate::gemm::{
     binary_gemm_f32, gemm_fused, xnor_gemm_prepacked, Method, PackedMatrix, Side,
 };
 
-/// One measured row: time per method at a given x.
+/// One measured row: noise-aware time stats per method at a given x.
 #[derive(Debug, Clone)]
 pub struct FigureRow {
     pub x: usize,
-    /// (method label, duration) in catalog order + "bin+xnor_omp".
-    pub timings: Vec<(&'static str, Duration)>,
+    /// (method label, ms stats) in catalog order + "bin+xnor_omp".
+    pub timings: Vec<(&'static str, Stats)>,
 }
 
 impl FigureRow {
-    pub fn naive(&self) -> Duration {
+    pub fn naive(&self) -> Stats {
         self.timings[0].1
     }
 
+    /// Median-over-median speedup of column `idx` vs the first column.
     pub fn speedup(&self, idx: usize) -> f64 {
-        self.naive().as_secs_f64() / self.timings[idx].1.as_secs_f64()
+        self.naive().median / self.timings[idx].1.median.max(1e-12)
     }
 }
 
@@ -58,21 +60,21 @@ pub fn measure_workload_methods(
     let pb = PackedMatrix::pack_cols(&b, w.k, w.n);
     let mut timings = Vec::new();
     for method in methods {
-        let d = if *method == Method::XnorFused {
-            time_best_of(reps, || gemm_fused(&a, w.m, w.k, &pb))
+        let s = if *method == Method::XnorFused {
+            time_stats(reps, || gemm_fused(&a, w.m, w.k, &pb))
         } else if method.is_binary() {
-            time_best_of(reps, || xnor_gemm_prepacked(*method, &pa, &pb))
+            time_stats(reps, || xnor_gemm_prepacked(*method, &pa, &pb))
         } else {
-            time_best_of(reps, || binary_gemm_f32(*method, &a, &b, w.m, w.n, w.k))
+            time_stats(reps, || binary_gemm_f32(*method, &a, &b, w.m, w.n, w.k))
         };
-        timings.push((method.label(), d));
+        timings.push((method.label(), s));
     }
     // activation packing (the conv input side) + threaded kernel
-    let d = time_best_of(reps, || {
+    let s = time_stats(reps, || {
         let pa2 = PackedMatrix::pack_rows(&a, w.m, w.k, Side::A);
         xnor_gemm_prepacked(Method::Xnor64Mt, &pa2, &pb)
     });
-    timings.push(("bin+xnor_omp", d));
+    timings.push(("bin+xnor_omp", s));
     FigureRow { x: w.x, timings }
 }
 
@@ -108,11 +110,9 @@ pub fn run_gemm_figure_methods(
             table = Some(BenchTable::new(title, &headers));
         }
         let mut cells = vec![row.x.to_string()];
-        for (i, (_, d)) in row.timings.iter().enumerate() {
-            cells.push(if absolute_times {
-                format!("{}ms", fmt_ms(*d))
-            } else if i == 0 {
-                format!("{}ms", fmt_ms(*d))
+        for (i, (_, s)) in row.timings.iter().enumerate() {
+            cells.push(if absolute_times || i == 0 {
+                format!("{}ms", fmt_ms_val(s.median))
             } else {
                 format!("{:.1}x", row.speedup(i))
             });
@@ -134,10 +134,11 @@ mod tests {
     #[test]
     fn measure_tiny_workload() {
         let w = GemmWorkload { x: 8, m: 4, n: 32, k: 64 };
-        let row = measure_workload(&w, 1);
+        let row = measure_workload(&w, 2);
         // every available method + the bin+xnor column
         assert_eq!(row.timings.len(), Method::available().len() + 1);
-        assert!(row.timings.iter().all(|(_, d)| *d > Duration::ZERO));
+        assert!(row.timings.iter().all(|(_, s)| s.median > 0.0 && s.reps == 2));
+        assert!(row.timings.iter().all(|(_, s)| s.min <= s.median));
         assert!(row.speedup(0) == 1.0);
     }
 

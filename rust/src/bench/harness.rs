@@ -1,11 +1,85 @@
 //! Timing + table-printing helpers for the bench targets.
+//!
+//! The measurement primitive is [`time_stats`]: warmup, then `reps`
+//! timed runs, summarized as **median / min / MAD** ([`Stats`]).  The
+//! median is the headline number (robust to scheduler spikes), the min
+//! bounds the noise-free cost, and the MAD (median absolute deviation)
+//! is the noise floor `bench-compare` uses to suppress deltas that are
+//! indistinguishable from run-to-run jitter.  Best-of-N — the previous
+//! protocol — survives as [`time_best_of`] for quick interactive probes,
+//! but records carry the full statistics: best-of-N systematically
+//! under-reports and gives a regression gate no noise model to stand on.
 
 use std::time::{Duration, Instant};
 
-/// Best-of-`reps` wall time of `f` after one warmup call.
+/// Noise-aware summary of repeated measurements of one quantity.
 ///
-/// Best-of (not mean) is the standard for CPU microbenchmarks: it filters
-/// scheduler noise, which on this single-core box is the dominant variance.
+/// The unit is the cell's business (`bench/record.rs` tags it); for the
+/// timing helpers here it is milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    /// Median of the samples — the headline value.
+    pub median: f64,
+    /// Smallest sample — lower bound on the noise-free cost.
+    pub min: f64,
+    /// Median absolute deviation from the median — the noise floor.
+    pub mad: f64,
+    /// Number of samples summarized.
+    pub reps: usize,
+}
+
+impl Stats {
+    /// Summarize raw samples (any unit). Empty input yields all-zero
+    /// stats rather than NaN so records stay parseable.
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats { median: 0.0, min: 0.0, mad: 0.0, reps: 0 };
+        }
+        let median = median_of(samples);
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        Stats { median, min, mad: median_of(&devs), reps: samples.len() }
+    }
+
+    /// Summarize wall-clock samples as milliseconds.
+    pub fn from_durations(samples: &[Duration]) -> Stats {
+        let ms: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        Stats::from_samples(&ms)
+    }
+
+    /// A deterministic quantity (byte counts, exact sizes): one "sample",
+    /// zero noise floor — any delta at all is a real change.
+    pub fn exact(value: f64) -> Stats {
+        Stats { median: value, min: value, mad: 0.0, reps: 1 }
+    }
+}
+
+fn median_of(samples: &[f64]) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    }
+}
+
+/// Run `f` once for warmup, then `reps` timed repetitions; summarize the
+/// per-rep wall times (ms) as [`Stats`].
+pub fn time_stats<T>(reps: usize, mut f: impl FnMut() -> T) -> Stats {
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    Stats::from_durations(&samples)
+}
+
+/// Best-of-`reps` wall time of `f` after one warmup call.  Kept for
+/// interactive spot checks; recorded benchmarks use [`time_stats`].
 pub fn time_best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> Duration {
     std::hint::black_box(f()); // warmup
     let mut best = Duration::MAX;
@@ -72,9 +146,8 @@ impl BenchTable {
     }
 }
 
-/// Format a duration as milliseconds with sensible precision.
-pub fn fmt_ms(d: Duration) -> String {
-    let ms = d.as_secs_f64() * 1e3;
+/// Format a millisecond value with sensible precision.
+pub fn fmt_ms_val(ms: f64) -> String {
     if ms >= 100.0 {
         format!("{ms:.0}")
     } else if ms >= 1.0 {
@@ -84,9 +157,60 @@ pub fn fmt_ms(d: Duration) -> String {
     }
 }
 
+/// Format a duration as milliseconds with sensible precision.
+pub fn fmt_ms(d: Duration) -> String {
+    fmt_ms_val(d.as_secs_f64() * 1e3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stats_odd_and_even_medians() {
+        let s = Stats::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.reps, 3);
+        // deviations from 2.0: [1, 1, 0] -> median 1
+        assert_eq!(s.mad, 1.0);
+        let e = Stats::from_samples(&[1.0, 2.0, 3.0, 10.0]);
+        assert_eq!(e.median, 2.5);
+        assert_eq!(e.min, 1.0);
+        // deviations: [1.5, 0.5, 0.5, 7.5] -> median (0.5+1.5)/2 = 1.0
+        assert_eq!(e.mad, 1.0);
+    }
+
+    #[test]
+    fn stats_constant_samples_have_zero_mad() {
+        let s = Stats::from_samples(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn stats_exact_and_empty() {
+        let s = Stats::exact(4096.0);
+        assert_eq!((s.median, s.min, s.mad, s.reps), (4096.0, 4096.0, 0.0, 1));
+        let z = Stats::from_samples(&[]);
+        assert_eq!(z.reps, 0);
+        assert_eq!(z.median, 0.0);
+    }
+
+    #[test]
+    fn time_stats_measures_something() {
+        let s = time_stats(3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.reps, 3);
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median);
+        assert!(s.median < 1000.0, "10k mults should be far under a second");
+    }
 
     #[test]
     fn time_best_of_measures_something() {
@@ -103,7 +227,7 @@ mod tests {
 
     #[test]
     fn best_of_le_single_run() {
-        // best-of-5 of a sleep is roughly the sleep, never much more
+        // best-of-2 of a sleep is roughly the sleep, never much more
         let d = time_best_of(2, || std::thread::sleep(Duration::from_millis(1)));
         assert!(d >= Duration::from_millis(1));
         assert!(d < Duration::from_millis(50));
@@ -134,5 +258,6 @@ mod tests {
         assert_eq!(fmt_ms(Duration::from_millis(250)), "250");
         assert_eq!(fmt_ms(Duration::from_micros(1500)), "1.5");
         assert_eq!(fmt_ms(Duration::from_micros(12)), "0.012");
+        assert_eq!(fmt_ms_val(2.5), "2.5");
     }
 }

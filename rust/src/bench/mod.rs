@@ -1,30 +1,41 @@
 //! Benchmark harness (criterion is unavailable offline; this is our own).
 //!
-//! * [`harness`] — timing helpers: warmup + best-of-N wall-clock timing,
-//!   table-formatted output shared by `cargo bench` targets and the
-//!   `bmxnet bench-gemm` CLI.
+//! * [`harness`] — timing helpers: noise-aware [`Stats`] (median/min/MAD
+//!   over reps via [`time_stats`]), table-formatted output shared by the
+//!   `cargo bench` targets and the CLI.
 //! * [`workloads`] — the exact GEMM shapes of Figures 1–3 (and a reduced
 //!   variant: batch 20 instead of 200, so the naive baseline finishes in
 //!   seconds on this 1-core box; `--full` restores paper-exact shapes).
 //! * [`serve_scaling`] — the serving-gateway scaling sweep (offered load ×
-//!   pool worker count) shared by `cargo bench --bench serve_scaling`.
-//! * [`record`] — `BENCH_gemm.json` writer (the CLI `--json` flag and the
-//!   bench targets' `BENCH_JSON` env var), keyed by `Method::label`.
+//!   pool worker count) and the batching-policy grid.
+//! * [`record`] — the versioned [`PerfRecord`] schema (provenance block +
+//!   per-cell stats) every family writes (`BENCH_<family>.json`).
+//! * [`suite`] — `bmxnet bench-suite`: runs every family, one record per
+//!   family; the `cargo bench` targets are thin drivers over it.
+//! * [`compare`] — `bmxnet bench-compare`: aligns two records cell-by-cell,
+//!   suppresses deltas within the MAD noise floor, fails on regressions.
 
+pub mod compare;
 pub mod figures;
 pub mod harness;
 pub mod record;
 pub mod serve_scaling;
+pub mod suite;
 pub mod workloads;
 
+pub use compare::{compare, CellDelta, CompareOpts, CompareReport, Verdict};
 pub use figures::{
     measure_workload, measure_workload_methods, run_gemm_figure, run_gemm_figure_methods,
     FigureRow,
 };
-pub use record::{render_gemm_json, write_gemm_json, GemmFigureRecord};
-pub use harness::{time_best_of, BenchTable};
-pub use serve_scaling::{
-    measure_serve_workload, run_serve_scaling, serve_scaling_workloads, ServeScalingRow,
-    ServeWorkload, SyntheticBackend,
+pub use harness::{fmt_ms_val, time_best_of, time_stats, BenchTable, Stats};
+pub use record::{
+    gemm_cells, gemm_perf_record, write_gemm_json, Cell, GemmFigureRecord, PerfRecord,
+    Provenance, Unit, SCHEMA_VERSION,
 };
-pub use workloads::{fig1_workloads, fig2_workloads, fig3_workloads, GemmWorkload};
+pub use serve_scaling::{
+    measure_serve_workload, policy_points, quick_serve_workloads, run_serve_scaling,
+    serve_scaling_workloads, PolicyPoint, ServeScalingRow, ServeWorkload, SyntheticBackend,
+};
+pub use suite::{run_family, run_gemm_figures, run_suite, SuiteOpts, FAMILIES};
+pub use workloads::{fig1_workloads, fig2_workloads, fig3_workloads, quick_gemm, GemmWorkload};

@@ -1,144 +1,573 @@
-//! Benchmark result recording: render Figure 1–3 rows into the
-//! `BENCH_gemm.json` schema EXPERIMENTS.md §Perf references.
+//! The versioned `PerfRecord` schema every benchmark family reports
+//! through (schema 2), plus the Figure 1–3 conversion that feeds
+//! `BENCH_gemm.json`.
 //!
-//! Schema (hand-rolled writer, validated against our own
-//! [`crate::model::json::parse`] in tests — no serde available offline):
+//! One record = one bench family run on one binary on one machine:
 //!
 //! ```json
 //! {
+//!   "schema": 2,
 //!   "bench": "gemm",
-//!   "provenance": "host/toolchain note",
-//!   "figures": [
-//!     {"figure": "fig1", "xlabel": "filter number", "absolute_times": true,
-//!      "rows": [{"x": 64, "ms": {"naive": 12.5, "xnor_64_blk": 0.8}}]}
+//!   "provenance": {
+//!     "tool": "bmxnet bench-suite", "version": "0.1.0",
+//!     "git": "e3ac3e2-dirty", "rustc": "rustc 1.74.0",
+//!     "features": "default", "arch": "x86_64", "os": "linux",
+//!     "cores": 4, "dispatch": "method xnor_fused · kernel avx2",
+//!     "force_scalar": false, "kernels": "scalar avx2",
+//!     "reps": 3, "quick": false, "note": "reduced shapes (batch 20)"
+//!   },
+//!   "cells": [
+//!     {"id": "fig1/C=64/naive", "unit": "ms",
+//!      "median": 12.5012, "min": 12.4480, "mad": 0.0320, "reps": 3}
 //!   ]
 //! }
 //! ```
 //!
-//! Method labels key the `ms` maps — the [`crate::gemm::Method::label`]
-//! API contract is what makes records comparable across commits.
+//! Design rules the compare gate relies on:
+//! * **Cell ids are the alignment key.** `bench-compare` matches cells of
+//!   two records by exact id string; ids therefore embed every axis of
+//!   the measurement (`<group>/<point>/<metric-or-method>`).  Method
+//!   labels inside ids follow the [`crate::gemm::Method::label`] API
+//!   contract, which is what keeps records comparable across commits.
+//! * **Units carry direction.** `ms`/`us`/`bytes` regress upward,
+//!   `req_s` regresses downward ([`Unit::lower_is_better`]).
+//! * **Stats, not best-of.** Every cell stores median/min/MAD over reps
+//!   ([`super::harness::Stats`]); the MAD is the per-cell noise floor.
+//!
+//! Hand-rolled writer + reader (no serde offline); round-trip is
+//! validated against [`crate::model::json::parse`] in tests and in
+//! `rust/tests/bench_compare.rs`.
 
 use std::fmt::Write as _;
 use std::path::Path;
 
-use super::figures::FigureRow;
+use anyhow::{anyhow, bail, Context, Result};
 
-/// One figure's worth of measured rows, ready to serialize.
+use super::figures::FigureRow;
+use super::harness::Stats;
+use crate::model::json::{self, Value};
+
+/// The record format version; [`PerfRecord::parse`] rejects anything else.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// What a cell's numbers measure, and therefore which direction is worse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Milliseconds of wall time — lower is better.
+    Ms,
+    /// Exact byte counts (model sizes) — lower is better, zero noise.
+    Bytes,
+    /// Requests per second — higher is better.
+    ReqPerSec,
+}
+
+impl Unit {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Unit::Ms => "ms",
+            Unit::Bytes => "bytes",
+            Unit::ReqPerSec => "req_s",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Unit> {
+        match s {
+            "ms" => Some(Unit::Ms),
+            "bytes" => Some(Unit::Bytes),
+            "req_s" => Some(Unit::ReqPerSec),
+            _ => None,
+        }
+    }
+
+    /// Direction: does a larger median mean a regression?
+    pub fn lower_is_better(&self) -> bool {
+        !matches!(self, Unit::ReqPerSec)
+    }
+}
+
+/// Environment + binary identity block stamped into every record.
+///
+/// `version`/`git`/`rustc`/`features` identify the binary (git + rustc
+/// come from `rust/build.rs` at compile time; absent toolchains degrade
+/// to `"unknown"`).  `dispatch`/`force_scalar`/`kernels`/`cores` identify
+/// the machine-dependent code path — the same binary produces different
+/// numbers under `BMXNET_FORCE_SCALAR=1`, and the record must say so.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// What produced the record, e.g. `bmxnet bench-suite`.
+    pub tool: String,
+    /// Crate version (`CARGO_PKG_VERSION`).
+    pub version: String,
+    /// `git describe --always --dirty --tags` at build time.
+    pub git: String,
+    /// `rustc --version` that built the binary.
+    pub rustc: String,
+    /// Enabled cargo features, space-joined, or `default`.
+    pub features: String,
+    /// Target architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// `available_parallelism` at run time.
+    pub cores: usize,
+    /// GEMM dispatch summary, e.g. `method xnor_fused · kernel avx2`.
+    pub dispatch: String,
+    /// Whether `BMXNET_FORCE_SCALAR` pinned the scalar kernel.
+    pub force_scalar: bool,
+    /// Runtime-dispatchable row kernels, space-joined (CPU feature view).
+    pub kernels: String,
+    /// Repetitions per cell (0 when cells are deterministic counts).
+    pub reps: usize,
+    /// Whether this was a `--quick` (CI-sized) run.
+    pub quick: bool,
+    /// Free-text qualifier (e.g. `reduced shapes (batch 20)`).
+    pub note: String,
+}
+
+impl Provenance {
+    /// Capture the current build + machine + dispatch state.  Callers
+    /// set `reps`/`quick`/`note` afterwards — only they know them.
+    pub fn capture(tool: &str) -> Provenance {
+        let mut features: Vec<&str> = Vec::new();
+        if cfg!(feature = "pjrt") {
+            features.push("pjrt");
+        }
+        if cfg!(feature = "simd-avx512") {
+            features.push("simd-avx512");
+        }
+        let kernels: Vec<&str> =
+            crate::gemm::simd::available_kernels().iter().map(|k| k.label()).collect();
+        Provenance {
+            tool: tool.to_string(),
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            git: option_env!("BMXNET_GIT_DESCRIBE").unwrap_or("unknown").to_string(),
+            rustc: option_env!("BMXNET_RUSTC_VERSION").unwrap_or("unknown").to_string(),
+            features: if features.is_empty() { "default".to_string() } else { features.join(" ") },
+            arch: std::env::consts::ARCH.to_string(),
+            os: std::env::consts::OS.to_string(),
+            cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            dispatch: format!(
+                "method {} · kernel {}",
+                crate::gemm::Method::auto().label(),
+                crate::gemm::simd::best_kernel().label(),
+            ),
+            force_scalar: crate::gemm::simd::force_scalar(),
+            kernels: kernels.join(" "),
+            reps: 0,
+            quick: false,
+            note: String::new(),
+        }
+    }
+
+    /// Render as an indented JSON object (shared by [`PerfRecord`] and
+    /// `obs::ProfileReport`, which embeds the same block).
+    pub fn render_json_object(&self, indent: usize) -> String {
+        let pad = " ".repeat(indent);
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "{pad}  \"tool\": {},", json_str(&self.tool));
+        let _ = writeln!(s, "{pad}  \"version\": {},", json_str(&self.version));
+        let _ = writeln!(s, "{pad}  \"git\": {},", json_str(&self.git));
+        let _ = writeln!(s, "{pad}  \"rustc\": {},", json_str(&self.rustc));
+        let _ = writeln!(s, "{pad}  \"features\": {},", json_str(&self.features));
+        let _ = writeln!(s, "{pad}  \"arch\": {},", json_str(&self.arch));
+        let _ = writeln!(s, "{pad}  \"os\": {},", json_str(&self.os));
+        let _ = writeln!(s, "{pad}  \"cores\": {},", self.cores);
+        let _ = writeln!(s, "{pad}  \"dispatch\": {},", json_str(&self.dispatch));
+        let _ = writeln!(s, "{pad}  \"force_scalar\": {},", self.force_scalar);
+        let _ = writeln!(s, "{pad}  \"kernels\": {},", json_str(&self.kernels));
+        let _ = writeln!(s, "{pad}  \"reps\": {},", self.reps);
+        let _ = writeln!(s, "{pad}  \"quick\": {},", self.quick);
+        let _ = writeln!(s, "{pad}  \"note\": {}", json_str(&self.note));
+        let _ = write!(s, "{pad}}}");
+        s
+    }
+
+    fn from_value(v: &Value) -> Result<Provenance> {
+        if v.as_object().is_none() {
+            bail!("provenance is not an object");
+        }
+        Ok(Provenance {
+            tool: str_field(v, "tool"),
+            version: str_field(v, "version"),
+            git: str_field(v, "git"),
+            rustc: str_field(v, "rustc"),
+            features: str_field(v, "features"),
+            arch: str_field(v, "arch"),
+            os: str_field(v, "os"),
+            cores: usize_field(v, "cores"),
+            dispatch: str_field(v, "dispatch"),
+            force_scalar: bool_field(v, "force_scalar"),
+            kernels: str_field(v, "kernels"),
+            reps: usize_field(v, "reps"),
+            quick: bool_field(v, "quick"),
+            note: str_field(v, "note"),
+        })
+    }
+}
+
+/// One measured quantity: the compare gate aligns cells of two records
+/// by exact `id` and judges the median delta against the MAD floor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    /// Alignment key: `<group>/<point>/<metric>`, e.g. `fig1/C=64/naive`.
+    pub id: String,
+    pub unit: Unit,
+    pub stats: Stats,
+    /// Free-text annotation (e.g. the profile's per-layer
+    /// `kind=qconv method=xnor_fused kernel=avx2`); never compared.
+    pub note: String,
+}
+
+impl Cell {
+    pub fn new(id: impl Into<String>, unit: Unit, stats: Stats) -> Cell {
+        Cell { id: id.into(), unit, stats, note: String::new() }
+    }
+
+    pub fn with_note(mut self, note: impl Into<String>) -> Cell {
+        self.note = note.into();
+        self
+    }
+
+    /// Render as a single JSON object line (no trailing comma/newline).
+    pub fn render_json_line(&self) -> String {
+        let mut s = format!(
+            "{{\"id\": {}, \"unit\": \"{}\", \"median\": {}, \"min\": {}, \"mad\": {}, \
+             \"reps\": {}",
+            json_str(&self.id),
+            self.unit.label(),
+            fmt_num(self.stats.median),
+            fmt_num(self.stats.min),
+            fmt_num(self.stats.mad),
+            self.stats.reps,
+        );
+        if !self.note.is_empty() {
+            let _ = write!(s, ", \"note\": {}", json_str(&self.note));
+        }
+        s.push('}');
+        s
+    }
+
+    fn from_value(v: &Value) -> Result<Cell> {
+        let id = v
+            .get("id")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("cell missing string \"id\""))?
+            .to_string();
+        let unit_label = v
+            .get("unit")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("cell {id:?} missing \"unit\""))?;
+        let unit = Unit::from_label(unit_label)
+            .ok_or_else(|| anyhow!("cell {id:?} has unknown unit {unit_label:?}"))?;
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("cell {id:?} missing number {key:?}"))
+        };
+        let stats = Stats {
+            median: num("median")?,
+            min: num("min")?,
+            mad: num("mad")?,
+            reps: usize_field(v, "reps"),
+        };
+        Ok(Cell { id, unit, stats, note: str_field(v, "note") })
+    }
+}
+
+/// One bench family's full result set + provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfRecord {
+    /// Family name: `gemm`, `tables`, `engine`, `serve`, `serve_policy`,
+    /// `profile`.
+    pub bench: String,
+    pub provenance: Provenance,
+    pub cells: Vec<Cell>,
+}
+
+impl PerfRecord {
+    pub fn new(bench: impl Into<String>, provenance: Provenance) -> PerfRecord {
+        PerfRecord { bench: bench.into(), provenance, cells: Vec::new() }
+    }
+
+    pub fn push(&mut self, id: impl Into<String>, unit: Unit, stats: Stats) {
+        self.cells.push(Cell::new(id, unit, stats));
+    }
+
+    pub fn cell(&self, id: &str) -> Option<&Cell> {
+        self.cells.iter().find(|c| c.id == id)
+    }
+
+    /// Render the full document.
+    pub fn render_json(&self) -> String {
+        self.render_json_extra(&[])
+    }
+
+    /// Render with additional pre-rendered top-level entries inserted
+    /// after `"bench"` — the profile report adds `model`/`batch` etc.
+    /// this way while staying parseable as a plain [`PerfRecord`]
+    /// (unknown top-level keys are ignored on read).
+    pub fn render_json_extra(&self, extra: &[(&str, String)]) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"schema\": {SCHEMA_VERSION},");
+        let _ = writeln!(s, "  \"bench\": {},", json_str(&self.bench));
+        for (key, rendered) in extra {
+            let _ = writeln!(s, "  \"{key}\": {rendered},");
+        }
+        let _ = writeln!(s, "  \"provenance\": {},", self.provenance.render_json_object(2));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(&c.render_json_line());
+            s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a record; rejects wrong/missing schema versions loudly so
+    /// `bench-compare` never silently mis-aligns old-format files.
+    pub fn parse(text: &str) -> Result<PerfRecord> {
+        let v = json::parse(text).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+        let schema = v.get("schema").and_then(Value::as_f64).map(|n| n as u64);
+        match schema {
+            Some(SCHEMA_VERSION) => {}
+            Some(other) => bail!(
+                "unsupported perf record schema {other} (this tool reads schema \
+                 {SCHEMA_VERSION}; re-run the producing bench)"
+            ),
+            None => bail!("not a perf record: missing \"schema\" field"),
+        }
+        let bench = v
+            .get("bench")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("perf record missing \"bench\""))?
+            .to_string();
+        let provenance = Provenance::from_value(
+            v.get("provenance").ok_or_else(|| anyhow!("perf record missing \"provenance\""))?,
+        )?;
+        let cells = v
+            .get("cells")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("perf record missing \"cells\" array"))?
+            .iter()
+            .map(Cell::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PerfRecord { bench, provenance, cells })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PerfRecord> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        PerfRecord::parse(&text).with_context(|| format!("parse perf record {path:?}"))
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.render_json())
+    }
+}
+
+fn str_field(v: &Value, key: &str) -> String {
+    v.get(key).and_then(Value::as_str).unwrap_or("").to_string()
+}
+
+fn usize_field(v: &Value, key: &str) -> usize {
+    v.get(key).and_then(Value::as_usize).unwrap_or(0)
+}
+
+fn bool_field(v: &Value, key: &str) -> bool {
+    matches!(v.get(key), Some(Value::Bool(true)))
+}
+
+/// Numbers with enough digits to round-trip sub-microsecond deltas, but
+/// no float-noise tails (records are diffed by humans too).
+fn fmt_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+/// Full JSON string escaper (same contract as `serve::http`'s).
+pub(crate) fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ---------------------------------------------------------------------
+// Figure 1–3 conversion (the `BENCH_gemm.json` family)
+
+/// One figure's worth of measured rows, ready to convert into cells.
 #[derive(Debug, Clone)]
 pub struct GemmFigureRecord {
     /// Figure id, e.g. `fig1`.
     pub figure: String,
-    /// The swept axis, e.g. `filter number`.
+    /// The swept axis, e.g. `C` or `filters`.
     pub xlabel: String,
-    /// Whether the figure reports absolute ms (Fig 1) or speedups.
+    /// Whether the figure's *table* reports absolute ms (Fig 1) or
+    /// speedups (Figs 2–3).  Cells always store absolute ms — speedups
+    /// are derivable and would hide absolute regressions.
     pub absolute_times: bool,
     pub rows: Vec<FigureRow>,
 }
 
-/// Render the full `BENCH_gemm.json` document.
-pub fn render_gemm_json(provenance: &str, figures: &[GemmFigureRecord]) -> String {
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str("  \"bench\": \"gemm\",\n");
-    let _ = writeln!(s, "  \"provenance\": \"{}\",", escape(provenance));
-    s.push_str("  \"figures\": [\n");
-    for (fi, f) in figures.iter().enumerate() {
-        let _ = writeln!(s, "    {{");
-        let _ = writeln!(s, "      \"figure\": \"{}\",", escape(&f.figure));
-        let _ = writeln!(s, "      \"xlabel\": \"{}\",", escape(&f.xlabel));
-        let _ = writeln!(s, "      \"absolute_times\": {},", f.absolute_times);
-        s.push_str("      \"rows\": [\n");
-        for (ri, row) in f.rows.iter().enumerate() {
-            let _ = write!(s, "        {{\"x\": {}, \"ms\": {{", row.x);
-            for (ti, (label, d)) in row.timings.iter().enumerate() {
-                if ti > 0 {
-                    s.push_str(", ");
-                }
-                let _ = write!(s, "\"{}\": {:.4}", escape(label), d.as_secs_f64() * 1e3);
+/// Flatten figures into cells: `fig1/C=64/naive` etc.
+pub fn gemm_cells(figures: &[GemmFigureRecord]) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for f in figures {
+        for row in &f.rows {
+            for (label, stats) in &row.timings {
+                cells.push(Cell::new(
+                    format!("{}/{}={}/{}", f.figure, f.xlabel, row.x, label),
+                    Unit::Ms,
+                    *stats,
+                ));
             }
-            s.push_str("}}");
-            if ri + 1 < f.rows.len() {
-                s.push(',');
-            }
-            s.push('\n');
         }
-        s.push_str("      ]\n");
-        s.push_str("    }");
-        if fi + 1 < figures.len() {
-            s.push(',');
-        }
-        s.push('\n');
     }
-    s.push_str("  ]\n}\n");
-    s
+    cells
 }
 
-/// Write the document to disk (the CLI `--json` flag and the bench
-/// targets' `BENCH_JSON` env path land here).
+/// Build the `gemm` family record from measured figures.
+pub fn gemm_perf_record(provenance: Provenance, figures: &[GemmFigureRecord]) -> PerfRecord {
+    let mut rec = PerfRecord::new("gemm", provenance);
+    rec.cells = gemm_cells(figures);
+    rec
+}
+
+/// Write the `BENCH_gemm.json` document (the CLI `--json` flag and the
+/// bench targets' `BENCH_JSON` env path land here).
 pub fn write_gemm_json(
     path: impl AsRef<Path>,
-    provenance: &str,
+    provenance: Provenance,
     figures: &[GemmFigureRecord],
 ) -> std::io::Result<()> {
-    std::fs::write(path, render_gemm_json(provenance, figures))
-}
-
-fn escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+    gemm_perf_record(provenance, figures).write(path)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::json;
-    use std::time::Duration;
 
-    fn sample() -> Vec<GemmFigureRecord> {
+    fn prov() -> Provenance {
+        let mut p = Provenance::capture("unit test");
+        p.reps = 3;
+        p.note = "synthetic".into();
+        p
+    }
+
+    fn sample_figures() -> Vec<GemmFigureRecord> {
         vec![GemmFigureRecord {
             figure: "fig1".into(),
-            xlabel: "filter number".into(),
+            xlabel: "C".into(),
             absolute_times: true,
             rows: vec![FigureRow {
                 x: 64,
                 timings: vec![
-                    ("naive", Duration::from_micros(12500)),
-                    ("xnor_64_blk", Duration::from_micros(800)),
+                    ("naive", Stats { median: 12.5, min: 12.4, mad: 0.05, reps: 3 }),
+                    ("xnor_64_blk", Stats { median: 0.8, min: 0.79, mad: 0.01, reps: 3 }),
                 ],
             }],
         }]
     }
 
     #[test]
-    fn rendered_json_parses_with_our_parser() {
-        let text = render_gemm_json("unit test", &sample());
-        let v = json::parse(&text).expect("self-rendered JSON must parse");
-        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("gemm"));
-        let figs = v.get("figures").and_then(|f| f.as_array()).unwrap();
-        assert_eq!(figs.len(), 1);
-        let rows = figs[0].get("rows").and_then(|r| r.as_array()).unwrap();
-        assert_eq!(rows[0].get("x").and_then(|x| x.as_usize()), Some(64));
-        let ms = rows[0].get("ms").unwrap();
-        let naive = ms.get("naive").and_then(|m| m.as_f64()).unwrap();
-        assert!((naive - 12.5).abs() < 1e-6, "naive ms = {naive}");
+    fn capture_populates_every_field() {
+        let p = prov();
+        assert_eq!(p.tool, "unit test");
+        assert!(!p.version.is_empty());
+        assert!(!p.git.is_empty(), "git falls back to \"unknown\", never empty");
+        assert!(!p.rustc.is_empty());
+        assert!(p.dispatch.contains("method") && p.dispatch.contains("kernel"));
+        assert!(p.kernels.contains("scalar"), "scalar kernel always dispatchable");
+        assert!(p.cores >= 1);
     }
 
     #[test]
-    fn provenance_is_escaped() {
-        let text = render_gemm_json("quote \" and \\ slash", &sample());
-        let v = json::parse(&text).unwrap();
-        assert_eq!(
-            v.get("provenance").and_then(|p| p.as_str()),
-            Some("quote \" and \\ slash")
-        );
+    fn record_round_trips_through_parse() {
+        let rec = gemm_perf_record(prov(), &sample_figures());
+        let back = PerfRecord::parse(&rec.render_json()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn cells_flatten_with_ids_and_absolute_ms() {
+        let rec = gemm_perf_record(prov(), &sample_figures());
+        assert_eq!(rec.cells.len(), 2);
+        let naive = rec.cell("fig1/C=64/naive").expect("naive cell");
+        assert_eq!(naive.unit, Unit::Ms);
+        assert!((naive.stats.median - 12.5).abs() < 1e-9);
+        assert!((naive.stats.mad - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema_and_garbage() {
+        let err = PerfRecord::parse("{\"schema\": 1, \"bench\": \"gemm\"}").unwrap_err();
+        assert!(err.to_string().contains("schema 1"), "{err}");
+        let err = PerfRecord::parse("{\"bench\": \"gemm\"}").unwrap_err();
+        assert!(err.to_string().contains("missing \"schema\""), "{err}");
+        assert!(PerfRecord::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_unit() {
+        let rec = gemm_perf_record(prov(), &sample_figures());
+        let text = rec.render_json().replace("\"unit\": \"ms\"", "\"unit\": \"parsecs\"");
+        let err = PerfRecord::parse(&text).unwrap_err();
+        assert!(err.to_string().contains("parsecs"), "{err}");
+    }
+
+    #[test]
+    fn escaping_survives_hostile_strings() {
+        let mut p = prov();
+        p.note = "quote \" slash \\ newline \n tab \t".into();
+        let mut rec = PerfRecord::new("gemm", p);
+        rec.cells
+            .push(Cell::new("a/b/c", Unit::Ms, Stats::exact(1.0)).with_note("k=\"v\""));
+        let back = PerfRecord::parse(&rec.render_json()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn unit_labels_round_trip_and_carry_direction() {
+        for u in [Unit::Ms, Unit::Bytes, Unit::ReqPerSec] {
+            assert_eq!(Unit::from_label(u.label()), Some(u));
+        }
+        assert!(Unit::Ms.lower_is_better());
+        assert!(Unit::Bytes.lower_is_better());
+        assert!(!Unit::ReqPerSec.lower_is_better());
     }
 
     #[test]
     fn write_roundtrips_to_disk() {
-        let path = std::env::temp_dir()
-            .join(format!("bench_record_{}.json", std::process::id()));
-        write_gemm_json(&path, "disk test", &sample()).unwrap();
-        let back = std::fs::read_to_string(&path).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("bench_record_{}.json", std::process::id()));
+        let rec = gemm_perf_record(prov(), &sample_figures());
+        rec.write(&path).unwrap();
+        let back = PerfRecord::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
-        assert_eq!(back, render_gemm_json("disk test", &sample()));
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn integers_render_compactly() {
+        assert_eq!(fmt_num(4096.0), "4096.0");
+        assert_eq!(fmt_num(1.25), "1.250000");
     }
 }

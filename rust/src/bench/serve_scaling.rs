@@ -35,6 +35,51 @@ pub fn serve_scaling_workloads(requests: usize) -> Vec<ServeWorkload> {
     ws
 }
 
+/// The CI-sized grid for `bench-suite --quick`: the scaling question's
+/// endpoints (1 vs 2 workers, idle vs contended offered load).
+pub fn quick_serve_workloads(requests: usize) -> Vec<ServeWorkload> {
+    let mut ws = Vec::new();
+    for &workers in &[1usize, 2] {
+        for &producers in &[1usize, 4] {
+            ws.push(ServeWorkload { workers, producers, requests });
+        }
+    }
+    ws
+}
+
+/// One point of the dynamic-batcher policy sweep (the `serve_policy`
+/// family / `cargo bench --bench serving_throughput`).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyPoint {
+    pub max_batch: usize,
+    pub window_ms: u64,
+}
+
+impl PolicyPoint {
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch,
+            window: Duration::from_millis(self.window_ms),
+        }
+    }
+
+    /// Cell-id fragment, e.g. `b=32,w=4ms`.
+    pub fn label(&self) -> String {
+        format!("b={},w={}ms", self.max_batch, self.window_ms)
+    }
+}
+
+/// The (max_batch, window) knob sweep; the b=1/w=0 point is the
+/// no-batching baseline.
+pub fn policy_points(quick: bool) -> Vec<PolicyPoint> {
+    let pairs: &[(usize, u64)] = if quick {
+        &[(1, 0), (32, 4)]
+    } else {
+        &[(1, 0), (8, 1), (8, 4), (32, 1), (32, 4), (32, 16)]
+    };
+    pairs.iter().map(|&(max_batch, window_ms)| PolicyPoint { max_batch, window_ms }).collect()
+}
+
 /// One measured row of the sweep.
 #[derive(Debug, Clone)]
 pub struct ServeScalingRow {
@@ -188,6 +233,19 @@ mod tests {
         let hist: u64 = row.snapshot.batch_hist.iter().map(|&(s, c)| s as u64 * c).sum();
         assert_eq!(hist, row.snapshot.requests);
         assert!(row.req_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn quick_grid_and_policy_points_cover_endpoints() {
+        let q = quick_serve_workloads(32);
+        assert_eq!(q.len(), 4);
+        assert!(q.iter().all(|w| w.requests == 32));
+        let pts = policy_points(false);
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0].label(), "b=1,w=0ms");
+        let quick = policy_points(true);
+        assert_eq!(quick.len(), 2);
+        assert_eq!(quick[1].policy().max_batch, 32);
     }
 
     #[test]

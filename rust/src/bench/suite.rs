@@ -1,0 +1,531 @@
+//! The unified bench suite behind `bmxnet bench-suite`: every benchmark
+//! family measured through [`super::harness`], emitted as one
+//! [`PerfRecord`] per family (`BENCH_<family>.json`), comparable across
+//! commits with `bmxnet bench-compare`.
+//!
+//! Families ([`FAMILIES`]):
+//! * `gemm` — the Figure 1–3 method sweep (absolute ms per cell);
+//! * `tables` — Table 1–2 model-size accounting (exact bytes, zero
+//!   noise floor: any delta is a real converter/inventory change);
+//! * `engine` — end-to-end forward latency of the synthetic packed
+//!   LeNets at several batch sizes, plus the binary-kernel ablation on
+//!   the QConv2 GEMM shape;
+//! * `serve` — gateway pool scaling (workers × offered load, req/s);
+//! * `serve_policy` — dynamic-batcher (max_batch, window) sweep;
+//! * `profile` — the PR-7 per-layer profiler as a record.
+//!
+//! Every family runs on synthetic models/operands — no artifacts, no
+//! network — so the suite runs identically in CI (`--quick`, pinned
+//! scalar kernels via `BMXNET_FORCE_SCALAR=1`) and on a dev box.
+//!
+//! The eight `cargo bench` targets are thin drivers over this module
+//! (env knobs `BENCH_QUICK` / `BENCH_FULL` / `BENCH_REPS` /
+//! `BENCH_REQUESTS` / `BENCH_JSON`, mirrored by the CLI's `--quick` /
+//! `--full` / `--reps` / `--requests` / `--json` flags).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::figures::run_gemm_figure;
+use super::harness::{time_stats, BenchTable, Stats};
+use super::record::{gemm_perf_record, GemmFigureRecord, PerfRecord, Provenance, Unit};
+use super::serve_scaling::{
+    measure_serve_workload, policy_points, quick_serve_workloads, serve_scaling_workloads,
+    ServeWorkload,
+};
+use super::workloads::{fig1_workloads, fig2_workloads, fig3_workloads, quick_gemm};
+use crate::coordinator::{Backend, BatchPolicy};
+use crate::gemm::{xnor_gemm_prepacked, Method, PackedMatrix, Side};
+use crate::model::bmx::synth_lenet;
+use crate::model::inventory::{self, Stem};
+use crate::nn::Engine;
+use crate::tensor::Tensor;
+
+/// Every family `bench-suite` runs, in run order.
+pub const FAMILIES: &[&str] =
+    &["gemm", "tables", "engine", "serve", "serve_policy", "profile"];
+
+/// Knobs shared by the CLI and the bench-target env vars.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOpts {
+    /// CI-sized run: endpoint workloads, fewer reps.
+    pub quick: bool,
+    /// Paper-exact GEMM shapes (batch 200); only the gemm family cares.
+    pub full: bool,
+    /// Reps per cell; 0 = per-family default.
+    pub reps: usize,
+    /// Total requests per serve workload; 0 = default.
+    pub requests: usize,
+    /// Substring filter over family names.
+    pub filter: Option<String>,
+}
+
+impl SuiteOpts {
+    /// Read the bench-target env knobs (`BENCH_QUICK`, `BENCH_FULL`,
+    /// `BENCH_REPS`, `BENCH_REQUESTS`).
+    pub fn from_env() -> SuiteOpts {
+        let flag = |k: &str| std::env::var(k).is_ok_and(|v| v != "0" && !v.is_empty());
+        let num = |k: &str| {
+            std::env::var(k).ok().and_then(|v| v.parse::<usize>().ok()).unwrap_or(0)
+        };
+        SuiteOpts {
+            quick: flag("BENCH_QUICK"),
+            full: flag("BENCH_FULL"),
+            reps: num("BENCH_REPS"),
+            requests: num("BENCH_REQUESTS"),
+            filter: None,
+        }
+    }
+
+    fn reps_or(&self, default: usize, quick: usize) -> usize {
+        if self.reps > 0 {
+            self.reps
+        } else if self.quick {
+            quick
+        } else {
+            default
+        }
+    }
+
+    fn requests_or(&self, default: usize, quick: usize) -> usize {
+        if self.requests > 0 {
+            self.requests
+        } else if self.quick {
+            quick
+        } else {
+            default
+        }
+    }
+
+    fn matches(&self, family: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => family.contains(f.as_str()),
+        }
+    }
+}
+
+/// Base provenance for a suite record: capture + the opts every family
+/// shares.  Families append their own `note`.
+fn suite_provenance(opts: &SuiteOpts, reps: usize, note: &str) -> Provenance {
+    let mut p = Provenance::capture("bmxnet bench-suite");
+    p.reps = reps;
+    p.quick = opts.quick;
+    p.note = note.to_string();
+    p
+}
+
+/// Run every family passing the filter; write one `BENCH_<family>.json`
+/// per record when `out_dir` is given.  Returns the records in run order.
+pub fn run_suite(opts: &SuiteOpts, out_dir: Option<&Path>) -> Result<Vec<PerfRecord>> {
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    }
+    let mut records = Vec::new();
+    for family in FAMILIES {
+        if !opts.matches(family) {
+            continue;
+        }
+        let t0 = Instant::now();
+        let rec = run_family(family, opts)?;
+        println!(
+            "[bench-suite] {family}: {} cells in {:.1}s",
+            rec.cells.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        if let Some(dir) = out_dir {
+            let path = dir.join(format!("BENCH_{family}.json"));
+            rec.write(&path).with_context(|| format!("write {path:?}"))?;
+            println!("[bench-suite] wrote {}", path.display());
+        }
+        records.push(rec);
+    }
+    if records.is_empty() {
+        bail!(
+            "no family matches filter {:?} (families: {})",
+            opts.filter.as_deref().unwrap_or(""),
+            FAMILIES.join(" ")
+        );
+    }
+    Ok(records)
+}
+
+/// Run one family by name.
+pub fn run_family(family: &str, opts: &SuiteOpts) -> Result<PerfRecord> {
+    match family {
+        "gemm" => Ok(run_gemm_figures(&[1, 2, 3], opts)?.1),
+        "tables" => Ok(run_tables(opts)),
+        "engine" => run_engine(opts),
+        "serve" => run_serve(opts),
+        "serve_policy" => run_serve_policy(opts),
+        "profile" => run_profile(opts),
+        other => bail!("unknown bench family {other:?} (families: {})", FAMILIES.join(" ")),
+    }
+}
+
+// ------------------------------------------------------------------ gemm
+
+/// Measure the requested figures (1–3) and build the `gemm` record.
+/// Shared by the suite, `bmxnet bench-gemm` and the fig bench targets.
+pub fn run_gemm_figures(
+    figs: &[usize],
+    opts: &SuiteOpts,
+) -> Result<(Vec<GemmFigureRecord>, PerfRecord)> {
+    let reps = opts.reps_or(3, 2);
+    let reduced = !opts.full;
+    let mut records = Vec::new();
+    for fig in figs {
+        let (title, xlabel, mut ws) = match fig {
+            1 => (
+                "Figure 1: GEMM time vs input channels (M=64, 5x5)",
+                "C",
+                fig1_workloads(reduced),
+            ),
+            2 => (
+                "Figure 2: speedup vs naive, varying filter number (C=256, 5x5)",
+                "filters",
+                fig2_workloads(reduced),
+            ),
+            3 => (
+                "Figure 3: speedup vs naive, varying kernel size (C=256, filters=64)",
+                "kernel",
+                fig3_workloads(reduced),
+            ),
+            other => bail!("unknown figure {other} (1-3)"),
+        };
+        if opts.quick {
+            ws = quick_gemm(ws);
+        }
+        let absolute = *fig == 1;
+        let rows = run_gemm_figure(title, xlabel, &ws, reps, absolute);
+        records.push(GemmFigureRecord {
+            figure: format!("fig{fig}"),
+            xlabel: xlabel.to_string(),
+            absolute_times: absolute,
+            rows,
+        });
+    }
+    let shape_note = if opts.quick {
+        "quick (endpoint shapes, batch 20, N/4)"
+    } else if reduced {
+        "reduced shapes (batch 20)"
+    } else {
+        "paper-exact shapes (batch 200)"
+    };
+    let prov = suite_provenance(opts, reps, shape_note);
+    let rec = gemm_perf_record(prov, &records);
+    Ok((records, rec))
+}
+
+// ---------------------------------------------------------------- tables
+
+/// Byte-exact Table 1–2 size accounting.  Deterministic — `Stats::exact`
+/// cells with a zero noise floor, so the compare gate flags *any* change
+/// in converter/inventory accounting.
+pub fn run_tables(opts: &SuiteOpts) -> PerfRecord {
+    let mut rec = PerfRecord::new("tables", suite_provenance(opts, 0, "byte-exact inventory"));
+
+    let mut t1 = BenchTable::new(
+        "Table 1: model sizes (binary / full precision)",
+        &["dataset", "arch", "binary", "fp32", "ratio", "paper"],
+    );
+    const MB: f64 = 1024.0 * 1024.0;
+    const KB: f64 = 1024.0;
+    let lenet_bin = inventory::lenet(true);
+    let lenet_fp = inventory::lenet(false);
+    t1.row(vec![
+        "MNIST".into(),
+        "LeNet".into(),
+        format!("{:.0} kB", lenet_bin.bmx_bytes() as f64 / KB),
+        format!("{:.1} MB", lenet_fp.fp32_bytes() as f64 / MB),
+        format!("{:.1}x", lenet_fp.fp32_bytes() as f64 / lenet_bin.bmx_bytes() as f64),
+        "206kB / 4.6MB".into(),
+    ]);
+    rec.push("table1/lenet/bmx_bytes", Unit::Bytes, Stats::exact(lenet_bin.bmx_bytes() as f64));
+    rec.push("table1/lenet/fp32_bytes", Unit::Bytes, Stats::exact(lenet_fp.fp32_bytes() as f64));
+
+    let rn_bin = inventory::resnet18(64, 10, Stem::Cifar, &[]);
+    let rn_fp = inventory::resnet18(64, 10, Stem::Cifar, &[1, 2, 3, 4]);
+    t1.row(vec![
+        "CIFAR-10".into(),
+        "ResNet-18".into(),
+        format!("{:.1} MB", rn_bin.bmx_bytes() as f64 / MB),
+        format!("{:.1} MB", rn_fp.fp32_bytes() as f64 / MB),
+        format!("{:.1}x", rn_fp.fp32_bytes() as f64 / rn_bin.bmx_bytes() as f64),
+        "1.5MB / 44.7MB (29x)".into(),
+    ]);
+    rec.push("table1/resnet18/bmx_bytes", Unit::Bytes, Stats::exact(rn_bin.bmx_bytes() as f64));
+    rec.push("table1/resnet18/fp32_bytes", Unit::Bytes, Stats::exact(rn_fp.fp32_bytes() as f64));
+    t1.print();
+
+    let mut t2 = BenchTable::new(
+        "Table 2: ResNet-18 ImageNet sizes by full-precision stage",
+        &["fp stage", "size (ours)", "size (paper)"],
+    );
+    let rows: [(&str, &[usize], &str); 7] = [
+        ("none", &[], "3.6MB"),
+        ("1st", &[1], "4.1MB"),
+        ("2nd", &[2], "5.6MB"),
+        ("3rd", &[3], "11.3MB"),
+        ("4th", &[4], "36MB"),
+        ("1st+2nd", &[1, 2], "6.2MB"),
+        ("all", &[1, 2, 3, 4], "47MB"),
+    ];
+    for (label, fp_stages, paper) in rows {
+        let inv = inventory::resnet18(64, 1000, Stem::Imagenet, fp_stages);
+        t2.row(vec![
+            label.into(),
+            format!("{:.1} MB", inv.bmx_bytes() as f64 / MB),
+            paper.into(),
+        ]);
+        rec.push(
+            format!("table2/{label}/bmx_bytes"),
+            Unit::Bytes,
+            Stats::exact(inv.bmx_bytes() as f64),
+        );
+    }
+    t2.print();
+    rec
+}
+
+// ---------------------------------------------------------------- engine
+
+/// Forward latency of the synthetic packed LeNets + the binary-kernel
+/// ablation on the QConv2 GEMM shape.
+fn run_engine(opts: &SuiteOpts) -> Result<PerfRecord> {
+    let reps = opts.reps_or(5, 2);
+    let batches: &[usize] = if opts.quick { &[1, 8] } else { &[1, 8, 32] };
+    let mut rec = PerfRecord::new(
+        "engine",
+        suite_provenance(opts, reps, "synthetic packed LeNets (artifact-free)"),
+    );
+
+    let mut table = BenchTable::new(
+        "Engine inference (rust xnor path, synthetic weights)",
+        &["model", "batch", "ms/batch", "img/s"],
+    );
+    for (name, seed, act_bit) in [("lenet_bin", 1u64, 1u32), ("lenet_q4", 2, 4)] {
+        let engine = Engine::from_bmx(&synth_lenet(seed, act_bit)?)?;
+        let [c, h, w] = engine.input_shape();
+        for &batch in batches {
+            let data: Vec<f32> = (0..batch * c * h * w)
+                .map(|i| ((i % 17) as f32) / 8.5 - 1.0)
+                .collect();
+            let x = Tensor::new(vec![batch, c, h, w], data);
+            let s = time_stats(reps, || engine.forward(&x).unwrap());
+            table.row(vec![
+                name.into(),
+                batch.to_string(),
+                format!("{:.2}", s.median),
+                format!("{:.0}", batch as f64 / (s.median / 1e3).max(1e-9)),
+            ]);
+            rec.push(format!("{name}/batch={batch}/forward"), Unit::Ms, s);
+        }
+    }
+    table.print();
+
+    // Ablation: binary kernel variant on the LeNet QConv2 GEMM
+    // (rows = batch*8*8 im2col rows, K = 32*5*5 = 800, N = 64 filters).
+    let rows = if opts.quick { 8 * 64 } else { 32 * 64 };
+    let (m, n, k) = (rows, 64, 800);
+    let mut rng = crate::data::Rng::new(5);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+    let pb = PackedMatrix::pack_cols(&b, k, n);
+    let mut ab = BenchTable::new(
+        "Ablation: binary kernel variant on the QConv2 GEMM",
+        &["method", "ms/call", "speedup vs first"],
+    );
+    let mut base = None;
+    for method in Method::available().into_iter().filter(|m| m.is_binary()) {
+        let s = time_stats(reps, || xnor_gemm_prepacked(method, &pa, &pb));
+        let b0 = *base.get_or_insert(s.median);
+        ab.row(vec![
+            method.label().into(),
+            format!("{:.3}", s.median),
+            format!("{:.2}x", b0 / s.median.max(1e-12)),
+        ]);
+        rec.push(format!("ablation/qconv2/{}", method.label()), Unit::Ms, s);
+    }
+    ab.print();
+    Ok(rec)
+}
+
+// ----------------------------------------------------------------- serve
+
+fn synth_backend() -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(Engine::from_bmx(&synth_lenet(1, 1)?)?))
+}
+
+/// Pool scaling: workers × closed-loop offered load over the real xnor
+/// engine (synthetic weights).  Each grid point runs `reps` times; req/s
+/// and p95 latency are summarized as stats.
+fn run_serve(opts: &SuiteOpts) -> Result<PerfRecord> {
+    let reps = opts.reps_or(3, 2);
+    let requests = opts.requests_or(192, 48);
+    let workloads = if opts.quick {
+        quick_serve_workloads(requests)
+    } else {
+        serve_scaling_workloads(requests)
+    };
+    let policy = BatchPolicy {
+        max_batch: 32,
+        window: std::time::Duration::from_millis(2),
+    };
+    let backend = synth_backend()?;
+    let mut rec = PerfRecord::new(
+        "serve",
+        suite_provenance(opts, reps, &format!("closed loop, {requests} requests/point")),
+    );
+    let mut table = BenchTable::new(
+        "Serve scaling: offered load vs worker count (median over reps)",
+        &["workers", "producers", "req/s", "p95_ms", "rejected"],
+    );
+    for w in &workloads {
+        let (req_s, p95, rejected) = measure_workload_stats(&backend, w, policy, reps);
+        table.row(vec![
+            w.workers.to_string(),
+            w.producers.to_string(),
+            format!("{:.0}", req_s.median),
+            format!("{:.1}", p95.median),
+            rejected.to_string(),
+        ]);
+        let point = format!("w={},p={}", w.workers, w.producers);
+        rec.push(format!("{point}/req_s"), Unit::ReqPerSec, req_s);
+        rec.push(format!("{point}/p95"), Unit::Ms, p95);
+    }
+    table.print();
+    Ok(rec)
+}
+
+/// Run one serve workload `reps` times; returns (req/s, p95 ms, total
+/// rejected across reps).
+fn measure_workload_stats(
+    backend: &Arc<dyn Backend>,
+    w: &ServeWorkload,
+    policy: BatchPolicy,
+    reps: usize,
+) -> (Stats, Stats, usize) {
+    let mut req_s = Vec::with_capacity(reps);
+    let mut p95 = Vec::with_capacity(reps);
+    let mut rejected = 0usize;
+    for _ in 0..reps.max(1) {
+        let row = measure_serve_workload(backend.clone(), w, policy, 4096);
+        req_s.push(row.req_per_sec());
+        p95.push(row.snapshot.p95.as_secs_f64() * 1e3);
+        rejected += row.rejected;
+    }
+    (Stats::from_samples(&req_s), Stats::from_samples(&p95), rejected)
+}
+
+/// Dynamic-batcher policy sweep at fixed load (1 worker, 4 producers).
+fn run_serve_policy(opts: &SuiteOpts) -> Result<PerfRecord> {
+    let reps = opts.reps_or(3, 2);
+    let requests = opts.requests_or(192, 48);
+    let backend = synth_backend()?;
+    let mut rec = PerfRecord::new(
+        "serve_policy",
+        suite_provenance(
+            opts,
+            reps,
+            &format!("1 worker, 4 producers, {requests} requests/point"),
+        ),
+    );
+    let mut table = BenchTable::new(
+        "Serving throughput: batching policy sweep (median over reps)",
+        &["max_batch", "window", "req/s", "p95_ms"],
+    );
+    let w = ServeWorkload { workers: 1, producers: 4, requests };
+    for point in policy_points(opts.quick) {
+        let (req_s, p95, _) = measure_workload_stats(&backend, &w, point.policy(), reps);
+        table.row(vec![
+            point.max_batch.to_string(),
+            format!("{}ms", point.window_ms),
+            format!("{:.0}", req_s.median),
+            format!("{:.1}", p95.median),
+        ]);
+        let id = format!("policy/{}", point.label());
+        rec.push(format!("{id}/req_s"), Unit::ReqPerSec, req_s);
+        rec.push(format!("{id}/p95"), Unit::Ms, p95);
+    }
+    table.print();
+    println!(
+        "(closed-loop: each producer waits for its reply before sending the next; \
+         b=1/w=0ms is the no-batching baseline)"
+    );
+    Ok(rec)
+}
+
+// --------------------------------------------------------------- profile
+
+/// The PR-7 per-layer profiler as a suite family: one cell per layer
+/// plus the forward total, on the synthetic packed LeNet.
+fn run_profile(opts: &SuiteOpts) -> Result<PerfRecord> {
+    let reps = opts.reps_or(5, 2);
+    let batch = if opts.quick { 4 } else { 8 };
+    let engine = Engine::from_bmx(&synth_lenet(1, 1)?)?;
+    let mut report = engine.profile(batch, reps)?;
+    report.model = "lenet_bin".to_string();
+    print!("{}", report.render_table());
+    let mut rec = report.to_perf_record("bmxnet bench-suite");
+    rec.provenance.quick = opts.quick;
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_family_is_deterministic_and_complete() {
+        let opts = SuiteOpts::default();
+        let a = run_tables(&opts);
+        let b = run_tables(&opts);
+        assert_eq!(a.cells, b.cells, "byte accounting must be deterministic");
+        assert_eq!(a.bench, "tables");
+        // 4 table1 cells + 7 table2 rows
+        assert_eq!(a.cells.len(), 11);
+        assert!(a.cells.iter().all(|c| c.unit == Unit::Bytes && c.stats.mad == 0.0));
+        let lenet = a.cell("table1/lenet/bmx_bytes").unwrap();
+        assert!(lenet.stats.median > 0.0);
+        // provenance populated
+        assert_eq!(a.provenance.tool, "bmxnet bench-suite");
+        assert!(!a.provenance.git.is_empty());
+    }
+
+    #[test]
+    fn unknown_family_errors() {
+        let err = run_family("nope", &SuiteOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("unknown bench family"), "{err}");
+    }
+
+    #[test]
+    fn filter_matches_substrings() {
+        let opts = SuiteOpts { filter: Some("serve".into()), ..Default::default() };
+        let hits: Vec<&str> = FAMILIES.iter().copied().filter(|f| opts.matches(f)).collect();
+        assert_eq!(hits, ["serve", "serve_policy"]);
+        let all = SuiteOpts::default();
+        assert!(FAMILIES.iter().all(|f| all.matches(f)));
+    }
+
+    #[test]
+    fn quick_gemm_family_produces_schema_valid_record() {
+        // tiny but real end-to-end measurement: one figure, quick shapes
+        let opts = SuiteOpts { quick: true, reps: 1, ..Default::default() };
+        let (figs, rec) = run_gemm_figures(&[1], &opts).unwrap();
+        assert_eq!(figs.len(), 1);
+        assert_eq!(rec.bench, "gemm");
+        assert!(rec.provenance.quick);
+        assert_eq!(rec.provenance.reps, 1);
+        // 2 quick x-points × (available methods + bin+xnor_omp)
+        let per_row = crate::gemm::Method::available().len() + 1;
+        assert_eq!(rec.cells.len(), 2 * per_row);
+        let parsed = PerfRecord::parse(&rec.render_json()).unwrap();
+        assert_eq!(parsed, rec);
+        assert!(rec.cells.iter().any(|c| c.id.starts_with("fig1/C=64/")), "{:?}", rec.cells[0].id);
+    }
+}

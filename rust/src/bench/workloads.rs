@@ -85,6 +85,24 @@ pub fn fig2_workloads(reduced: bool) -> Vec<GemmWorkload> {
         .collect()
 }
 
+/// Shrink a figure's workload grid for `bench-suite --quick` (the CI
+/// perf-smoke size): keep only the first and last x points (the sweep's
+/// endpoints still exercise the small- and large-K regimes) and cut the
+/// batch-driven N dimension 4× more.  Quick numbers are only compared
+/// against other quick numbers — `bench-compare` refuses records of
+/// different families, and the provenance block says `quick: true`.
+pub fn quick_gemm(mut ws: Vec<GemmWorkload>) -> Vec<GemmWorkload> {
+    if ws.len() > 2 {
+        let last = ws.pop().unwrap();
+        ws.truncate(1);
+        ws.push(last);
+    }
+    for w in &mut ws {
+        w.n = (w.n / 4).max(64);
+    }
+    ws
+}
+
 /// Figure 3: vary kernel size; channels 256, filters 64.
 pub fn fig3_workloads(reduced: bool) -> Vec<GemmWorkload> {
     (1..=8)
@@ -138,6 +156,17 @@ mod tests {
             assert_eq!(f.k, r.k);
             assert_eq!(f.n, 10 * r.n);
         }
+    }
+
+    #[test]
+    fn quick_keeps_endpoints_and_shrinks_n() {
+        let full = fig2_workloads(true);
+        let q = quick_gemm(full.clone());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].x, full[0].x);
+        assert_eq!(q[1].x, full.last().unwrap().x);
+        assert_eq!(q[0].n, (full[0].n / 4).max(64));
+        assert_eq!(q[0].k, full[0].k, "quick must not change K (the kernel regime)");
     }
 
     #[test]

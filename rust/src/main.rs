@@ -10,19 +10,22 @@
 //!   serve    --models-dir D [...] multi-model HTTP gateway (sharded pools)
 //!   synth-models --out D          write synthetic .bmx models (smoke/demo)
 //!   bench-gemm --figure 1|2|3     reproduce the paper's GEMM figures
+//!   bench-suite --json DIR        run every bench family -> perf records
+//!   bench-compare BASE NEW        noise-aware perf-record diff (CI gate)
 //!
 //! Run `bmxnet <cmd> --help` for per-command flags.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use repro::bench::harness::fmt_ms;
 use repro::bench::{
-    fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure_methods, write_gemm_json,
-    GemmFigureRecord, GemmWorkload,
+    compare, fig1_workloads, fig2_workloads, fig3_workloads, run_gemm_figure_methods, run_suite,
+    write_gemm_json, CompareOpts, GemmFigureRecord, GemmWorkload, PerfRecord, Provenance,
+    SuiteOpts,
 };
 use repro::gemm::{simd, Method};
 use repro::coordinator::BatchPolicy;
@@ -44,6 +47,11 @@ fn main() {
 
 fn dispatch(args: &[String]) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
+    // bench-compare takes positional BASE NEW paths; everything else is
+    // pure --flag commands.
+    if cmd == "bench-compare" {
+        return cmd_bench_compare(&args[1..]);
+    }
     let flags = Flags::parse(&args[1.min(args.len())..])?;
     match cmd {
         "info" => cmd_info(&flags),
@@ -54,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&flags),
         "synth-models" => cmd_synth_models(&flags),
         "bench-gemm" => cmd_bench_gemm(&flags),
+        "bench-suite" => cmd_bench_suite(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -80,7 +89,12 @@ fn print_help() {
          \x20 synth-models --out D [--seed S]         synthetic lenet_bin/_q4 .bmx\n\
          \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\
          \x20         [--json F.json]                 record rows to BENCH_gemm.json\n\
-         \x20         [--method LABEL]                time one method (see labels below)\n\n\
+         \x20         [--method LABEL]                time one method (see labels below)\n\
+         \x20 bench-suite [--json DIR] [--quick] [--full] [--reps N]\n\
+         \x20         [--requests N] [--filter FAM]   run every bench family; one\n\
+         \x20                                         BENCH_<family>.json per family\n\
+         \x20 bench-compare BASE NEW [--fail-on PCT] [--min-effect MADX] [--json]\n\
+         \x20         files or dirs of perf records;  exits non-zero on regression\n\n\
          common: --artifacts DIR (default ./artifacts)\n\
          env:    BMXNET_FORCE_SCALAR=1 pins the scalar popcount kernel\n\
          gemm methods on this machine: {}",
@@ -463,13 +477,18 @@ fn cmd_bench_gemm(flags: &Flags) -> Result<()> {
         });
     }
     if let Some(path) = flags.str("json") {
-        let provenance = format!(
-            "bmxnet bench-gemm · {} · kernel {} · {} shapes · best-of-{reps}",
-            std::env::consts::ARCH,
-            simd::best_kernel().label(),
-            if reduced { "reduced (batch 20)" } else { "paper-exact (batch 200)" },
+        let mut provenance = Provenance::capture("bmxnet bench-gemm");
+        provenance.reps = reps;
+        provenance.note = format!(
+            "{}{}",
+            if reduced { "reduced shapes (batch 20)" } else { "paper-exact shapes (batch 200)" },
+            if single {
+                format!(" · single method {}", methods[0].label())
+            } else {
+                String::new()
+            },
         );
-        write_gemm_json(path, &provenance, &records)
+        write_gemm_json(path, provenance, &records)
             .with_context(|| format!("write {path:?}"))?;
         println!("recorded {} figure(s) to {path}", records.len());
     }
@@ -477,4 +496,149 @@ fn cmd_bench_gemm(flags: &Flags) -> Result<()> {
         println!("(reduced shapes: batch 20; pass --full for paper-exact batch 200)");
     }
     Ok(())
+}
+
+/// Run every bench family through the shared harness, one perf record
+/// per family (`BENCH_<family>.json` under `--json DIR`).  CLI flags
+/// override the `BENCH_*` env knobs the `cargo bench` targets read.
+fn cmd_bench_suite(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["json", "quick", "full", "reps", "requests", "filter", "artifacts"])?;
+    let mut opts = SuiteOpts::from_env();
+    opts.quick = opts.quick || flags.bool("quick");
+    opts.full = opts.full || flags.bool("full");
+    if let Some(r) = flags.str("reps") {
+        opts.reps = r.parse().with_context(|| format!("--reps {r:?}"))?;
+    }
+    if let Some(r) = flags.str("requests") {
+        opts.requests = r.parse().with_context(|| format!("--requests {r:?}"))?;
+    }
+    opts.filter = flags.str("filter").map(str::to_string);
+    let out = match flags.str("json") {
+        None => None,
+        Some("true") => bail!("--json needs a directory (e.g. --json out/)"),
+        Some(dir) => Some(PathBuf::from(dir)),
+    };
+    let recs = run_suite(&opts, out.as_deref())?;
+    println!(
+        "bench-suite: {} family record(s){}",
+        recs.len(),
+        match &out {
+            Some(d) => format!(" in {}", d.display()),
+            None => " (pass --json DIR to save records)".to_string(),
+        }
+    );
+    Ok(())
+}
+
+/// `bmxnet bench-compare BASE NEW` — BASE/NEW are either two record
+/// files or two directories of `BENCH_*.json` records.  Exits non-zero
+/// when any cell regresses past the noise floor and `--fail-on`.
+fn cmd_bench_compare(args: &[String]) -> Result<()> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut opts = CompareOpts::default();
+    let mut json = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--fail-on" | "--min-effect" => {
+                let key = args[i].clone();
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("{key} needs a value"))?
+                    .parse::<f64>()
+                    .with_context(|| format!("{key} {:?}", args[i + 1]))?;
+                if key == "--fail-on" {
+                    opts.fail_on_pct = v;
+                } else {
+                    opts.min_effect_mad = v;
+                }
+                i += 2;
+            }
+            "--json" => {
+                json = true;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: bmxnet bench-compare BASE NEW [--fail-on PCT] \
+                     [--min-effect MADX] [--json]"
+                );
+                return Ok(());
+            }
+            flag if flag.starts_with("--") => bail!(
+                "unknown flag {flag} (allowed: --fail-on --min-effect --json)"
+            ),
+            _ => {
+                paths.push(PathBuf::from(&args[i]));
+                i += 1;
+            }
+        }
+    }
+    let [base, new] = paths.as_slice() else {
+        bail!("bench-compare needs exactly two paths (got {})", paths.len());
+    };
+    let pairs = collect_record_pairs(base, new)?;
+    let mut failures = 0usize;
+    for (base_rec, new_rec) in &pairs {
+        let report = compare(base_rec, new_rec, opts)?;
+        if json {
+            print!("{}", report.render_json());
+        } else {
+            print!("{}", report.render_table());
+        }
+        if report.failed() {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        bail!("bench-compare: {failures} famil{} with regressions at/above {:.1}%",
+            if failures == 1 { "y" } else { "ies" },
+            opts.fail_on_pct);
+    }
+    println!("bench-compare: OK ({} famil{})", pairs.len(),
+        if pairs.len() == 1 { "y" } else { "ies" });
+    Ok(())
+}
+
+/// Resolve BASE/NEW into aligned record pairs: two files load directly;
+/// two directories match on their `BENCH_*.json` file names (families
+/// present on one side only are reported, not failed — kernel sets and
+/// bench coverage legitimately differ across machines and commits).
+fn collect_record_pairs(base: &Path, new: &Path) -> Result<Vec<(PerfRecord, PerfRecord)>> {
+    if base.is_dir() != new.is_dir() {
+        bail!("cannot compare a directory with a file: {base:?} vs {new:?}");
+    }
+    if !base.is_dir() {
+        return Ok(vec![(PerfRecord::load(base)?, PerfRecord::load(new)?)]);
+    }
+    let names = |dir: &Path| -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
+    };
+    let base_names = names(base)?;
+    let new_names = names(new)?;
+    let mut pairs = Vec::new();
+    for name in &base_names {
+        if new_names.contains(name) {
+            pairs.push((PerfRecord::load(base.join(name))?, PerfRecord::load(new.join(name))?));
+        } else {
+            println!("bench-compare: {name} only in base {base:?} (skipped)");
+        }
+    }
+    for name in &new_names {
+        if !base_names.contains(name) {
+            println!("bench-compare: {name} only in new {new:?} (skipped)");
+        }
+    }
+    if pairs.is_empty() {
+        bail!("no common BENCH_*.json records between {base:?} and {new:?}");
+    }
+    Ok(pairs)
 }

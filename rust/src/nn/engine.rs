@@ -97,18 +97,19 @@ impl Engine {
             .collect();
         let x = Tensor::new(vec![n, c, h, w], data);
         let prof = Profiler::new();
-        let t0 = Instant::now();
+        let mut totals = Vec::with_capacity(reps);
         for _ in 0..reps {
+            let t0 = Instant::now();
             self.forward_with(&x, Some(&prof))?;
+            totals.push(t0.elapsed());
         }
-        let total = t0.elapsed();
         Ok(ProfileReport::from_runs(
             self.arch(),
             n,
             reps,
             self.dispatch_summary(),
             crate::gemm::simd::force_scalar(),
-            total,
+            &totals,
             prof.take(),
         ))
     }
@@ -265,6 +266,8 @@ mod tests {
         assert_eq!(names.first(), Some(&"conv1"));
         assert_eq!(names.last(), Some(&"fc2"));
         assert!(r.layers.iter().any(|l| l.kind == "qconv"));
+        assert!(r.layers.iter().all(|l| l.stats.reps == 2 && l.stats.min <= l.stats.median));
+        assert!(r.total.median > 0.0);
         let json = r.render_json();
         let v = crate::model::json::parse(&json).unwrap();
         assert_eq!(v.get("arch").and_then(|a| a.as_str()), Some("lenet"));

@@ -22,7 +22,7 @@ pub mod trace;
 
 pub use counters::StageStats;
 pub use journal::Journal;
-pub use profiler::{layer, LayerRecord, ProfileReport, Profiler};
+pub use profiler::{layer, LayerProfile, LayerRecord, ProfileReport, Profiler};
 pub use trace::{BatchTiming, Stage, Trace, TraceRecord};
 
 /// Environment variable holding the slow-request threshold in µs.

@@ -7,15 +7,19 @@
 //! counting allocator). With `Some(prof)` it times the closure, resolves
 //! the GEMM Method×Kernel labels, and appends a [`LayerRecord`].
 //!
-//! [`ProfileReport`] aggregates records across repetitions and renders
-//! the table behind `bmxnet profile` / `GET /v1/models/{name}/profile`,
-//! plus a JSON document in the same hand-rolled self-parse-validated
-//! style as `bench/record.rs` (shared `"schema": 1` + provenance keys,
-//! so perf tooling can ingest both).
+//! [`ProfileReport`] aggregates records across repetitions into
+//! per-layer [`Stats`] and renders the table behind `bmxnet profile` /
+//! `GET /v1/models/{name}/profile`.  Its JSON *is* a schema-2
+//! [`PerfRecord`] (bench `profile`, one `layer/<name>` cell per layer
+//! plus `forward/total`, per-layer metadata in cell notes) with a few
+//! extra top-level keys (`model`/`arch`/`batch`/`total_ms`) — so profile
+//! dumps feed straight into `bmxnet bench-compare`.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::bench::record::{json_str, Cell, PerfRecord, Provenance, Unit};
+use crate::bench::Stats;
 use crate::gemm::{dispatch, Method};
 
 /// One timed layer execution (or the aggregate of several reps).
@@ -89,6 +93,19 @@ pub fn layer<T>(
     }
 }
 
+/// One layer aggregated over reps: noise-aware time stats plus the
+/// metadata the single-run [`LayerRecord`] carried.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    pub kind: &'static str,
+    /// Per-rep wall time in ms (median/min/MAD).
+    pub stats: Stats,
+    pub bytes: usize,
+    pub method: Option<&'static str>,
+    pub kernel: Option<&'static str>,
+}
+
 /// Aggregated per-layer profile of one model.
 #[derive(Debug)]
 pub struct ProfileReport {
@@ -101,57 +118,72 @@ pub struct ProfileReport {
     /// [`crate::nn::Engine::dispatch_summary`] at profile time.
     pub dispatch: String,
     pub force_scalar: bool,
-    /// Mean wall time of one full forward.
-    pub total: Duration,
-    /// Per layer, forward order, wall = mean over reps.
-    pub layers: Vec<LayerRecord>,
+    /// Full-forward wall time stats (ms) over reps.
+    pub total: Stats,
+    /// Per layer, forward order, stats over reps.
+    pub layers: Vec<LayerProfile>,
 }
 
 impl ProfileReport {
     /// Aggregate raw records (reps × layers, execution order) by layer
-    /// name: wall times are summed then divided by `reps`.
+    /// name: each layer's per-rep wall times become its [`Stats`].
+    /// `totals` is one full-forward duration per rep.
     pub fn from_runs(
         arch: &str,
         batch: usize,
         reps: usize,
         dispatch: String,
         force_scalar: bool,
-        total: Duration,
+        totals: &[Duration],
         records: Vec<LayerRecord>,
     ) -> ProfileReport {
-        let reps = reps.max(1);
-        let mut layers: Vec<LayerRecord> = Vec::new();
+        let mut layers: Vec<(LayerProfile, Vec<f64>)> = Vec::new();
         for rec in records {
-            match layers.iter_mut().find(|l| l.name == rec.name) {
-                Some(l) => l.wall += rec.wall,
-                None => layers.push(rec),
+            let ms = rec.wall.as_secs_f64() * 1e3;
+            match layers.iter_mut().find(|(l, _)| l.name == rec.name) {
+                Some((_, samples)) => samples.push(ms),
+                None => layers.push((
+                    LayerProfile {
+                        name: rec.name,
+                        kind: rec.kind,
+                        stats: Stats::exact(0.0),
+                        bytes: rec.bytes,
+                        method: rec.method,
+                        kernel: rec.kernel,
+                    },
+                    vec![ms],
+                )),
             }
         }
-        for l in &mut layers {
-            l.wall /= reps as u32;
-        }
+        let layers = layers
+            .into_iter()
+            .map(|(mut l, samples)| {
+                l.stats = Stats::from_samples(&samples);
+                l
+            })
+            .collect();
         ProfileReport {
             model: arch.to_string(),
             arch: arch.to_string(),
             batch,
-            reps,
+            reps: reps.max(1),
             dispatch,
             force_scalar,
-            total: total / reps as u32,
+            total: Stats::from_durations(totals),
             layers,
         }
     }
 
-    fn layer_sum(&self) -> Duration {
-        self.layers.iter().map(|l| l.wall).sum()
+    fn layer_sum_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.median).sum()
     }
 
-    /// Human table: one row per layer plus a sum line.
+    /// Human table: one row per layer (median ms) plus a sum line.
     pub fn render_table(&self) -> String {
-        let sum = self.layer_sum().max(Duration::from_nanos(1));
+        let sum = self.layer_sum_ms().max(1e-9);
         let mut out = format!(
             "profile: {} (arch {}, batch {}, reps {})\ndispatch: {} (force_scalar={})\n\
-             {:<14} {:>10} {:>6}  {:>10}  {:<12} {}\n",
+             {:<14} {:>10} {:>10} {:>6}  {:>10}  {:<12} {}\n",
             self.model,
             self.arch,
             self.batch,
@@ -160,6 +192,7 @@ impl ProfileReport {
             self.force_scalar,
             "layer",
             "ms",
+            "±mad",
             "pct",
             "kbytes",
             "method",
@@ -167,84 +200,63 @@ impl ProfileReport {
         );
         for l in &self.layers {
             out.push_str(&format!(
-                "{:<14} {:>10.3} {:>5.1}%  {:>10}  {:<12} {}\n",
+                "{:<14} {:>10.3} {:>10.3} {:>5.1}%  {:>10}  {:<12} {}\n",
                 l.name,
-                l.wall.as_secs_f64() * 1e3,
-                100.0 * l.wall.as_secs_f64() / sum.as_secs_f64(),
+                l.stats.median,
+                l.stats.mad,
+                100.0 * l.stats.median / sum,
                 l.bytes / 1024,
                 l.method.unwrap_or("-"),
                 l.kernel.unwrap_or("-"),
             ));
         }
         out.push_str(&format!(
-            "{:<14} {:>10.3}   (forward total {:.3} ms)\n",
+            "{:<14} {:>10.3}   (forward total median {:.3} ms, min {:.3}, mad {:.3})\n",
             "sum",
-            self.layer_sum().as_secs_f64() * 1e3,
-            self.total.as_secs_f64() * 1e3,
+            self.layer_sum_ms(),
+            self.total.median,
+            self.total.min,
+            self.total.mad,
         ));
         out
     }
 
-    /// JSON document in the `bench/record.rs` family: same top-level
-    /// provenance keys, layers as an array of objects. Optional GEMM
-    /// labels are omitted (not null) for layers without a GEMM.
-    pub fn render_json(&self) -> String {
-        let sum = self.layer_sum().max(Duration::from_nanos(1));
-        let mut s = String::with_capacity(1024);
-        s.push_str("{\n");
-        s.push_str("  \"schema\": 1,\n");
-        s.push_str("  \"bench\": \"profile\",\n");
-        s.push_str(&format!("  \"model\": {},\n", json_str(&self.model)));
-        s.push_str(&format!("  \"arch\": {},\n", json_str(&self.arch)));
-        s.push_str(&format!("  \"batch\": {},\n", self.batch));
-        s.push_str(&format!("  \"reps\": {},\n", self.reps));
-        s.push_str(&format!("  \"dispatch\": {},\n", json_str(&self.dispatch)));
-        s.push_str(&format!("  \"force_scalar\": {},\n", self.force_scalar));
-        s.push_str(&format!(
-            "  \"total_ms\": {:.6},\n",
-            self.total.as_secs_f64() * 1e3
-        ));
-        s.push_str("  \"layers\": [\n");
-        for (i, l) in self.layers.iter().enumerate() {
-            s.push_str(&format!(
-                "    {{\"name\": {}, \"kind\": {}, \"ms\": {:.6}, \"pct\": {:.2}, \"bytes\": {}",
-                json_str(&l.name),
-                json_str(l.kind),
-                l.wall.as_secs_f64() * 1e3,
-                100.0 * l.wall.as_secs_f64() / sum.as_secs_f64(),
-                l.bytes,
-            ));
+    /// Convert to the schema-2 perf record: `forward/total` plus one
+    /// `layer/<name>` cell per layer, metadata in cell notes
+    /// (`kind=… method=… kernel=… bytes=…`).  This is the `profile`
+    /// family of `bmxnet bench-suite` / `bench-compare`.
+    pub fn to_perf_record(&self, tool: &str) -> PerfRecord {
+        let mut prov = Provenance::capture(tool);
+        prov.reps = self.reps;
+        prov.note = format!("model {} · arch {} · batch {}", self.model, self.arch, self.batch);
+        let mut rec = PerfRecord::new("profile", prov);
+        rec.push("forward/total", Unit::Ms, self.total);
+        for l in &self.layers {
+            let mut note = format!("kind={}", l.kind);
             if let Some(m) = l.method {
-                s.push_str(&format!(", \"method\": {}", json_str(m)));
+                note.push_str(&format!(" method={m}"));
             }
             if let Some(k) = l.kernel {
-                s.push_str(&format!(", \"kernel\": {}", json_str(k)));
+                note.push_str(&format!(" kernel={k}"));
             }
-            s.push('}');
-            s.push_str(if i + 1 < self.layers.len() { ",\n" } else { "\n" });
+            note.push_str(&format!(" bytes={}", l.bytes));
+            rec.cells
+                .push(Cell::new(format!("layer/{}", l.name), Unit::Ms, l.stats).with_note(note));
         }
-        s.push_str("  ]\n}\n");
-        s
+        rec
     }
-}
 
-/// Minimal JSON string escaper (same contract as `serve::http`'s).
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
+    /// JSON document: the perf record with extra top-level convenience
+    /// keys (`model`/`arch`/`batch`/`total_ms`).  Parseable as a plain
+    /// [`PerfRecord`], so saved profiles diff with `bmxnet bench-compare`.
+    pub fn render_json(&self) -> String {
+        self.to_perf_record("bmxnet profile").render_json_extra(&[
+            ("model", json_str(&self.model)),
+            ("arch", json_str(&self.arch)),
+            ("batch", self.batch.to_string()),
+            ("total_ms", format!("{:.6}", self.total.median)),
+        ])
     }
-    out.push('"');
-    out
 }
 
 #[cfg(test)]
@@ -299,31 +311,27 @@ mod tests {
     #[test]
     fn from_runs_aggregates_by_name_across_reps() {
         let records = vec![rec("a", 100), rec("b", 300), rec("a", 300), rec("b", 500)];
-        let r = ProfileReport::from_runs(
-            "lenet",
-            4,
-            2,
-            "test".into(),
-            false,
-            Duration::from_micros(1300),
-            records,
-        );
+        let totals = [Duration::from_micros(400), Duration::from_micros(900)];
+        let r = ProfileReport::from_runs("lenet", 4, 2, "test".into(), false, &totals, records);
         assert_eq!(r.layers.len(), 2);
         assert_eq!(r.layers[0].name, "a");
-        assert_eq!(r.layers[0].wall, Duration::from_micros(200));
-        assert_eq!(r.layers[1].wall, Duration::from_micros(400));
-        assert_eq!(r.total, Duration::from_micros(650));
+        // median of {0.1ms, 0.3ms}
+        assert!((r.layers[0].stats.median - 0.2).abs() < 1e-9);
+        assert_eq!(r.layers[0].stats.reps, 2);
+        assert!((r.layers[1].stats.median - 0.4).abs() < 1e-9);
+        assert!((r.layers[0].stats.min - 0.1).abs() < 1e-9, "min is the noise-free bound");
+        assert!((r.total.median - 0.65).abs() < 1e-9);
+        assert_eq!(r.total.reps, 2);
     }
 
-    #[test]
-    fn json_report_self_parses_with_expected_shape() {
-        let r = ProfileReport::from_runs(
+    fn sample_report() -> ProfileReport {
+        ProfileReport::from_runs(
             "lenet",
             2,
             1,
             "x86_64 · method xnor_fused · kernel avx2".into(),
             false,
-            Duration::from_micros(900),
+            &[Duration::from_micros(900)],
             vec![
                 rec("conv1", 600),
                 LayerRecord {
@@ -335,17 +343,43 @@ mod tests {
                     kernel: None,
                 },
             ],
-        );
-        let doc = crate::model::json::parse(&r.render_json()).unwrap();
-        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("profile"));
+        )
+    }
+
+    #[test]
+    fn perf_record_has_total_and_annotated_layer_cells() {
+        let rec = sample_report().to_perf_record("unit test");
+        assert_eq!(rec.bench, "profile");
+        assert_eq!(rec.provenance.tool, "unit test");
+        assert_eq!(rec.provenance.reps, 1);
+        assert!(rec.provenance.note.contains("batch 2"), "{}", rec.provenance.note);
+        let total = rec.cell("forward/total").unwrap();
+        assert!((total.stats.median - 0.9).abs() < 1e-9);
+        let conv = rec.cell("layer/conv1").unwrap();
+        assert!((conv.stats.median - 0.6).abs() < 1e-9);
+        assert!(conv.note.contains("kind=conv_f32"));
+        assert!(conv.note.contains("method=xnor_fused") && conv.note.contains("kernel=avx2"));
+        assert!(conv.note.contains("bytes=4096"));
+        let bn = rec.cell("layer/bn1").unwrap();
+        assert!(!bn.note.contains("method="), "non-gemm layer has no method: {}", bn.note);
+    }
+
+    #[test]
+    fn json_report_parses_as_perf_record_with_extras() {
+        let r = sample_report();
+        let text = r.render_json();
+        // parseable as a plain schema-2 record (extras ignored)…
+        let rec = PerfRecord::parse(&text).unwrap();
+        assert_eq!(rec.bench, "profile");
+        assert_eq!(rec.cells.len(), 3);
+        // …and the convenience keys are there for humans/dashboards
+        let doc = crate::model::json::parse(&text).unwrap();
+        assert_eq!(doc.get("model").and_then(|v| v.as_str()), Some("lenet"));
+        assert_eq!(doc.get("arch").and_then(|v| v.as_str()), Some("lenet"));
         assert_eq!(doc.get("batch").and_then(|v| v.as_usize()), Some(2));
-        let layers = doc.get("layers").and_then(|v| v.as_array()).unwrap();
-        assert_eq!(layers.len(), 2);
-        assert_eq!(layers[0].get("name").and_then(|v| v.as_str()), Some("conv1"));
-        assert_eq!(layers[0].get("kernel").and_then(|v| v.as_str()), Some("avx2"));
-        assert!(layers[1].get("kernel").is_none(), "non-gemm layer has no kernel key");
         assert!(doc.get("total_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
         let table = r.render_table();
         assert!(table.contains("conv1") && table.contains("xnor_fused"));
+        assert!(table.contains("mad"), "table reports the noise floor");
     }
 }

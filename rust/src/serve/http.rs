@@ -480,10 +480,13 @@ fn list_models(registry: &ModelRegistry) -> HttpResponse {
             )
         })
         .collect();
+    let prov = crate::bench::Provenance::capture("bmxnet serve");
     HttpResponse::json(
         200,
         format!(
-            "{{\"models\": [{}], \"gemm_dispatch\": {}, \"force_scalar\": {}}}",
+            "{{\"models\": [{}], \"gemm_dispatch\": {}, \"force_scalar\": {}, \
+             \"build_info\": {{\"version\": {}, \"git\": {}, \"rustc\": {}, \
+             \"features\": {}, \"force_scalar\": {}}}}}",
             items.join(", "),
             json_string(&format!(
                 "method {} · kernel {}",
@@ -491,6 +494,11 @@ fn list_models(registry: &ModelRegistry) -> HttpResponse {
                 crate::gemm::simd::best_kernel().label()
             )),
             crate::gemm::simd::force_scalar(),
+            json_string(&prov.version),
+            json_string(&prov.git),
+            json_string(&prov.rustc),
+            json_string(&prov.features),
+            prov.force_scalar,
         ),
     )
 }

@@ -40,6 +40,23 @@ pub fn render(registry: &ModelRegistry, obs: &Obs) -> String {
         .collect();
 
     let mut out = String::new();
+    // Build identity first, so any scrape can be joined to the binary
+    // that produced it (the same provenance block perf records carry).
+    let prov = crate::bench::Provenance::capture("bmxnet serve");
+    push_family(
+        &mut out,
+        "bmxnet_build_info",
+        "gauge",
+        "Build identity; value is constant 1, the labels carry the info.",
+    );
+    out.push_str(&format!(
+        "bmxnet_build_info{{version=\"{}\",git_sha=\"{}\",features=\"{}\",force_scalar=\"{}\"}} 1\n",
+        label_escape(&prov.version),
+        label_escape(&prov.git),
+        label_escape(&prov.features),
+        prov.force_scalar,
+    ));
+
     push_family(&mut out, "bmxnet_models_loaded", "gauge", "Resident models in the registry.");
     out.push_str(&format!("bmxnet_models_loaded {}\n", rows.len()));
 
@@ -230,6 +247,13 @@ mod tests {
         let reg = ModelRegistry::new(RegistryConfig::new(std::env::temp_dir().join("nope")));
         let obs = Obs::with_slots(8);
         let text = render(&reg, &obs);
+        assert!(text.contains("# TYPE bmxnet_build_info gauge"), "{text}");
+        assert!(text.contains("bmxnet_build_info{version=\""), "{text}");
+        assert!(
+            text.contains("git_sha=\"") && text.contains("force_scalar=\""),
+            "{text}"
+        );
+        assert!(text.contains("} 1\n"), "build_info gauge value is 1: {text}");
         assert!(text.contains("bmxnet_models_loaded 0\n"), "{text}");
         assert!(text.contains("# TYPE bmxnet_requests_total counter"), "{text}");
         // process-wide families render even with no models

@@ -1,0 +1,200 @@
+//! End-to-end tests of the perf-regression gate: `bmxnet bench-suite`
+//! writing schema-2 records and `bmxnet bench-compare` judging them,
+//! including the non-zero exit path CI depends on.
+//!
+//! Runs the real binary (`CARGO_BIN_EXE_bmxnet`); the suite invocation
+//! uses `--filter tables` (byte-exact, deterministic, no timing) so the
+//! test is fast and flake-free.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use repro::bench::harness::Stats;
+use repro::bench::{PerfRecord, Provenance, Unit};
+
+fn tmp_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bench_compare_{}_{case}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bmxnet(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_bmxnet"))
+        .args(args)
+        .output()
+        .expect("run bmxnet")
+}
+
+fn write_record(path: &Path, bench: &str, cells: &[(&str, Unit, f64, f64)]) {
+    let mut rec = PerfRecord::new(bench, Provenance::capture("bench_compare test"));
+    for &(id, unit, median, mad) in cells {
+        rec.push(id, unit, Stats { median, min: median, mad, reps: 3 });
+    }
+    rec.write(path).unwrap();
+}
+
+#[test]
+fn suite_quick_emits_schema_valid_records_and_self_compares_clean() {
+    let dir = tmp_dir("suite");
+    let out = bmxnet(&[
+        "bench-suite",
+        "--quick",
+        "--filter",
+        "tables",
+        "--json",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "bench-suite failed: {}", String::from_utf8_lossy(&out.stderr));
+    let path = dir.join("BENCH_tables.json");
+    let rec = PerfRecord::load(&path).expect("schema-valid record on disk");
+    assert_eq!(rec.bench, "tables");
+    assert!(!rec.cells.is_empty());
+    // provenance is populated, not defaulted
+    assert_eq!(rec.provenance.tool, "bmxnet bench-suite");
+    assert!(!rec.provenance.git.is_empty());
+    assert!(!rec.provenance.rustc.is_empty());
+    assert!(rec.provenance.dispatch.contains("kernel"));
+    assert!(rec.provenance.quick);
+
+    // self-compare (dir vs dir) must pass with zero regressions
+    let out = bmxnet(&["bench-compare", dir.to_str().unwrap(), dir.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bench-compare: OK"), "{stdout}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_regression_exits_nonzero() {
+    let dir = tmp_dir("inject");
+    let base = dir.join("base.json");
+    let new = dir.join("new.json");
+    write_record(&base, "gemm", &[("fig1/C=64/naive", Unit::Ms, 10.0, 0.0)]);
+    write_record(&new, "gemm", &[("fig1/C=64/naive", Unit::Ms, 15.0, 0.0)]);
+    let out = bmxnet(&["bench-compare", base.to_str().unwrap(), new.to_str().unwrap()]);
+    assert!(!out.status.success(), "a 50% regression must exit non-zero");
+    let all = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(all.contains("REGRESSED"), "{all}");
+
+    // raising --fail-on above the delta turns the gate green
+    let out = bmxnet(&[
+        "bench-compare",
+        base.to_str().unwrap(),
+        new.to_str().unwrap(),
+        "--fail-on",
+        "60",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn noisy_delta_is_suppressed_until_min_effect_shrinks() {
+    let dir = tmp_dir("noise");
+    let base = dir.join("base.json");
+    let new = dir.join("new.json");
+    // +40% but the MAD floor (3 × 0.2 = 0.6) swallows the 0.4ms delta
+    write_record(&base, "gemm", &[("a/b/c", Unit::Ms, 1.0, 0.2)]);
+    write_record(&new, "gemm", &[("a/b/c", Unit::Ms, 1.4, 0.2)]);
+    let out = bmxnet(&["bench-compare", base.to_str().unwrap(), new.to_str().unwrap()]);
+    assert!(out.status.success(), "within-noise delta must pass");
+    // shrink the floor below the delta -> regression
+    let out = bmxnet(&[
+        "bench-compare",
+        base.to_str().unwrap(),
+        new.to_str().unwrap(),
+        "--min-effect",
+        "1",
+    ]);
+    assert!(!out.status.success(), "1xMAD floor (0.2) < 0.4 delta must fail");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_schema_and_families_are_loud_errors() {
+    let dir = tmp_dir("mismatch");
+    let base = dir.join("base.json");
+    let new = dir.join("new.json");
+    write_record(&base, "gemm", &[("a", Unit::Ms, 1.0, 0.0)]);
+    write_record(&new, "serve", &[("a", Unit::Ms, 1.0, 0.0)]);
+    let out = bmxnet(&["bench-compare", base.to_str().unwrap(), new.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("different bench families"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // old/foreign schema version: refuse, never mis-align
+    std::fs::write(&new, "{\"schema\": 1, \"bench\": \"gemm\", \"cells\": []}").unwrap();
+    let out = bmxnet(&["bench-compare", base.to_str().unwrap(), new.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("schema"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_cells_warn_but_pass_and_json_verdict_reports_them() {
+    let dir = tmp_dir("missing");
+    let base = dir.join("base.json");
+    let new = dir.join("new.json");
+    write_record(
+        &base,
+        "gemm",
+        &[("keep", Unit::Ms, 1.0, 0.0), ("gone", Unit::Ms, 2.0, 0.0)],
+    );
+    write_record(
+        &new,
+        "gemm",
+        &[("keep", Unit::Ms, 1.0, 0.0), ("added", Unit::Ms, 3.0, 0.0)],
+    );
+    let out = bmxnet(&[
+        "bench-compare",
+        base.to_str().unwrap(),
+        new.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(out.status.success(), "missing cells alone must not fail the gate");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"failed\": false"), "{stdout}");
+    assert!(stdout.contains("\"missing\": 2"), "{stdout}");
+    assert!(stdout.contains("\"verdict\": \"removed\""), "{stdout}");
+    assert!(stdout.contains("\"verdict\": \"new cell\""), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn record_round_trips_through_disk_and_reqs_direction() {
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join("rec.json");
+    let mut rec = PerfRecord::new("serve", Provenance::capture("roundtrip"));
+    rec.provenance.reps = 5;
+    rec.provenance.quick = true;
+    rec.provenance.note = "unit \"quoted\" note".into();
+    rec.push("w=1,p=4/req_s", Unit::ReqPerSec, Stats { median: 812.5, min: 800.0, mad: 6.25, reps: 5 });
+    rec.push("w=1,p=4/p95", Unit::Ms, Stats::exact(3.0));
+    rec.write(&path).unwrap();
+    let back = PerfRecord::load(&path).unwrap();
+    assert_eq!(back, rec);
+    assert!(!back.cell("w=1,p=4/req_s").unwrap().unit.lower_is_better());
+
+    // throughput drop regresses end-to-end through the binary
+    let worse = dir.join("worse.json");
+    let mut w = back.clone();
+    w.cells[0].stats = Stats { median: 500.0, min: 500.0, mad: 6.25, reps: 5 };
+    w.write(&worse).unwrap();
+    let out = bmxnet(&["bench-compare", path.to_str().unwrap(), worse.to_str().unwrap()]);
+    assert!(!out.status.success(), "req/s drop must regress");
+    let _ = std::fs::remove_dir_all(&dir);
+}

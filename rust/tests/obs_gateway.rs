@@ -175,11 +175,22 @@ fn traces_metrics_dispatch_and_profile_end_to_end() {
     assert!(calls > 0, "kernel counter is zero: {kernel_line}");
     assert!(kernel_line.contains("method=\"") && kernel_line.contains("kernel=\""));
 
+    // build identity rides along with every scrape
+    assert!(metrics.contains("bmxnet_build_info{version=\""), "{metrics}");
+    assert!(metrics.contains("git_sha=\""), "{metrics}");
+
     // --- /v1/models: per-model dispatch + process force_scalar state
     let (status, list) = http_request(&addr, "GET", "/v1/models", None);
     assert_eq!(status, 200);
     let v = json::parse(&list).unwrap();
     assert!(v.get("gemm_dispatch").and_then(|d| d.as_str()).unwrap().contains("method"));
+    let build = v.get("build_info").expect("build_info object in /v1/models");
+    assert!(build.get("version").and_then(|x| x.as_str()).is_some(), "{list}");
+    assert!(build.get("git").and_then(|x| x.as_str()).is_some(), "{list}");
+    assert!(
+        matches!(build.get("force_scalar"), Some(json::Value::Bool(_))),
+        "build_info.force_scalar missing: {list}"
+    );
     assert!(
         matches!(v.get("force_scalar"), Some(json::Value::Bool(_))),
         "force_scalar missing: {list}"
@@ -192,21 +203,23 @@ fn traces_metrics_dispatch_and_profile_end_to_end() {
     let dispatch = entry.get("dispatch").and_then(|d| d.as_str()).unwrap();
     assert!(dispatch.contains("method"), "dispatch line malformed: {dispatch}");
 
-    // --- /v1/models/{name}/profile: per-layer timings with labels
+    // --- /v1/models/{name}/profile: a schema-2 perf record with
+    // per-layer cells (metadata in the cell notes) + convenience extras
     let (status, prof) =
         http_request(&addr, "GET", "/v1/models/lenet_bin/profile?batch=2&reps=2", None);
     assert_eq!(status, 200, "{prof}");
     let v = json::parse(&prof).unwrap();
+    assert_eq!(v.get("schema").and_then(|s| s.as_usize()), Some(2), "{prof}");
+    assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("profile"));
     assert_eq!(v.get("model").and_then(|m| m.as_str()), Some("lenet_bin"));
     assert_eq!(v.get("batch").and_then(|b| b.as_usize()), Some(2));
-    let layers = v.get("layers").and_then(|l| l.as_array()).unwrap();
-    assert!(layers.len() >= 10, "lenet profile should have >=10 layers: {prof}");
-    let conv2 = layers
-        .iter()
-        .find(|l| l.get("name").and_then(|n| n.as_str()) == Some("conv2"))
-        .unwrap_or_else(|| panic!("no conv2 layer in {prof}"));
-    assert!(conv2.get("method").and_then(|m| m.as_str()).is_some());
-    assert!(conv2.get("kernel").and_then(|k| k.as_str()).is_some());
+    let rec = repro::bench::PerfRecord::parse(&prof).expect("profile parses as perf record");
+    assert!(rec.cells.len() >= 11, "total + >=10 layer cells: {prof}");
+    assert!(rec.cell("forward/total").is_some(), "{prof}");
+    let conv2 = rec.cell("layer/conv2").unwrap_or_else(|| panic!("no conv2 cell in {prof}"));
+    assert!(conv2.note.contains("method="), "{}", conv2.note);
+    assert!(conv2.note.contains("kernel="), "{}", conv2.note);
+    assert_eq!(conv2.stats.reps, 2);
     // unknown model 404s
     let (status, _) = http_request(&addr, "GET", "/v1/models/nope/profile", None);
     assert_eq!(status, 404);

@@ -16,17 +16,26 @@ remainder loop and the scalar tail — the places tail bugs live.
 Modes:
   default         run the differential suite; exit nonzero on any mismatch
   --bench PATH    additionally time the port's implementations on the
-                  reduced Figure 1-3 shapes and write PATH in the
-                  BENCH_gemm.json schema (see rust/src/bench/record.rs)
+                  reduced Figure 1-3 shapes and write PATH as a schema-2
+                  perf record (see rust/src/bench/record.rs): cell ids
+                  `fig1/C=64/naive` etc. with median/min/MAD over reps,
+                  plus a provenance block
 
 The --bench timings come from *this Python port*, not the Rust kernels;
-the emitted provenance string says so.  They seed the schema so
-EXPERIMENTS.md has real measured numbers until a Rust toolchain is
-available to regenerate via `bmxnet bench-gemm --json BENCH_gemm.json`.
+the emitted provenance block says so (`rustc: "unavailable (python
+port)"`).  They seed the record so EXPERIMENTS.md has real measured
+numbers — and a comparable baseline for `bmxnet bench-compare` — until a
+Rust toolchain is available to regenerate via
+`bmxnet bench-gemm --json BENCH_gemm.json` or
+`bmxnet bench-suite --json out/`.
 """
 
 import argparse
 import json
+import os
+import platform
+import statistics
+import subprocess
 import sys
 import time
 
@@ -276,7 +285,10 @@ def run_differential(verbose=True):
 
 
 # ---------------------------------------------------------------------------
-# Bench mode: seed BENCH_gemm.json (numpy-vectorized port timings)
+# Bench mode: seed BENCH_gemm.json (numpy-vectorized port timings) as a
+# schema-2 perf record matching rust/src/bench/record.rs bit-for-concept
+# (same cell ids, same stats, same provenance keys) so bench-compare can
+# align a future Rust-generated record against this seed.
 # ---------------------------------------------------------------------------
 
 
@@ -320,13 +332,18 @@ def bench_methods():
     return methods
 
 
-def time_best_of(reps, fn):
-    best = float("inf")
+def time_stats(reps, fn):
+    """median/min/MAD over reps in ms, after one untimed warmup —
+    mirrors rust/src/bench/harness.rs `time_stats`."""
+    fn()
+    samples = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3  # ms
+        samples.append((time.perf_counter() - t0) * 1e3)
+    med = statistics.median(samples)
+    mad = statistics.median([abs(s - med) for s in samples])
+    return {"median": med, "min": min(samples), "mad": mad, "reps": reps}
 
 
 def figure_workloads():
@@ -338,65 +355,115 @@ def figure_workloads():
     return fig1 + fig2 + fig3
 
 
+def crate_version():
+    cargo = os.path.join(os.path.dirname(__file__), "..", "rust", "Cargo.toml")
+    try:
+        with open(cargo) as f:
+            for line in f:
+                if line.startswith("version"):
+                    return line.split('"')[1]
+    except OSError:
+        pass
+    return "unknown"
+
+
+def git_describe():
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty", "--tags"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def port_provenance(reps):
+    """The same 14 keys Provenance::capture emits, honestly stamped as a
+    Python-port measurement (rustc/dispatch/kernels say so)."""
+    return {
+        "tool": "scripts/gemm_diff_port.py --bench",
+        "version": crate_version(),
+        "git": git_describe(),
+        "rustc": "unavailable (python port)",
+        "features": "python-port",
+        "arch": platform.machine() or "unknown",
+        "os": sys.platform,
+        "cores": os.cpu_count() or 1,
+        "dispatch": "python-port (numpy bitwise_count)",
+        "force_scalar": False,
+        "kernels": "numpy",
+        "reps": reps,
+        "quick": False,
+        "note": (
+            "python reference-port measurement (no Rust toolchain in the "
+            "build container) - reduced shapes (batch 20) - method columns "
+            "are behaviorally equivalent ports, so per-method deltas are "
+            "NOT representative of the Rust kernels; regenerate with "
+            "`bmxnet bench-suite --json out/` or "
+            "`bmxnet bench-gemm --json BENCH_gemm.json`"
+        ),
+    }
+
+
 def run_bench(out_path, reps):
     rng = np.random.default_rng(42)
     methods = bench_methods()
-    figures = {}
-    for fig, xlabel, absolute, x, m, n, k in figure_workloads():
+    cells = []
+    for fig, xlabel, _absolute, x, m, n, k in figure_workloads():
         a = rng.standard_normal((m, k)).astype(np.float32)
         b = rng.standard_normal((k, n)).astype(np.float32)
         sa, sb = np.where(a >= 0, 1.0, -1.0), np.where(b >= 0, 1.0, -1.0)
         pa = np_pack_bits(a >= 0, True)   # A-side pads 1
         pb = np_pack_bits((b >= 0).T, False)  # B columns, pads 0
         pa32, pb32 = pa.view(np.uint32), pb.view(np.uint32)
-        ms = {}
+        stats = {}
         for label in methods:
             if label == "naive":
-                ms[label] = time_best_of(reps, lambda: sa.astype(np.float64) @ sb)
+                stats[label] = time_stats(reps, lambda: sa.astype(np.float64) @ sb)
             elif label == "cblas":
-                ms[label] = time_best_of(reps, lambda: sa @ sb)
+                stats[label] = time_stats(reps, lambda: sa @ sb)
             elif label == "xnor_32":
-                ms[label] = time_best_of(
+                stats[label] = time_stats(
                     reps,
                     lambda: np.bitwise_count(
                         ~(pa32[:, None, :] ^ pb32[None, :, :])
                     ).sum(axis=2, dtype=np.int64),
                 )
             elif label == "xnor_fused":
-                ms[label] = time_best_of(
+                stats[label] = time_stats(
                     reps, lambda: np_xnor_gemm(np_pack_bits(a >= 0, True), pb)
                 )
             else:  # xnor_64 / _blk / _omp / _avx2: one packed-word GEMM here
-                ms[label] = time_best_of(reps, lambda: np_xnor_gemm(pa, pb))
-        ms["bin+xnor_omp"] = time_best_of(
+                stats[label] = time_stats(reps, lambda: np_xnor_gemm(pa, pb))
+        stats["bin+xnor_omp"] = time_stats(
             reps, lambda: np_xnor_gemm(np_pack_bits(a >= 0, True), pb)
         )
-        figures.setdefault((fig, xlabel, absolute), []).append({"x": x, "ms": ms})
-        print(f"{fig} x={x}: " + " ".join(f"{l}={v:.1f}ms" for l, v in ms.items()))
+        for label, s in stats.items():
+            cells.append({"id": f"{fig}/{xlabel}={x}/{label}", "unit": "ms", **s})
+        print(
+            f"{fig} {xlabel}={x}: "
+            + " ".join(f"{l}={s['median']:.1f}ms" for l, s in stats.items())
+        )
     doc = {
+        "schema": 2,
         "bench": "gemm",
-        "provenance": (
-            "python reference-port measurement (scripts/gemm_diff_port.py --bench; "
-            "no Rust toolchain in the build container) · reduced shapes (batch 20) "
-            f"· best-of-{reps} · methods are behaviorally equivalent ports, so "
-            "per-method deltas are NOT representative of the Rust kernels — "
-            "regenerate with `bmxnet bench-gemm --json BENCH_gemm.json`"
-        ),
-        "figures": [
-            {"figure": fig, "xlabel": xlabel, "absolute_times": absolute, "rows": rows}
-            for (fig, xlabel, absolute), rows in figures.items()
-        ],
+        "provenance": port_provenance(reps),
+        "cells": cells,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
-    print(f"wrote {out_path}")
+    print(f"wrote {out_path} ({len(cells)} cells, schema 2)")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", metavar="PATH", help="also write BENCH_gemm.json to PATH")
-    ap.add_argument("--reps", type=int, default=3, help="best-of reps for --bench")
+    ap.add_argument("--reps", type=int, default=3, help="timed reps per cell for --bench")
     args = ap.parse_args()
     failures = run_differential()
     if failures:

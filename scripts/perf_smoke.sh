@@ -1,0 +1,78 @@
+#!/usr/bin/env sh
+# Perf-radar smoke test: run the unified bench suite in quick mode, check
+# that every family emits a schema-2 record with populated provenance,
+# prove the compare gate passes on a self-compare, and prove it FAILS
+# (non-zero exit) on an injected 50% regression.  Used by
+# `make perf-smoke` and CI.
+#
+# BMXNET_FORCE_SCALAR=1 pins the scalar kernel so the run is portable;
+# timing noise is irrelevant because the self-compare is literally the
+# same files and the injected regression zeroes the MAD noise floor.
+set -eu
+
+BIN=${BIN:-target/release/bmxnet}
+PYTHON=${PYTHON:-python3}
+
+if [ ! -x "$BIN" ]; then
+    echo "perf-smoke: $BIN not built (run \`make build\` first)" >&2
+    exit 1
+fi
+
+DIR=$(mktemp -d /tmp/bmxnet_perf_smoke.XXXXXX)
+cleanup() { rm -rf "$DIR" || true; }
+trap cleanup EXIT INT TERM
+
+# --- 1. quick suite run: one record per family, schema + provenance
+BMXNET_FORCE_SCALAR=1 "$BIN" bench-suite --quick --json "$DIR/base"
+
+for FAM in gemm tables engine serve serve_policy profile; do
+    REC="$DIR/base/BENCH_$FAM.json"
+    [ -f "$REC" ] || { echo "perf-smoke: missing $REC" >&2; exit 1; }
+    for NEEDLE in '"schema": 2' "\"bench\": \"$FAM\"" '"git":' '"rustc":' \
+        '"dispatch":' '"cells":'; do
+        grep -qF "$NEEDLE" "$REC" \
+            || { echo "perf-smoke: $REC missing $NEEDLE" >&2; exit 1; }
+    done
+done
+
+# --- 2. self-compare must pass (dir vs dir, exit 0)
+"$BIN" bench-compare "$DIR/base" "$DIR/base" \
+    || { echo "perf-smoke: self-compare failed" >&2; exit 1; }
+
+# --- 3. injected regression must fail (exit non-zero)
+# Copy the records, zero every MAD (deterministic noise floor), and
+# multiply the gemm medians by 1.5 in the "regressed" copy only.
+"$PYTHON" - "$DIR" <<'EOF'
+import json, pathlib, shutil, sys
+
+root = pathlib.Path(sys.argv[1])
+clean, bad = root / "clean", root / "bad"
+shutil.copytree(root / "base", clean)
+shutil.copytree(root / "base", bad)
+
+def rewrite(path, scale):
+    rec = json.loads(path.read_text())
+    for cell in rec["cells"]:
+        cell["mad"] = 0.0
+        cell["median"] *= scale
+        cell["min"] *= scale
+    path.write_text(json.dumps(rec, indent=2) + "\n")
+
+for p in clean.glob("BENCH_*.json"):
+    rewrite(p, 1.0)
+for p in bad.glob("BENCH_*.json"):
+    rewrite(p, 1.5 if p.name == "BENCH_gemm.json" else 1.0)
+EOF
+
+if "$BIN" bench-compare "$DIR/clean" "$DIR/bad" --fail-on 10; then
+    echo "perf-smoke: injected 50% regression was NOT caught" >&2
+    exit 1
+fi
+echo "perf-smoke: injected regression correctly rejected"
+
+# --- 4. single-file compare path + JSON verdict
+"$BIN" bench-compare "$DIR/clean/BENCH_tables.json" \
+    "$DIR/bad/BENCH_tables.json" --json | grep -qF '"failed": false' \
+    || { echo "perf-smoke: single-file JSON compare failed" >&2; exit 1; }
+
+echo "perf-smoke: OK"

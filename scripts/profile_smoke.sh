@@ -24,18 +24,21 @@ for NEEDLE in conv2 fc1 xnor_fused dispatch; do
         || { echo "profile-smoke: table missing $NEEDLE" >&2; exit 1; }
 done
 
+# The JSON report is a schema-2 perf record: per-layer cells with the
+# GEMM method/kernel labels carried in the cell notes, plus provenance.
 JSON_OUT=$DIR/profile.json
 "$BIN" profile --model lenet_bin --models-dir "$DIR" --batch 4 --reps 2 \
     --json "$JSON_OUT" >/dev/null
-for NEEDLE in '"schema": 1' '"bench": "profile"' '"model": "lenet_bin"' \
-    '"name": "conv2"' '"method": "xnor_fused"' '"kernel"'; do
+for NEEDLE in '"schema": 2' '"bench": "profile"' '"model": "lenet_bin"' \
+    '"id": "forward/total"' '"id": "layer/conv2"' 'method=xnor_fused' \
+    'kernel=' '"git":' '"dispatch":'; do
     grep -qF "$NEEDLE" "$JSON_OUT" \
         || { echo "profile-smoke: JSON missing $NEEDLE" >&2; exit 1; }
 done
 
 # forced-scalar runs must label the scalar kernel
 BMXNET_FORCE_SCALAR=1 "$BIN" profile --bmx "$DIR/lenet_bin.bmx" \
-    --batch 2 --reps 1 --json | grep -qF '"kernel": "scalar"' \
+    --batch 2 --reps 1 --json | grep -qF 'kernel=scalar' \
     || { echo "profile-smoke: BMXNET_FORCE_SCALAR=1 did not pin scalar" >&2; exit 1; }
 
 echo "profile-smoke: OK"

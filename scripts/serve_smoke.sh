@@ -76,7 +76,8 @@ echo "$METRICS" | grep -q 'bmxnet_requests_total{model="lenet_bin"} 1' \
     || { echo "serve-smoke: /metrics missing lenet_bin request count" >&2; exit 1; }
 
 # observability families (PR 7): per-stage histograms, kernel counters,
-# per-shard queue depth, monotone latency count/sum
+# per-shard queue depth, monotone latency count/sum; plus the build
+# identity gauge (PR 8)
 for FAMILY in \
     'bmxnet_stage_latency_us_bucket{stage="parse"' \
     'bmxnet_stage_latency_us_bucket{stage="forward"' \
@@ -84,6 +85,7 @@ for FAMILY in \
     'bmxnet_queue_depth{model="lenet_bin",shard="0"}' \
     'bmxnet_latency_us_count{model="lenet_bin"}' \
     'bmxnet_latency_us_sum{model="lenet_bin"}' \
+    'bmxnet_build_info{version="' \
     'bmxnet_trace_total'; do
     echo "$METRICS" | grep -qF "$FAMILY" \
         || { echo "serve-smoke: /metrics missing $FAMILY" >&2; exit 1; }
@@ -97,8 +99,11 @@ for KEY in '"traces"' '"stages_us"' '"forward"' '"respond"'; do
         || { echo "serve-smoke: /v1/debug/trace missing $KEY" >&2; exit 1; }
 done
 
-# per-model dispatch surfaces in the listing
-curl -fsS "http://$ADDR/v1/models" | grep -q '"force_scalar"' \
+# per-model dispatch + build identity surface in the listing
+LISTING=$(curl -fsS "http://$ADDR/v1/models")
+echo "$LISTING" | grep -q '"force_scalar"' \
     || { echo "serve-smoke: /v1/models missing force_scalar" >&2; exit 1; }
+echo "$LISTING" | grep -q '"build_info"' \
+    || { echo "serve-smoke: /v1/models missing build_info" >&2; exit 1; }
 
 echo "serve-smoke: OK"
