@@ -309,6 +309,10 @@ fn run_engine(opts: &SuiteOpts) -> Result<PerfRecord> {
     );
     for (name, seed, act_bit) in [("lenet_bin", 1u64, 1u32), ("lenet_q4", 2, 4)] {
         let engine = Engine::from_bmx(&synth_lenet(seed, act_bit)?)?;
+        // Cell ids carry the epilogue label so a BMXNET_NO_FOLD=1 run
+        // ("…/forward/f32bn") never silently compares against a folded
+        // one ("…/forward/thr").
+        let epi = engine.epilogue();
         let [c, h, w] = engine.input_shape();
         for &batch in batches {
             let data: Vec<f32> = (0..batch * c * h * w)
@@ -322,7 +326,7 @@ fn run_engine(opts: &SuiteOpts) -> Result<PerfRecord> {
                 format!("{:.2}", s.median),
                 format!("{:.0}", batch as f64 / (s.median / 1e3).max(1e-9)),
             ]);
-            rec.push(format!("{name}/batch={batch}/forward"), Unit::Ms, s);
+            rec.push(format!("{name}/batch={batch}/forward/{epi}"), Unit::Ms, s);
         }
     }
     table.print();

@@ -51,6 +51,15 @@ pub enum Method {
     /// Fused binarize→pack→GEMM with the best available kernel — the
     /// inference default ([`Method::auto`]).
     XnorFused,
+    /// `XnorFused` plus the integer threshold epilogue: popcount
+    /// accumulators are compared against folded BatchNorm+sign
+    /// thresholds and written out as packed sign bits
+    /// ([`fused::gemm_fused_threshold`]).  This is the inter-layer path
+    /// of the folded engine; through the generic f32/popcount entry
+    /// points it behaves exactly like `XnorFused` (the epilogue needs
+    /// per-channel rules those signatures cannot carry — use
+    /// [`binary_gemm_packed_b_threshold`]).
+    XnorFusedThresh,
 }
 
 impl Method {
@@ -69,6 +78,7 @@ impl Method {
             Method::Xnor64Avx512,
             Method::Xnor64Neon,
             Method::XnorFused,
+            Method::XnorFusedThresh,
         ]
     }
 
@@ -130,6 +140,7 @@ impl Method {
             Method::Xnor64Avx512 => "xnor_64_avx512",
             Method::Xnor64Neon => "xnor_64_neon",
             Method::XnorFused => "xnor_fused",
+            Method::XnorFusedThresh => "xnor_fused_thr",
         }
     }
 
@@ -154,7 +165,7 @@ pub fn effective_kernel(method: Method) -> Option<Kernel> {
     match method {
         Method::NaiveF32 | Method::BlockedF32 => None,
         Method::Xnor32 | Method::Xnor64 | Method::Xnor64Blocked => Some(Kernel::Scalar),
-        Method::Xnor64Mt | Method::XnorFused => Some(simd::best_kernel()),
+        Method::Xnor64Mt | Method::XnorFused | Method::XnorFusedThresh => Some(simd::best_kernel()),
         pinned => pinned.pinned_kernel(),
     }
 }
@@ -189,7 +200,9 @@ pub fn xnor_gemm_prepacked(method: Method, a: &PackedMatrix, b: &PackedMatrix) -
         Method::Xnor64 => xnor::gemm_u64(a, b),
         Method::Xnor64Blocked => xnor::gemm_u64_blocked(a, b),
         Method::Xnor64Mt => parallel::gemm_u64_mt(a, b),
-        Method::XnorFused => xnor::gemm_u64_blocked_with(a, b, simd::row_fn(simd::best_kernel())),
+        Method::XnorFused | Method::XnorFusedThresh => {
+            xnor::gemm_u64_blocked_with(a, b, simd::row_fn(simd::best_kernel()))
+        }
         m => panic!("{m:?} is not a packed xnor method"),
     }
 }
@@ -220,7 +233,7 @@ pub fn binary_gemm_f32(
             let bb = super::pack::binarize_slice(b);
             blocked::gemm_f32(&ab, &bb, m, n, k)
         }
-        Method::XnorFused => {
+        Method::XnorFused | Method::XnorFusedThresh => {
             crate::obs::counters::record_gemm(method, simd::best_kernel());
             let pb = PackedMatrix::pack_cols(b, k, n);
             fused::gemm_fused(a, m, k, &pb)
@@ -252,7 +265,7 @@ pub fn binary_gemm_packed_b(
     b: &PackedMatrix,
 ) -> Vec<i32> {
     match method {
-        Method::XnorFused => {
+        Method::XnorFused | Method::XnorFusedThresh => {
             crate::obs::counters::record_gemm(method, simd::best_kernel());
             fused::gemm_fused(a, m, k, b)
         }
@@ -262,6 +275,23 @@ pub fn binary_gemm_packed_b(
         }
         _ => panic!("{method:?} is not a binary method; layers hold packed weights only"),
     }
+}
+
+/// The folded inter-layer entry point: float activations × pre-packed
+/// weights, popcounts compared against per-channel folded BN+sign rules,
+/// packed sign bits out ([`fused::gemm_fused_threshold`]).  This is the
+/// only dispatch entry whose output is a [`PackedMatrix`]; it always runs
+/// the fused kernel and counts under `xnor_fused_thr` so `/metrics`,
+/// `dispatch_summary()` and `bmxnet profile` can attribute the epilogue.
+pub fn binary_gemm_packed_b_threshold(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedMatrix,
+    rules: &[fused::ChannelRule],
+) -> PackedMatrix {
+    crate::obs::counters::record_gemm(Method::XnorFusedThresh, simd::best_kernel());
+    fused::gemm_fused_threshold(a, m, k, b, rules)
 }
 
 #[cfg(test)]
@@ -307,6 +337,7 @@ mod tests {
             Method::Xnor64Blocked,
             Method::Xnor64Mt,
             Method::XnorFused,
+            Method::XnorFusedThresh,
         ] {
             assert!(avail.contains(&m), "{m:?} must always be available");
         }
@@ -325,6 +356,7 @@ mod tests {
         assert_eq!(effective_kernel(Method::Xnor64), Some(Kernel::Scalar));
         assert_eq!(effective_kernel(Method::Xnor64Blocked), Some(Kernel::Scalar));
         assert_eq!(effective_kernel(Method::XnorFused), Some(simd::best_kernel()));
+        assert_eq!(effective_kernel(Method::XnorFusedThresh), Some(simd::best_kernel()));
         assert_eq!(effective_kernel(Method::Xnor64Mt), Some(simd::best_kernel()));
         assert_eq!(effective_kernel(Method::Xnor64Avx2), Some(Kernel::Avx2));
         assert_eq!(effective_kernel(Method::Xnor64Neon), Some(Kernel::Neon));
@@ -364,6 +396,33 @@ mod tests {
             let p = PackedMatrix::pack_rows(&[1.0; 64], 1, 64, Side::A);
             let err = std::panic::catch_unwind(|| xnor_gemm_prepacked(m, &p, &p));
             assert!(err.is_err(), "{m:?} must panic, not run the wrong kernel");
+        }
+    }
+
+    #[test]
+    fn threshold_entry_matches_rules_and_counts_under_its_label() {
+        use crate::obs::counters;
+        let total = || {
+            counters::gemm_calls()
+                .iter()
+                .filter(|(m, _, _)| *m == "xnor_fused_thr")
+                .map(|(_, _, n)| *n)
+                .sum::<u64>()
+        };
+        let (m, n, k) = (3, 5, 70);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.7 - 40.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| 30.0 - (i as f32) * 0.3).collect();
+        let pb = PackedMatrix::pack_cols(&b, k, n);
+        let rules: Vec<fused::ChannelRule> =
+            (0..n).map(|j| fused::fold_bn_sign(1.0 - j as f32, 2.0, k)).collect();
+        let before = total();
+        let out = binary_gemm_packed_b_threshold(&a, m, k, &pb, &rules);
+        assert_eq!(total() - before, 1, "threshold entry must count under xnor_fused_thr");
+        let pops = binary_gemm_packed_b(Method::XnorFused, &a, m, k, &pb);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out.get_bit(i, j), rules[j].fires(pops[i * n + j]), "({i}, {j})");
+            }
         }
     }
 

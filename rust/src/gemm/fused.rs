@@ -1,19 +1,34 @@
-//! Fused binarize→pack→GEMM: the inference-forward entry point that skips
-//! materializing the full packed A matrix.
+//! Fused binarize→pack→GEMM and the integer threshold epilogue.
 //!
-//! The layer forward path (`nn/layers.rs`) holds B (the weights)
-//! pre-packed at load time, but A (the activations / im2col buffer) is
-//! fresh every call.  The unfused path packs all of A into a heap
-//! `PackedMatrix` (M×⌈K/64⌉×8 bytes) and only then starts the GEMM — at
-//! Fig-3 scale that intermediate is megabytes of traffic that is written
-//! once, read once, and thrown away.  This path instead packs an `MR`-row
-//! panel into a reusable stack-sized scratch and immediately consumes it
-//! against every B tile while it is still L1-hot (daBNN's bit-pack fusion,
-//! PAPERS.md).
+//! Two fusions live here:
 //!
-//! Bit layout is shared with [`super::pack`] via [`pack::pack_row_into`]
-//! — the fused path cannot drift from the packing convention because both
-//! go through the same row packer (A-side: pad bits are 1).
+//! 1. **Input fusion** ([`gemm_fused`]): the layer forward path holds B
+//!    (the weights) pre-packed at load time, but A (the activations /
+//!    im2col buffer) is fresh every call.  The unfused path packs all of
+//!    A into a heap `PackedMatrix` (M×⌈K/64⌉×8 bytes) and only then
+//!    starts the GEMM — at Fig-3 scale that intermediate is megabytes of
+//!    traffic that is written once, read once, and thrown away.  This
+//!    path instead packs an `MR`-row panel into a reusable stack-sized
+//!    scratch and immediately consumes it against every B tile while it
+//!    is still L1-hot (daBNN's bit-pack fusion, PAPERS.md).
+//!
+//! 2. **Output fusion** ([`gemm_fused_threshold`]): when a binary GEMM is
+//!    followed by BatchNorm and a sign activation, the whole
+//!    BN+sign tail collapses into one per-channel integer compare
+//!    against the popcount accumulator ([`ChannelRule`], folded by
+//!    [`fold_bn_sign`] — the `batch_norm_threshold` trick from the BNN
+//!    literature).  The epilogue writes the resulting sign bits straight
+//!    into the **next layer's packed-A layout**: no f32 tensor is ever
+//!    materialized between consecutive binary layers.
+//!
+//! Both the packing and the epilogue output go through
+//! [`pack::pack_row_into`] / [`PackedMatrix::zeroed`], so the fused paths
+//! cannot drift from the packing convention (A-side: pad bits are 1).
+//!
+//! The inner loops run the 2×2 register-tile kernel
+//! ([`simd::tile2_fn`]) over row/column pairs — each packed operand word
+//! is loaded once and feeds two products — with single-row
+//! ([`simd::row_fn`]) cleanup for odd edges.
 
 use super::pack::{self, PackedMatrix, WORD_BITS};
 use super::simd;
@@ -23,6 +38,101 @@ use super::simd;
 const MR: usize = 8;
 /// B rows (output columns) per tile, matching the blocked kernels.
 const JB: usize = 64;
+
+/// One output channel's folded BatchNorm+sign decision, evaluated
+/// directly on the popcount accumulator `p ∈ [0, K]`.
+///
+/// Folding starts from the affine BN form `y = scale·dot + shift` with
+/// `dot = 2p − K`; the sign bit is `y >= 0`.  Dividing through by
+/// `scale` **flips the comparison direction when `scale < 0`** (negative
+/// BN gamma), and `scale == 0` (gamma exactly zero) makes the output
+/// independent of `p` — hence three rule shapes, not one threshold
+/// integer.  [`fold_bn_sign`] constructs the rule; DESIGN.md §Threshold
+/// folding derives it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelRule {
+    /// `bit = (p >= t)` — positive BN scale.  `t > K` never fires.
+    Ge(i32),
+    /// `bit = (p <= t)` — negative BN scale (flipped comparison).
+    /// `t < 0` never fires.
+    Le(i32),
+    /// `bit` is independent of the popcount (`scale == 0`).
+    Const(bool),
+}
+
+impl ChannelRule {
+    /// Evaluate the rule on one popcount accumulator.
+    #[inline]
+    pub fn fires(&self, p: i32) -> bool {
+        match *self {
+            ChannelRule::Ge(t) => p >= t,
+            ChannelRule::Le(t) => p <= t,
+            ChannelRule::Const(b) => b,
+        }
+    }
+}
+
+/// Fold one channel's BatchNorm+sign into a [`ChannelRule`] over the
+/// popcount domain `p ∈ [0, k]`.
+///
+/// `scale`/`shift` are the channel's inference-time BN affine form (see
+/// `nn::layers::BatchNorm`); `k` is the GEMM reduction length (so
+/// `dot = 2p − k`).  The rule is **bit-exact against the f32 reference**
+/// `scale * ((2p − k) as f32) + shift >= 0.0` for every `p` in range:
+/// the threshold candidate comes from exact f64 algebra
+/// (`t = ⌈(k − shift/scale)/2⌉`), then is nudged against the actual f32
+/// expression — which is monotone in `p`, so a local walk finds the true
+/// f32 crossover even when f32 rounding moves it off the algebraic one.
+/// That exactness is what lets the differential tests demand
+/// folded ≡ unfused down to the last bit.
+pub fn fold_bn_sign(scale: f32, shift: f32, k: usize) -> ChannelRule {
+    assert!(
+        scale.is_finite() && shift.is_finite(),
+        "fold_bn_sign: non-finite BN scale/shift ({scale}, {shift})"
+    );
+    assert!(k < i32::MAX as usize / 2, "fold_bn_sign: k {k} out of range");
+    let kk = k as i64;
+    // The unfused f32 pipeline this rule must reproduce exactly.
+    let fires = |p: i64| -> bool {
+        let dot = (2 * p - kk) as f32;
+        scale * dot + shift >= 0.0
+    };
+    if scale == 0.0 {
+        return ChannelRule::Const(shift >= 0.0);
+    }
+    // Sign crossover of scale·dot + shift in the dot domain, exact f64.
+    let r = -(shift as f64) / (scale as f64);
+    let cand = (r + kk as f64) / 2.0;
+    if scale > 0.0 {
+        let mut t = if cand.is_finite() { cand.ceil() as i64 } else { 0 };
+        t = t.clamp(0, kk + 1);
+        while t > 0 && fires(t - 1) {
+            t -= 1;
+        }
+        while t <= kk && !fires(t) {
+            t += 1;
+        }
+        ChannelRule::Ge(t as i32)
+    } else {
+        let mut t = if cand.is_finite() { cand.floor() as i64 } else { kk };
+        t = t.clamp(-1, kk);
+        while t < kk && fires(t + 1) {
+            t += 1;
+        }
+        while t >= 0 && !fires(t) {
+            t -= 1;
+        }
+        ChannelRule::Le(t as i32)
+    }
+}
+
+/// Fold a whole BN layer: one rule per output channel.  `k` is the GEMM
+/// reduction length shared by every channel of the preceding binary
+/// conv/dense layer.
+pub fn fold_bn_sign_all(scale: &[f32], shift: &[f32], k: usize) -> Vec<ChannelRule> {
+    assert_eq!(scale.len(), shift.len(), "fold_bn_sign_all: channel mismatch");
+    scale.iter().zip(shift).map(|(&s, &b)| fold_bn_sign(s, b, k)).collect()
+}
 
 /// Fused binarize→pack→xnor GEMM.  `a` is row-major (m, k) floats
 /// (binarized by sign on the fly); `b` is the pre-packed weight operand
@@ -34,8 +144,10 @@ pub fn gemm_fused(a: &[f32], m: usize, k: usize, b: &PackedMatrix) -> Vec<i32> {
     let n = b.rows;
     let wpr = k.div_ceil(WORD_BITS);
     debug_assert_eq!(wpr, b.words_per_row);
-    // Row kernel resolved once per GEMM call (env override + CPU probe).
-    let row = simd::row_fn(simd::best_kernel());
+    // Kernels resolved once per GEMM call (env override + CPU probe).
+    let kern = simd::best_kernel();
+    let row = simd::row_fn(kern);
+    let tile = simd::tile2_fn(kern);
     let mut c = vec![0i32; m * n];
     let mut panel = vec![0u64; MR * wpr];
     for ic in (0..m).step_by(MR) {
@@ -46,19 +158,120 @@ pub fn gemm_fused(a: &[f32], m: usize, k: usize, b: &PackedMatrix) -> Vec<i32> {
             pack::pack_row_into(src, &mut panel[di * wpr..(di + 1) * wpr], pack::Side::A);
         }
         // ...then reuse it across every B tile while it is cache-hot.
+        // 2×2 register tiles over row/column pairs; single-row edges.
         for jc in (0..n).step_by(JB) {
             let jb = JB.min(n - jc);
-            for di in 0..mb {
-                let arow = &panel[di * wpr..(di + 1) * wpr];
+            let mut di = 0;
+            while di + 2 <= mb {
+                let r0 = &panel[di * wpr..(di + 1) * wpr];
+                let r1 = &panel[(di + 1) * wpr..(di + 2) * wpr];
+                let c0 = (ic + di) * n + jc;
+                let c1 = (ic + di + 1) * n + jc;
+                let mut dj = 0;
+                while dj + 2 <= jb {
+                    let t = tile(r0, r1, b.row(jc + dj), b.row(jc + dj + 1));
+                    c[c0 + dj] = t[0] as i32;
+                    c[c0 + dj + 1] = t[1] as i32;
+                    c[c1 + dj] = t[2] as i32;
+                    c[c1 + dj + 1] = t[3] as i32;
+                    dj += 2;
+                }
+                if dj < jb {
+                    c[c0 + dj] = row(r0, b.row(jc + dj)) as i32;
+                    c[c1 + dj] = row(r1, b.row(jc + dj)) as i32;
+                }
+                di += 2;
+            }
+            if di < mb {
+                let r0 = &panel[di * wpr..(di + 1) * wpr];
                 let ci = (ic + di) * n + jc;
-                let crow = &mut c[ci..ci + jb];
-                for (dj, cv) in crow.iter_mut().enumerate() {
-                    *cv = row(arow, b.row(jc + dj)) as i32;
+                for dj in 0..jb {
+                    c[ci + dj] = row(r0, b.row(jc + dj)) as i32;
                 }
             }
         }
     }
     c
+}
+
+/// Fused binarize→pack→GEMM→threshold: the integer-only inter-layer hop.
+///
+/// Same operands as [`gemm_fused`], plus one [`ChannelRule`] per output
+/// column (= output channel).  Instead of materializing popcounts or f32
+/// activations, each accumulator is compared against its channel's rule
+/// **in the epilogue** and the resulting sign bit is written straight
+/// into the returned matrix — which is laid out as the *next* layer's
+/// packed-A operand (`rows = m`, `k = n`, A-side pad bits preset by
+/// [`PackedMatrix::zeroed`]).  Between two binary layers nothing wider
+/// than one bit per activation ever touches memory.
+pub fn gemm_fused_threshold(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedMatrix,
+    rules: &[ChannelRule],
+) -> PackedMatrix {
+    assert_eq!(a.len(), m * k, "gemm_fused_threshold: A length mismatch");
+    assert_eq!(b.k, k, "gemm_fused_threshold: reduction length mismatch");
+    let n = b.rows;
+    assert_eq!(rules.len(), n, "gemm_fused_threshold: one rule per output channel");
+    let wpr = k.div_ceil(WORD_BITS);
+    debug_assert_eq!(wpr, b.words_per_row);
+    let kern = simd::best_kernel();
+    let row = simd::row_fn(kern);
+    let tile = simd::tile2_fn(kern);
+    let mut out = PackedMatrix::zeroed(m, n, pack::Side::A);
+    let mut panel = vec![0u64; MR * wpr];
+    for ic in (0..m).step_by(MR) {
+        let mb = MR.min(m - ic);
+        for di in 0..mb {
+            let src = &a[(ic + di) * k..(ic + di + 1) * k];
+            pack::pack_row_into(src, &mut panel[di * wpr..(di + 1) * wpr], pack::Side::A);
+        }
+        for jc in (0..n).step_by(JB) {
+            let jb = JB.min(n - jc);
+            let mut di = 0;
+            while di + 2 <= mb {
+                let r0 = &panel[di * wpr..(di + 1) * wpr];
+                let r1 = &panel[(di + 1) * wpr..(di + 2) * wpr];
+                let mut dj = 0;
+                while dj + 2 <= jb {
+                    let t = tile(r0, r1, b.row(jc + dj), b.row(jc + dj + 1));
+                    if rules[jc + dj].fires(t[0] as i32) {
+                        out.set_bit(ic + di, jc + dj);
+                    }
+                    if rules[jc + dj + 1].fires(t[1] as i32) {
+                        out.set_bit(ic + di, jc + dj + 1);
+                    }
+                    if rules[jc + dj].fires(t[2] as i32) {
+                        out.set_bit(ic + di + 1, jc + dj);
+                    }
+                    if rules[jc + dj + 1].fires(t[3] as i32) {
+                        out.set_bit(ic + di + 1, jc + dj + 1);
+                    }
+                    dj += 2;
+                }
+                if dj < jb {
+                    if rules[jc + dj].fires(row(r0, b.row(jc + dj)) as i32) {
+                        out.set_bit(ic + di, jc + dj);
+                    }
+                    if rules[jc + dj].fires(row(r1, b.row(jc + dj)) as i32) {
+                        out.set_bit(ic + di + 1, jc + dj);
+                    }
+                }
+                di += 2;
+            }
+            if di < mb {
+                let r0 = &panel[di * wpr..(di + 1) * wpr];
+                for dj in 0..jb {
+                    if rules[jc + dj].fires(row(r0, b.row(jc + dj)) as i32) {
+                        out.set_bit(ic + di, jc + dj);
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -103,11 +316,114 @@ mod tests {
     }
 
     #[test]
+    fn fused_handles_odd_tile_edges() {
+        // odd row and column counts exercise the single-row/column
+        // cleanup paths around the 2×2 tiles.
+        for (m, n, k) in [(1, 1, 10), (3, 3, 65), (7, 63, 129), (9, 65, 64), (2, 2, 64)] {
+            let a = lcg_floats(41, m * k);
+            let b = lcg_floats(42, k * n);
+            let pa = PackedMatrix::pack_rows(&a, m, k, Side::A);
+            let pb = PackedMatrix::pack_cols(&b, k, n);
+            assert_eq!(gemm_fused(&a, m, k, &pb), xnor::gemm_u64(&pa, &pb), "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
     fn fused_binarizes_by_sign() {
         // zeros binarize to +1 on both sides: every lane matches, pop = k.
         let k = 70;
         let a = vec![0.0f32; k];
         let pb = PackedMatrix::pack_cols(&vec![1.0f32; k], k, 1);
         assert_eq!(gemm_fused(&a, 1, k, &pb), vec![k as i32]);
+    }
+
+    /// The unfused f32 reference `fold_bn_sign` must reproduce.
+    fn unfused_bit(scale: f32, shift: f32, p: i32, k: usize) -> bool {
+        let dot = (2 * p - k as i32) as f32;
+        scale * dot + shift >= 0.0
+    }
+
+    #[test]
+    fn fold_matches_unfused_reference_exhaustively() {
+        // Every popcount in [0, K] for a spread of scales/shifts,
+        // including negative scale (flipped comparison) and scale == 0.
+        let k = 65;
+        for &scale in &[2.5f32, 0.03, -1.0, -0.004, 0.0, 17.0, -300.0] {
+            for &shift in &[0.0f32, 1.0, -1.0, 13.7, -77.7, 1e-3, -1e-3, 200.0, -200.0] {
+                let rule = fold_bn_sign(scale, shift, k);
+                for p in 0..=(k as i32) {
+                    assert_eq!(
+                        rule.fires(p),
+                        unfused_bit(scale, shift, p, k),
+                        "scale={scale} shift={shift} p={p} rule={rule:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_comparison_direction_follows_scale_sign() {
+        // scale > 0: bit set for *high* popcounts; scale < 0 flips it.
+        match fold_bn_sign(1.0, 0.0, 100) {
+            ChannelRule::Ge(t) => assert_eq!(t, 50),
+            r => panic!("positive scale must fold to Ge, got {r:?}"),
+        }
+        match fold_bn_sign(-1.0, 0.0, 100) {
+            ChannelRule::Le(t) => assert_eq!(t, 50),
+            r => panic!("negative scale must fold to Le, got {r:?}"),
+        }
+        assert_eq!(fold_bn_sign(0.0, 3.0, 100), ChannelRule::Const(true));
+        assert_eq!(fold_bn_sign(0.0, -3.0, 100), ChannelRule::Const(false));
+    }
+
+    #[test]
+    fn fold_saturates_at_popcount_extremes() {
+        // Shift so large the sign never (or always) flips within [0, K]:
+        // the rule must still be exact at p = 0 and p = K.
+        let k = 64;
+        let always = fold_bn_sign(1.0, 1e9, k);
+        let never = fold_bn_sign(1.0, -1e9, k);
+        for p in [0, 1, 63, 64] {
+            assert!(always.fires(p));
+            assert!(!never.fires(p));
+        }
+    }
+
+    #[test]
+    fn fused_threshold_equals_gemm_then_rules() {
+        // Odd channel counts and odd m exercise the epilogue's pad and
+        // edge handling; mixed-sign scales exercise both directions.
+        for (m, n, k) in [(1, 1, 1), (3, 7, 65), (8, 64, 128), (9, 65, 100), (5, 33, 1000)] {
+            let a = lcg_floats(51, m * k);
+            let b = lcg_floats(52, k * n);
+            let pb = PackedMatrix::pack_cols(&b, k, n);
+            let scales: Vec<f32> =
+                (0..n).map(|j| if j % 3 == 2 { 0.0 } else { (j as f32 - n as f32 / 2.0) / 7.0 }).collect();
+            let shifts: Vec<f32> = (0..n).map(|j| (j as f32) * 0.3 - 4.0).collect();
+            let rules = fold_bn_sign_all(&scales, &shifts, k);
+            let pops = gemm_fused(&a, m, k, &pb);
+            let folded = gemm_fused_threshold(&a, m, k, &pb, &rules);
+            assert_eq!(folded.rows, m);
+            assert_eq!(folded.k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(
+                        folded.get_bit(i, j),
+                        rules[j].fires(pops[i * n + j]),
+                        "m={m} n={n} k={k} i={i} j={j}"
+                    );
+                }
+            }
+            // A-side pad bits above n must be 1 so the matrix is a valid
+            // next-layer A operand.
+            if n % WORD_BITS != 0 {
+                let pad = !0u64 << (n % WORD_BITS);
+                for i in 0..m {
+                    let last = folded.row(i)[folded.words_per_row - 1];
+                    assert_eq!(last & pad, pad, "row {i} pad bits must be set");
+                }
+            }
+        }
     }
 }

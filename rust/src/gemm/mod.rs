@@ -28,8 +28,11 @@ pub mod parallel;
 pub mod simd;
 pub mod xnor;
 
-pub use dispatch::{binary_gemm_f32, binary_gemm_packed_b, xnor_gemm_prepacked, Method};
-pub use fused::gemm_fused;
+pub use dispatch::{
+    binary_gemm_f32, binary_gemm_packed_b, binary_gemm_packed_b_threshold, xnor_gemm_prepacked,
+    Method,
+};
+pub use fused::{fold_bn_sign, fold_bn_sign_all, gemm_fused, gemm_fused_threshold, ChannelRule};
 pub use pack::{PackedMatrix, Side};
 
 #[cfg(test)]

@@ -83,10 +83,49 @@ impl PackedMatrix {
         Self { rows: n, k, words_per_row, words }
     }
 
+    /// An all-(−1) matrix with the side's pad bits preset, for writers
+    /// that set live bits in place (the fused threshold epilogue,
+    /// `super::fused::gemm_fused_threshold`, writes next-layer A bits
+    /// straight from popcount accumulators).  Live lanes start 0 (−1);
+    /// pad lanes already carry the side convention, so a writer only
+    /// ever touches lanes `< k`.
+    pub fn zeroed(rows: usize, k: usize, side: Side) -> Self {
+        let words_per_row = k.div_ceil(WORD_BITS);
+        let mut words = vec![0u64; rows * words_per_row];
+        let tail = k % WORD_BITS;
+        if side == Side::A && tail != 0 {
+            let pad = !0u64 << tail;
+            for r in 0..rows {
+                words[r * words_per_row + words_per_row - 1] = pad;
+            }
+        }
+        Self { rows, k, words_per_row, words }
+    }
+
+    /// Set live lane `i` of row `r` to +1 (bit 1).  Lanes default to −1
+    /// in a [`PackedMatrix::zeroed`] matrix.
+    #[inline]
+    pub fn set_bit(&mut self, r: usize, i: usize) {
+        debug_assert!(i < self.k, "set_bit: lane {i} out of {k}", k = self.k);
+        self.words[r * self.words_per_row + i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+    }
+
+    /// Read live lane `i` of row `r` (true == +1).
+    #[inline]
+    pub fn get_bit(&self, r: usize, i: usize) -> bool {
+        (self.words[r * self.words_per_row + i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
     /// Packed row slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[u64] {
         &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Mutable packed row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
     }
 
     /// Unpack back to ±1 floats (test/debug helper; drops pad lanes).
@@ -214,6 +253,22 @@ mod tests {
         let w32 = p.words_u32();
         assert_eq!(w32[0], 1);
         assert_eq!(w32[1], 2);
+    }
+
+    #[test]
+    fn zeroed_presets_pad_bits_and_set_bit_round_trips() {
+        let mut a = PackedMatrix::zeroed(2, 10, Side::A);
+        assert_eq!(a.words[0], !0u64 << 10, "A-side pads must start 1");
+        assert_eq!(a.words[1], !0u64 << 10);
+        a.set_bit(1, 3);
+        assert!(a.get_bit(1, 3));
+        assert!(!a.get_bit(0, 3));
+        assert_eq!(a.unpack()[10 + 3], 1.0);
+        let b = PackedMatrix::zeroed(1, 10, Side::B);
+        assert_eq!(b.words[0], 0, "B-side pads must start 0");
+        // aligned k: no pad word to preset
+        let a64 = PackedMatrix::zeroed(1, 64, Side::A);
+        assert_eq!(a64.words[0], 0);
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub enum Kernel {
 /// `min(a.len(), b.len())` packed words.
 pub type RowFn = fn(&[u64], &[u64]) -> u32;
 
+/// The 2×2 register-tile signature: two A rows against two B rows,
+/// returning `[a0·b0, a0·b1, a1·b0, a1·b1]` popcounts.  The tile kernel
+/// loads each operand word once and feeds it into two products — the
+/// operand-reuse win a single-row kernel cannot express.
+pub type Tile2Fn = fn(&[u64], &[u64], &[u64], &[u64]) -> [u32; 4];
+
 impl Kernel {
     /// Stable display name (used in logs and bench provenance strings).
     pub fn label(&self) -> &'static str {
@@ -156,6 +162,29 @@ pub fn row_fn(kernel: Kernel) -> RowFn {
     }
 }
 
+/// Resolve a kernel to its 2×2 tile function.  Only AVX2 has a dedicated
+/// register-tile microkernel (the Harley–Seal row kernel's natural
+/// multi-row extension); every other kernel composes four calls of its
+/// own row function, so tiling never changes which instruction set runs —
+/// `BMXNET_FORCE_SCALAR` and the pinned-kernel ablations stay honest.
+pub fn tile2_fn(kernel: Kernel) -> Tile2Fn {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => tile2_avx2_checked,
+        #[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+        Kernel::Avx512 => tile2_avx512_composed,
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => tile2_neon_composed,
+        #[allow(unreachable_patterns)]
+        _ => tile2_scalar,
+    }
+}
+
+/// Portable 2×2 tile: four scalar row reductions.
+pub fn tile2_scalar(a0: &[u64], a1: &[u64], b0: &[u64], b1: &[u64]) -> [u32; 4] {
+    [scalar_row(a0, b0), scalar_row(a0, b1), scalar_row(a1, b0), scalar_row(a1, b1)]
+}
+
 /// Portable xnor+popcount row reduction — the reference every SIMD kernel
 /// is differentially pinned against.
 ///
@@ -183,6 +212,34 @@ fn row_avx2_checked(arow: &[u64], brow: &[u64]) -> u32 {
     } else {
         scalar_row(arow, brow)
     }
+}
+
+/// Safe wrapper for the AVX2 2×2 register-tile kernel: re-verifies AVX2
+/// on every call and falls back to the scalar tile composition.
+#[cfg(target_arch = "x86_64")]
+fn tile2_avx2_checked(a0: &[u64], a1: &[u64], b0: &[u64], b1: &[u64]) -> [u32; 4] {
+    if is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 support was just confirmed; the kernel performs
+        // only in-bounds slice reads (see module safety argument).
+        unsafe { x86::tile2x2_avx2(a0, a1, b0, b1) }
+    } else {
+        tile2_scalar(a0, a1, b0, b1)
+    }
+}
+
+/// AVX-512 tile: four VPOPCNTDQ row reductions (the zmm kernel already
+/// saturates the popcount port; a dedicated tile buys nothing).
+#[cfg(all(target_arch = "x86_64", feature = "simd-avx512"))]
+fn tile2_avx512_composed(a0: &[u64], a1: &[u64], b0: &[u64], b1: &[u64]) -> [u32; 4] {
+    let f = row_fn(Kernel::Avx512);
+    [f(a0, b0), f(a0, b1), f(a1, b0), f(a1, b1)]
+}
+
+/// NEON tile: four `vcnt` row reductions.
+#[cfg(target_arch = "aarch64")]
+fn tile2_neon_composed(a0: &[u64], a1: &[u64], b0: &[u64], b1: &[u64]) -> [u32; 4] {
+    let f = row_fn(Kernel::Neon);
+    [f(a0, b0), f(a0, b1), f(a1, b0), f(a1, b1)]
 }
 
 /// Safe wrapper for the AVX-512 VPOPCNTDQ kernel; same contract as
@@ -217,7 +274,7 @@ mod x86 {
     //! counts using AVX2 instructions").  A carry-save adder (CSA) tree
     //! compresses 16 input vectors per iteration so the relatively
     //! expensive byte-LUT popcount runs once per 16 vectors instead of
-    //! once per vector; lower CSA tiers carry the残 remainder weights out
+    //! once per vector; lower CSA tiers carry the remainder weights out
     //! of the loop.
 
     use std::arch::x86_64::*;
@@ -358,6 +415,70 @@ mod x86 {
             i += 1;
         }
         acc as u32
+    }
+
+    /// Sum the four u64 lanes of a popcount accumulator.
+    ///
+    /// # Safety
+    /// Requires AVX2 (the accumulator was built with AVX2 adds).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_sum(v: __m256i) -> u64 {
+        // SAFETY: __m256i is plain 256-bit data; viewing it as 4 u64
+        // lanes is the layout `_mm256_add_epi64` already assumes.
+        let lanes: [u64; 4] = core::mem::transmute(v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// 2×2 register-tile xnor+popcount: 4 words per step, each of the
+    /// four operand vectors loaded **once** and consumed by two products.
+    /// A row-at-a-time kernel loads A `n`-times per B pass; this tile
+    /// halves both operand load streams — the classic GEMM register-tile
+    /// argument applied to the popcount reduction.  Accumulators are
+    /// per-64-bit-lane u64 counts (≤ 256 added per step — no overflow for
+    /// any representable row length).
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime (enforced by `tile2_avx2_checked`).  The
+    /// vector loop runs only while `i + 4 <= n` where `n` is the minimum
+    /// of all four slice lengths; the tail uses safe slice indexing.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile2x2_avx2(a0: &[u64], a1: &[u64], b0: &[u64], b1: &[u64]) -> [u32; 4] {
+        let n = a0.len().min(a1.len()).min(b0.len()).min(b1.len());
+        let (a0p, a1p) = (a0.as_ptr(), a1.as_ptr());
+        let (b0p, b1p) = (b0.as_ptr(), b1.as_ptr());
+        let inv = _mm256_set1_epi64x(-1);
+        let mut c00 = _mm256_setzero_si256();
+        let mut c01 = _mm256_setzero_si256();
+        let mut c10 = _mm256_setzero_si256();
+        let mut c11 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds all four 32-byte reads.
+            let va0 = _mm256_loadu_si256(a0p.add(i) as *const __m256i);
+            let va1 = _mm256_loadu_si256(a1p.add(i) as *const __m256i);
+            let vb0 = _mm256_loadu_si256(b0p.add(i) as *const __m256i);
+            let vb1 = _mm256_loadu_si256(b1p.add(i) as *const __m256i);
+            let x00 = _mm256_xor_si256(_mm256_xor_si256(va0, vb0), inv);
+            let x01 = _mm256_xor_si256(_mm256_xor_si256(va0, vb1), inv);
+            let x10 = _mm256_xor_si256(_mm256_xor_si256(va1, vb0), inv);
+            let x11 = _mm256_xor_si256(_mm256_xor_si256(va1, vb1), inv);
+            c00 = _mm256_add_epi64(c00, popcount64x4(x00));
+            c01 = _mm256_add_epi64(c01, popcount64x4(x01));
+            c10 = _mm256_add_epi64(c10, popcount64x4(x10));
+            c11 = _mm256_add_epi64(c11, popcount64x4(x11));
+            i += 4;
+        }
+        let mut out =
+            [lane_sum(c00) as u32, lane_sum(c01) as u32, lane_sum(c10) as u32, lane_sum(c11) as u32];
+        while i < n {
+            out[0] += (!(a0[i] ^ b0[i])).count_ones();
+            out[1] += (!(a0[i] ^ b1[i])).count_ones();
+            out[2] += (!(a1[i] ^ b0[i])).count_ones();
+            out[3] += (!(a1[i] ^ b1[i])).count_ones();
+            i += 1;
+        }
+        out
     }
 }
 
@@ -505,6 +626,35 @@ mod tests {
                 assert_eq!(f(&ones, &ones), (n * 64) as u32, "{k:?} all-match n={n}");
                 assert_eq!(f(&ones, &zeros), 0, "{k:?} all-mismatch n={n}");
                 assert_eq!(f(&zeros, &zeros), (n * 64) as u32, "{k:?} zeros match n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernels_tile2_matches_four_scalar_rows() {
+        // The 2×2 tile must be a pure reordering of the row reductions:
+        // same popcounts, every length class (sub-vector, 4-word blocks,
+        // odd tails).
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 63, 64, 65, 127, 128, 129, 200] {
+            let a0 = words(11 + n as u64, n);
+            let a1 = words(500 + n as u64, n);
+            let b0 = words(900 + n as u64, n);
+            let b1 = words(1300 + n as u64, n);
+            let expect = tile2_scalar(&a0, &a1, &b0, &b1);
+            for k in available_kernels() {
+                assert_eq!(tile2_fn(k)(&a0, &a1, &b0, &b1), expect, "kernel {k:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile2_handles_constant_extremes() {
+        for n in [1usize, 4, 5, 64] {
+            let ones = vec![u64::MAX; n];
+            let zeros = vec![0u64; n];
+            for k in available_kernels() {
+                let t = tile2_fn(k)(&ones, &zeros, &ones, &zeros);
+                assert_eq!(t, [(n * 64) as u32, 0, 0, (n * 64) as u32], "{k:?} n={n}");
             }
         }
     }

@@ -80,6 +80,8 @@ fn print_help() {
          \x20         [--train-examples N] [--test-examples N] [--eval-every N]\n\
          \x20         [--out-ckpt F] [--metrics-csv F] [--seed S]\n\
          \x20 convert --model M --ckpt F --out F.bmx  pack Q-weights to 1 bit\n\
+         \x20         [--fold-thresholds]             fold BN+sign into integer\n\
+         \x20                                         popcount thresholds (.bmx v2)\n\
          \x20 predict --bmx F [--n N] [--batch B]     xnor engine accuracy+speed\n\
          \x20 profile --bmx F | --model M [--models-dir D] [--batch B] [--reps R]\n\
          \x20         [--json [F.json]]               per-layer time/bytes/dispatch\n\
@@ -97,6 +99,8 @@ fn print_help() {
          \x20         files or dirs of perf records;  exits non-zero on regression\n\n\
          common: --artifacts DIR (default ./artifacts)\n\
          env:    BMXNET_FORCE_SCALAR=1 pins the scalar popcount kernel\n\
+         \x20       BMXNET_NO_FOLD=1 keeps the float BN+sign epilogue (no\n\
+         \x20       integer threshold folding at engine load)\n\
          gemm methods on this machine: {}",
         Method::available()
             .iter()
@@ -253,12 +257,16 @@ fn cmd_convert(flags: &Flags) -> Result<()> {
         .map(|(_, s, _)| 4 * s.iter().product::<usize>())
         .sum();
     let act_bit = manifest.model(model)?.act_bit();
-    let bmx = if act_bit > 1 {
+    let mut bmx = if act_bit > 1 {
         // paper §2.1: k-bit weights are quantized but stored as f32
         repro::model::bmx::convert_kbit(&ck, &names, act_bit, &meta)?
     } else {
         convert(&ck, &names, &meta)?
     };
+    if flags.bool("fold-thresholds") {
+        let folded = repro::model::bmx::fold_thresholds(&mut bmx)?;
+        println!("folded {folded} BN+sign triple(s) into integer popcount thresholds");
+    }
     bmx.save(&out)?;
     let packed_bytes = bmx.payload_bytes();
     println!(

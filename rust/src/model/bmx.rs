@@ -9,16 +9,24 @@
 //!
 //! ```text
 //! magic  b"BMX1"
-//! u32    version (1)
+//! u32    version (1 or 2; 2 adds tensor kind 2)
 //! u32    meta length, then UTF-8 JSON metadata (arch, act_bit, ...)
 //! u32    tensor count
 //! per tensor:
 //!     u16  name length + UTF-8 name
-//!     u8   kind: 0 = f32, 1 = packed-binary
+//!     u8   kind: 0 = f32, 1 = packed-binary, 2 = fold thresholds (v2)
 //!     u8   ndim, then u32 dims   (logical shape, pre-packing)
 //!     packed only: u32 words_per_row
 //!     payload: f32 LE  |  u64 LE words (rows * words_per_row)
+//!              |  per channel: u8 op (0=Ge 1=Le 2=ConstFalse 3=ConstTrue) + i32 LE threshold
 //! ```
+//!
+//! Version 2 (`bmxnet convert --fold-thresholds` / [`fold_thresholds`])
+//! replaces each {binary conv → BatchNorm → sign} triple's four f32 BN
+//! vectors with one kind-2 threshold vector (5 bytes/channel instead of
+//! 16) — smaller checkpoints *and* the integer-only folded forward with
+//! no fold work at load.  Version-1 files keep loading unchanged; the
+//! engine folds their legacy scale/shift at load time instead.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -27,10 +35,10 @@ use std::path::Path;
 
 use super::checked_numel;
 use super::ckpt::Checkpoint;
-use crate::gemm::{PackedMatrix, Side};
+use crate::gemm::{ChannelRule, PackedMatrix, Side};
 
 const MAGIC: &[u8; 4] = b"BMX1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Bounds-checked cursor advance over the raw `.bmx` bytes.  The length
 /// comparison is overflow-proof: `n` comes from untrusted size fields.
@@ -50,12 +58,16 @@ pub enum BmxTensor {
     /// Bit-packed binary weight: logical `shape` = [out, ...in dims...],
     /// packed row-major as `out` rows of `words_per_row` u64 words.
     Packed { shape: Vec<usize>, packed: PackedMatrix },
+    /// Folded BN+sign thresholds (format v2): one [`ChannelRule`] per
+    /// output channel of the binary layer this tensor belongs to.
+    Thresholds { rules: Vec<ChannelRule> },
 }
 
 impl BmxTensor {
     pub fn shape(&self) -> &[usize] {
         match self {
             BmxTensor::F32 { shape, .. } | BmxTensor::Packed { shape, .. } => shape,
+            BmxTensor::Thresholds { .. } => &[],
         }
     }
 
@@ -64,6 +76,8 @@ impl BmxTensor {
         match self {
             BmxTensor::F32 { data, .. } => 4 * data.len(),
             BmxTensor::Packed { packed, .. } => packed.payload_bytes(),
+            // u8 op + i32 threshold per channel
+            BmxTensor::Thresholds { rules } => 5 * rules.len(),
         }
     }
 }
@@ -91,6 +105,15 @@ impl BmxModel {
     pub fn get_packed(&self, name: &str) -> Option<(&[usize], &PackedMatrix)> {
         match self.get(name)? {
             BmxTensor::Packed { shape, packed } => Some((shape, packed)),
+            _ => None,
+        }
+    }
+
+    /// Folded thresholds for a binary layer, if this model carries them
+    /// (format v2 / `--fold-thresholds`).
+    pub fn get_thresholds(&self, name: &str) -> Option<&[ChannelRule]> {
+        match self.get(name)? {
+            BmxTensor::Thresholds { rules } => Some(rules),
             _ => None,
         }
     }
@@ -134,6 +157,21 @@ impl BmxModel {
                         out.extend_from_slice(&w.to_le_bytes());
                     }
                 }
+                BmxTensor::Thresholds { rules } => {
+                    out.push(2);
+                    out.push(1); // ndim
+                    out.extend_from_slice(&(rules.len() as u32).to_le_bytes());
+                    for r in rules {
+                        let (op, t): (u8, i32) = match *r {
+                            ChannelRule::Ge(t) => (0, t),
+                            ChannelRule::Le(t) => (1, t),
+                            ChannelRule::Const(false) => (2, 0),
+                            ChannelRule::Const(true) => (3, 0),
+                        };
+                        out.push(op);
+                        out.extend_from_slice(&t.to_le_bytes());
+                    }
+                }
             }
         }
         out
@@ -145,7 +183,7 @@ impl BmxModel {
             bail!("bad .bmx magic");
         }
         let version = u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap());
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             bail!("unsupported .bmx version {version}");
         }
         let mlen = u32::from_le_bytes(take(data, &mut pos, 4)?.try_into().unwrap()) as usize;
@@ -204,6 +242,29 @@ impl BmxModel {
                             packed: PackedMatrix { rows, k, words_per_row: wpr, words },
                         },
                     ));
+                }
+                2 => {
+                    let ch = *shape
+                        .first()
+                        .ok_or_else(|| anyhow!("{name}: threshold tensor needs 1 dim"))?;
+                    let nbytes = ch
+                        .checked_mul(5)
+                        .ok_or_else(|| anyhow!("{name}: threshold payload overflows"))?;
+                    let raw = take(data, &mut pos, nbytes)?;
+                    let rules = raw
+                        .chunks_exact(5)
+                        .map(|c| {
+                            let t = i32::from_le_bytes(c[1..5].try_into().unwrap());
+                            match c[0] {
+                                0 => Ok(ChannelRule::Ge(t)),
+                                1 => Ok(ChannelRule::Le(t)),
+                                2 => Ok(ChannelRule::Const(false)),
+                                3 => Ok(ChannelRule::Const(true)),
+                                op => bail!("{name}: unknown threshold op {op}"),
+                            }
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    tensors.push((name, BmxTensor::Thresholds { rules }));
                 }
                 k => bail!("unknown tensor kind {k} for {name}"),
             }
@@ -313,6 +374,84 @@ pub fn convert_kbit(
         tensors.push((name.clone(), BmxTensor::F32 { shape: shape.clone(), data: out }));
     }
     Ok(BmxModel { meta: meta.to_string(), tensors })
+}
+
+/// Fold every {binary conv → BatchNorm → sign} triple the architecture
+/// exposes into stored thresholds (format v2): each packed weight's BN
+/// (gamma/beta/mean/var — 16 bytes/channel of f32) is removed and
+/// replaced by one kind-2 threshold vector (5 bytes/channel) named
+/// `thr.<layer>`.  The fold math is [`BatchNorm::fold_sign_rules`], so a
+/// folded file loads into exactly the rules the engine would fold from
+/// the legacy tensors at load time.
+///
+/// Foldable triples per architecture: LeNet `conv2 → bn2 → sign` (bn3
+/// feeds tanh, not sign — not foldable); ResNet-18 `s*b*.conv1 → bn1 →
+/// sign` for binary blocks (conv2's bn2 feeds the residual add).
+/// Returns the folded-triple count; errors when there are none (k-bit
+/// and fp models have no sign activation to fold).
+///
+/// [`BatchNorm::fold_sign_rules`]: crate::nn::layers::BatchNorm::fold_sign_rules
+pub fn fold_thresholds(m: &mut BmxModel) -> Result<usize> {
+    let meta = super::json::parse(&m.meta).map_err(|e| anyhow!("bad .bmx metadata: {e}"))?;
+    let arch = meta
+        .get("arch")
+        .and_then(|v| v.as_str())
+        .context("fold-thresholds: metadata missing \"arch\"")?
+        .to_string();
+    // (packed weight, BN prefix, threshold tensor name)
+    let triples: Vec<(String, String, String)> = match arch.as_str() {
+        "lenet" => vec![("conv2.w".into(), "bn2".into(), "thr.conv2".into())],
+        "resnet18" => m
+            .tensors
+            .iter()
+            .filter_map(|(name, t)| {
+                if !matches!(t, BmxTensor::Packed { .. }) {
+                    return None;
+                }
+                let base = name.strip_suffix(".conv1.w")?;
+                Some((name.clone(), format!("{base}.bn1"), format!("thr.{base}.conv1")))
+            })
+            .collect(),
+        other => bail!("fold-thresholds: unknown architecture {other:?}"),
+    };
+    let mut folded = 0usize;
+    for (wname, bn_name, thr_name) in triples {
+        let Some((_, packed)) = m.get_packed(&wname) else { continue };
+        let (rows, k) = (packed.rows, packed.k);
+        let getv = |n: String| -> Result<Vec<f32>> {
+            Ok(m.get_f32(&n)
+                .with_context(|| format!("fold-thresholds: missing tensor {n}"))?
+                .1
+                .to_vec())
+        };
+        let bn = crate::nn::layers::BatchNorm {
+            gamma: getv(format!("params.{bn_name}.gamma"))?,
+            beta: getv(format!("params.{bn_name}.beta"))?,
+            mean: getv(format!("state.{bn_name}.mean"))?,
+            var: getv(format!("state.{bn_name}.var"))?,
+        };
+        anyhow::ensure!(
+            bn.gamma.len() == rows,
+            "fold-thresholds: {bn_name} has {} channels, {wname} has {rows}",
+            bn.gamma.len()
+        );
+        let rules = bn.fold_sign_rules(k);
+        let dead = [
+            format!("params.{bn_name}.gamma"),
+            format!("params.{bn_name}.beta"),
+            format!("state.{bn_name}.mean"),
+            format!("state.{bn_name}.var"),
+        ];
+        m.tensors.retain(|(n, _)| !dead.contains(n));
+        m.tensors.push((thr_name, BmxTensor::Thresholds { rules }));
+        folded += 1;
+    }
+    anyhow::ensure!(
+        folded > 0,
+        "fold-thresholds: no {{binary conv → BatchNorm → sign}} triple found \
+         (k-bit and fp models have nothing to fold)"
+    );
+    Ok(folded)
 }
 
 #[cfg(test)]
@@ -464,5 +603,70 @@ mod tests {
     #[test]
     fn convert_kbit_rejects_k1() {
         assert!(convert_kbit(&sample_ckpt(), &[], 1, "{}").is_err());
+    }
+
+    #[test]
+    fn fold_thresholds_replaces_bn2_with_smaller_thresholds() {
+        let mut m = synth_lenet(3, 1).unwrap();
+        let before = m.payload_bytes();
+        assert_eq!(fold_thresholds(&mut m).unwrap(), 1);
+        let (shape, packed) = m.get_packed("conv2.w").unwrap();
+        let rules = m.get_thresholds("thr.conv2").unwrap();
+        assert_eq!(rules.len(), shape[0]);
+        assert!(m.get_f32("params.bn2.gamma").is_none(), "folded BN must be dropped");
+        assert!(m.get_f32("state.bn2.var").is_none());
+        // bn1 precedes a float conv and bn3 feeds tanh: both stay
+        assert!(m.get_f32("params.bn1.gamma").is_some());
+        assert!(m.get_f32("params.bn3.gamma").is_some());
+        assert!(m.payload_bytes() < before, "thresholds must shrink the payload");
+        // stored rules must equal a load-time fold of the original model
+        let orig = synth_lenet(3, 1).unwrap();
+        let bn = crate::nn::layers::BatchNorm {
+            gamma: orig.get_f32("params.bn2.gamma").unwrap().1.to_vec(),
+            beta: orig.get_f32("params.bn2.beta").unwrap().1.to_vec(),
+            mean: orig.get_f32("state.bn2.mean").unwrap().1.to_vec(),
+            var: orig.get_f32("state.bn2.var").unwrap().1.to_vec(),
+        };
+        assert_eq!(rules, &bn.fold_sign_rules(packed.k)[..]);
+    }
+
+    #[test]
+    fn threshold_tensors_roundtrip_bytes() {
+        let mut m = synth_lenet(4, 1).unwrap();
+        fold_thresholds(&mut m).unwrap();
+        let back = BmxModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(
+            back.get_thresholds("thr.conv2").unwrap(),
+            m.get_thresholds("thr.conv2").unwrap()
+        );
+        assert_eq!(back.tensors.len(), m.tensors.len());
+    }
+
+    #[test]
+    fn version1_files_still_load() {
+        // a v1 reader never wrote kind-2 tensors; a v2 reader must still
+        // accept v1 bytes unchanged (loader back-compat)
+        let m = synth_lenet(5, 1).unwrap();
+        let mut bytes = m.to_bytes();
+        assert_eq!(&bytes[4..8], &2u32.to_le_bytes(), "writer stamps v2");
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let back = BmxModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.tensors.len(), m.tensors.len());
+        assert!(back.get_packed("conv2.w").is_some());
+    }
+
+    #[test]
+    fn future_versions_rejected() {
+        let m = synth_lenet(6, 1).unwrap();
+        let mut bytes = m.to_bytes();
+        bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(BmxModel::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn fold_thresholds_rejects_unfoldable_models() {
+        // k-bit lenet stores conv2.w as f32 — nothing to fold
+        let mut m = synth_lenet(7, 4).unwrap();
+        assert!(fold_thresholds(&mut m).is_err());
     }
 }

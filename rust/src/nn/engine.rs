@@ -27,6 +27,20 @@ pub enum Engine {
     Resnet(Resnet),
 }
 
+/// `BMXNET_NO_FOLD` escape hatch: when set to `1`/`true`/`yes`, engines
+/// keep the float BatchNorm + sign epilogue instead of folding it into
+/// per-channel popcount thresholds at load. Pre-folded `.bmx` files
+/// (with `thr.*` tensors) ignore this — their BN tensors are gone.
+///
+/// Read per engine load (not cached) for the same reason as
+/// [`crate::gemm::simd::force_scalar`].
+pub fn fold_enabled() -> bool {
+    !matches!(
+        std::env::var("BMXNET_NO_FOLD").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
 impl Engine {
     /// Build from a parsed `.bmx` model using its embedded metadata.
     pub fn from_bmx(m: &BmxModel) -> Result<Self> {
@@ -158,16 +172,26 @@ impl Engine {
             .collect())
     }
 
+    /// Which binary-layer epilogue this engine runs: `"thr"` (folded
+    /// integer thresholds) or `"f32bn"` (float BatchNorm + sign).
+    pub fn epilogue(&self) -> &'static str {
+        match self {
+            Engine::Lenet(n) => n.epilogue(),
+            Engine::Resnet(n) => n.epilogue(),
+        }
+    }
+
     /// One-line description of the GEMM dispatch this engine's binary
-    /// layers will use, e.g. `x86_64 · method xnor_fused · kernel avx2`.
-    /// Logged by `bmxnet predict` / `serve` so perf reports can name the
-    /// code path that produced them.
+    /// layers will use, e.g. `x86_64 · method xnor_fused · kernel avx2 ·
+    /// epilogue thr`. Logged by `bmxnet predict` / `serve` so perf
+    /// reports can name the code path that produced them.
     pub fn dispatch_summary(&self) -> String {
         format!(
-            "{arch} · method {method} · kernel {kernel}",
+            "{arch} · method {method} · kernel {kernel} · epilogue {epi}",
             arch = std::env::consts::ARCH,
             method = crate::gemm::Method::auto().label(),
             kernel = crate::gemm::simd::best_kernel().label(),
+            epi = self.epilogue(),
         )
     }
 
@@ -250,6 +274,25 @@ mod tests {
             s.contains(crate::gemm::simd::best_kernel().label()),
             "summary missing kernel: {s}"
         );
+        assert!(
+            s.contains("epilogue thr") || s.contains("epilogue f32bn"),
+            "summary missing epilogue: {s}"
+        );
+    }
+
+    #[test]
+    fn fold_defaults_on_and_fp_models_report_f32bn() {
+        // Don't set the env var here (tests share a process); just pin the
+        // unset-default and the fp-model label.
+        if std::env::var("BMXNET_NO_FOLD").is_err() {
+            assert!(fold_enabled());
+        }
+        let e = Engine::from_bmx(&lenet_model(false)).unwrap();
+        assert_eq!(e.epilogue(), "f32bn");
+        let e = Engine::from_bmx(&lenet_model(true)).unwrap();
+        if fold_enabled() {
+            assert_eq!(e.epilogue(), "thr");
+        }
     }
 
     #[test]

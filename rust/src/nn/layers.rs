@@ -7,7 +7,7 @@
 //! with **+1** (matching `python/compile/layers.py::qconv2d`) because a
 //! zero pad is unrepresentable in the xnor domain.
 
-use crate::gemm::{self, Method, PackedMatrix};
+use crate::gemm::{self, ChannelRule, Method, PackedMatrix};
 use crate::quant::{qactivation_bin, xnor_to_dot};
 use crate::tensor::{conv_output_size, im2col, Tensor};
 
@@ -100,6 +100,70 @@ impl QConv2d {
         let y = rows_to_nchw(&dots, n, self.out_ch, ho, wo);
         Tensor::new(vec![n, self.out_ch, ho, wo], y)
     }
+
+    /// Folded forward: conv + BatchNorm + sign in one pass.  `rules` is
+    /// the layer's folded BN+sign (one [`ChannelRule`] per output
+    /// channel, from [`BatchNorm::fold_sign_rules`] with `k =
+    /// self.packed.k`); the threshold epilogue writes packed sign bits
+    /// directly, so the output never exists as f32.
+    pub fn forward_folded(&self, x: &Tensor, rules: &[ChannelRule]) -> PackedActs {
+        let xp = pad_plus_one(x, self.pad);
+        let [n, c, h, w] = [xp.shape()[0], xp.shape()[1], xp.shape()[2], xp.shape()[3]];
+        assert_eq!(c, self.in_ch, "channel mismatch");
+        let (cols, rows, k) = im2col(xp.data(), n, c, h, w, self.kh, self.kw, self.stride, 0);
+        let ho = conv_output_size(h, self.kh, self.stride, 0);
+        let wo = conv_output_size(w, self.kw, self.stride, 0);
+        let bits = gemm::binary_gemm_packed_b_threshold(&cols, rows, k, &self.packed, rules);
+        PackedActs::new(bits, n, self.out_ch, ho, wo)
+    }
+
+    /// Binary conv over packed activations: bit-domain im2col (spatial
+    /// pads become 1-bits — the same +1 pad value `pad_plus_one` uses in
+    /// f32), prepacked xnor GEMM, f32 dots out.  This is the exit from
+    /// the bit domain when this conv's own BatchNorm cannot fold (e.g. a
+    /// residual add follows it).
+    pub fn forward_packed(&self, x: &PackedActs) -> Tensor {
+        assert_eq!(x.ch, self.in_ch, "channel mismatch");
+        let (hp, wp) = (x.h + 2 * self.pad, x.w + 2 * self.pad);
+        let ho = conv_output_size(hp, self.kh, self.stride, 0);
+        let wo = conv_output_size(wp, self.kw, self.stride, 0);
+        let rows = x.n * ho * wo;
+        let k = self.in_ch * self.kh * self.kw;
+        let mut cols = PackedMatrix::zeroed(rows, k, gemm::Side::A);
+        for ni in 0..x.n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = (ni * ho + oy) * wo + ox;
+                    for ky in 0..self.kh {
+                        let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                        let y_in = iy >= 0 && iy < x.h as isize;
+                        for kx in 0..self.kw {
+                            let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                            let inside = y_in && ix >= 0 && ix < x.w as isize;
+                            // bit index order (c, ky, kx) matches im2col
+                            let base = ky * self.kw + kx;
+                            if inside {
+                                let src = (ni * x.h + iy as usize) * x.w + ix as usize;
+                                for ci in 0..self.in_ch {
+                                    if x.rows.get_bit(src, ci) {
+                                        cols.set_bit(row, ci * self.kh * self.kw + base);
+                                    }
+                                }
+                            } else {
+                                for ci in 0..self.in_ch {
+                                    cols.set_bit(row, ci * self.kh * self.kw + base);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let pops = gemm::xnor_gemm_prepacked(self.method, &cols, &self.packed);
+        let dots: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
+        let y = rows_to_nchw(&dots, x.n, self.out_ch, ho, wo);
+        Tensor::new(vec![x.n, self.out_ch, ho, wo], y)
+    }
 }
 
 /// Full-precision dense layer: w (N, K), optional bias.
@@ -163,6 +227,17 @@ impl QDense {
         let out: Vec<f32> = pops.into_iter().map(|p| xnor_to_dot(p, k)).collect();
         Tensor::new(vec![bsz, self.out_dim], out)
     }
+
+    /// Forward from an already-packed A operand (one packed row per
+    /// batch element, bits in the layer's input order) — the folded
+    /// path's entry, fed by [`PackedActs::to_dense_rows`].
+    pub fn forward_packed(&self, a: &PackedMatrix) -> Tensor {
+        assert_eq!(a.k, self.in_dim, "qdense packed input dim mismatch");
+        let pops = gemm::xnor_gemm_prepacked(self.method, a, &self.packed);
+        let out: Vec<f32> =
+            pops.into_iter().map(|p| xnor_to_dot(p, self.in_dim)).collect();
+        Tensor::new(vec![a.rows, self.out_dim], out)
+    }
 }
 
 /// BatchNorm (inference: running stats), channel axis 1 for 4-D, 1 for 2-D.
@@ -175,6 +250,29 @@ pub struct BatchNorm {
 }
 
 impl BatchNorm {
+    /// The inference-time affine form: per-channel `(scale, shift)` with
+    /// `y = scale·x + shift`.  Single source of truth shared by
+    /// [`BatchNorm::forward`] and the threshold fold
+    /// ([`gemm::fold_bn_sign`] consumes exactly these values, which is
+    /// what makes the folded path bit-exact against this forward).
+    pub fn scale_shift(&self) -> (Vec<f32>, Vec<f32>) {
+        let ch = self.gamma.len();
+        let scale: Vec<f32> = (0..ch)
+            .map(|c| self.gamma[c] / (self.var[c] + BN_EPS).sqrt())
+            .collect();
+        let shift: Vec<f32> =
+            (0..ch).map(|c| self.beta[c] - self.mean[c] * scale[c]).collect();
+        (scale, shift)
+    }
+
+    /// Fold this BatchNorm followed by a sign activation into per-channel
+    /// popcount rules for a preceding binary GEMM with reduction length
+    /// `k` (the conv/dense layer's `packed.k`).
+    pub fn fold_sign_rules(&self, k: usize) -> Vec<ChannelRule> {
+        let (scale, shift) = self.scale_shift();
+        gemm::fold_bn_sign_all(&scale, &shift, k)
+    }
+
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let ch = self.gamma.len();
         let mut y = x.clone();
@@ -184,11 +282,7 @@ impl BatchNorm {
             1
         };
         assert_eq!(x.shape()[1], ch, "batchnorm channel mismatch");
-        let scale: Vec<f32> = (0..ch)
-            .map(|c| self.gamma[c] / (self.var[c] + BN_EPS).sqrt())
-            .collect();
-        let shift: Vec<f32> =
-            (0..ch).map(|c| self.beta[c] - self.mean[c] * scale[c]).collect();
+        let (scale, shift) = self.scale_shift();
         let data = y.data_mut();
         let n = x.shape()[0];
         for ni in 0..n {
@@ -201,6 +295,98 @@ impl BatchNorm {
         }
         y
     }
+}
+
+/// Bit-packed binary activations between folded layers: one packed row
+/// per spatial position (row index `(ni*h + y)*w + x`, matching the
+/// im2col output-row order, which is how the threshold epilogue emits
+/// them), `ch` bits per row (bit 1 == +1), A-side pad bits preset.
+///
+/// This is the only form activations take between consecutive binary
+/// layers on the folded path — 1 bit per value, never f32.
+#[derive(Debug, Clone)]
+pub struct PackedActs {
+    pub n: usize,
+    pub ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub rows: PackedMatrix,
+}
+
+impl PackedActs {
+    pub fn new(rows: PackedMatrix, n: usize, ch: usize, h: usize, w: usize) -> Self {
+        assert_eq!(rows.rows, n * h * w, "packed activation row count mismatch");
+        assert_eq!(rows.k, ch, "packed activation channel count mismatch");
+        Self { n, ch, h, w, rows }
+    }
+
+    /// Repack into one packed-A row per image with bits in NCHW order
+    /// (`(c*h + y)*w + x`) — the order `flatten` would produce in f32 —
+    /// so a folded conv feeds a QDense without leaving the bit domain.
+    /// Integer-only: a per-bit shuffle, no float materialization.
+    pub fn to_dense_rows(&self) -> PackedMatrix {
+        let k = self.ch * self.h * self.w;
+        let mut out = PackedMatrix::zeroed(self.n, k, gemm::Side::A);
+        for ni in 0..self.n {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let src = (ni * self.h + y) * self.w + x;
+                    for c in 0..self.ch {
+                        if self.rows.get_bit(src, c) {
+                            out.set_bit(ni, (c * self.h + y) * self.w + x);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Unpack to a ±1 f32 NCHW tensor — the fallback exit from the bit
+    /// domain (and a test helper for comparing against the f32 path).
+    pub fn to_tensor(&self) -> Tensor {
+        let mut out = vec![-1.0f32; self.n * self.ch * self.h * self.w];
+        for ni in 0..self.n {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let src = (ni * self.h + y) * self.w + x;
+                    for c in 0..self.ch {
+                        if self.rows.get_bit(src, c) {
+                            out[((ni * self.ch + c) * self.h + y) * self.w + x] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![self.n, self.ch, self.h, self.w], out)
+    }
+}
+
+/// 2×2 max pool (stride 2, VALID) in the bit domain: `sign(max(y)) ==
+/// OR(sign(y))` — a window's max is ≥ 0 iff any element is — so
+/// per-channel pooling is a word-wise OR of the four position rows
+/// (channels are bit lanes).  A-side pad bits are 1 in every input row
+/// and stay 1 under OR, so the output is a valid packed-A operand.
+pub fn maxpool2_bits(x: &PackedActs) -> PackedActs {
+    let (ho, wo) = (x.h / 2, x.w / 2);
+    let mut out = PackedMatrix::zeroed(x.n * ho * wo, x.ch, gemm::Side::A);
+    for ni in 0..x.n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = (ni * ho + oy) * wo + ox;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let src = (ni * x.h + oy * 2 + dy) * x.w + ox * 2 + dx;
+                        let srow = x.rows.row(src);
+                        for (d, &s) in out.row_mut(dst).iter_mut().zip(srow) {
+                            *d |= s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    PackedActs::new(out, x.n, x.ch, ho, wo)
 }
 
 /// 2×2 max pooling, stride 2, VALID.
@@ -454,5 +640,141 @@ mod tests {
         let a = Tensor::new(vec![2], vec![1.0, 2.0]);
         let b = Tensor::new(vec![2], vec![0.5, -2.0]);
         assert_eq!(add(&a, &b).data(), &[1.5, 0.0]);
+    }
+
+    /// Random BN with mixed-sign gammas (flipped comparisons) and one
+    /// zero-variance channel, over `ch` channels.
+    fn edge_bn(seed: u64, ch: usize) -> BatchNorm {
+        let g = lcg(seed, ch);
+        BatchNorm {
+            gamma: g.iter().map(|&v| v * 3.0).collect(), // mixed signs
+            beta: lcg(seed + 1, ch),
+            mean: lcg(seed + 2, ch),
+            var: lcg(seed + 3, ch)
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if i == 0 { 0.0 } else { v.abs() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn folded_qconv_is_bit_exact_vs_conv_bn_sign() {
+        // 6 output channels (odd-ish), negative gammas, zero variance.
+        let (o, c, kh, kw) = (6, 4, 3, 3);
+        let wf: Vec<f32> = lcg(10, o * c * kh * kw).iter().map(|&v| sign_binarize(v)).collect();
+        let packed = PackedMatrix::pack_rows(&wf, o, c * kh * kw, Side::B);
+        let qconv = QConv2d::new(packed, [o, c, kh, kw], 1, 1);
+        let bn = edge_bn(20, o);
+        let x = Tensor::new(
+            vec![2, c, 8, 8],
+            lcg(11, 2 * c * 64).iter().map(|&v| sign_binarize(v)).collect(),
+        );
+        let rules = bn.fold_sign_rules(qconv.packed.k);
+        let folded = qconv.forward_folded(&x, &rules);
+        let unfolded = qactivation(&bn.forward(&qconv.forward(&x)));
+        assert_eq!(folded.to_tensor().data(), unfolded.data());
+    }
+
+    #[test]
+    fn bit_maxpool_matches_f32_maxpool_then_sign() {
+        // arbitrary f32 input -> BN -> the two pool orders must agree:
+        // sign(maxpool(y)) == maxpool_bits(sign-per-element bits)
+        let (n, ch, h, w) = (2, 5, 6, 6);
+        let y = Tensor::new(vec![n, ch, h, w], lcg(30, n * ch * h * w));
+        // pack sign bits per position row
+        let mut rows = PackedMatrix::zeroed(n * h * w, ch, Side::A);
+        for ni in 0..n {
+            for yy in 0..h {
+                for xx in 0..w {
+                    for c in 0..ch {
+                        if y.at4(ni, c, yy, xx) >= 0.0 {
+                            rows.set_bit((ni * h + yy) * w + xx, c);
+                        }
+                    }
+                }
+            }
+        }
+        let pooled_bits = maxpool2_bits(&PackedActs::new(rows, n, ch, h, w));
+        let pooled_f32 = qactivation(&maxpool2(&y));
+        assert_eq!(pooled_bits.to_tensor().data(), pooled_f32.data());
+    }
+
+    #[test]
+    fn dense_rows_match_flatten_order() {
+        let (n, ch, h, w) = (2, 3, 2, 2);
+        let t = Tensor::new(
+            vec![n, ch, h, w],
+            lcg(40, n * ch * h * w).iter().map(|&v| sign_binarize(v)).collect(),
+        );
+        // pack per-position rows from the tensor
+        let mut rows = PackedMatrix::zeroed(n * h * w, ch, Side::A);
+        for ni in 0..n {
+            for yy in 0..h {
+                for xx in 0..w {
+                    for c in 0..ch {
+                        if t.at4(ni, c, yy, xx) >= 0.0 {
+                            rows.set_bit((ni * h + yy) * w + xx, c);
+                        }
+                    }
+                }
+            }
+        }
+        let acts = PackedActs::new(rows, n, ch, h, w);
+        let dense = acts.to_dense_rows();
+        let flat = flatten(&t);
+        for ni in 0..n {
+            for i in 0..ch * h * w {
+                assert_eq!(
+                    dense.get_bit(ni, i),
+                    flat.data()[ni * ch * h * w + i] >= 0.0,
+                    "row {ni} bit {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_qconv_matches_f32_qconv() {
+        // conv over packed input (bit-domain im2col, +1 spatial pads)
+        // must equal the f32 path on the same ±1 activations.
+        let (o, c, kh, kw) = (5, 3, 3, 3);
+        let wf: Vec<f32> = lcg(50, o * c * kh * kw).iter().map(|&v| sign_binarize(v)).collect();
+        for (stride, pad) in [(1, 1), (2, 1), (1, 0)] {
+            let packed = PackedMatrix::pack_rows(&wf, o, c * kh * kw, Side::B);
+            let qconv = QConv2d::new(packed, [o, c, kh, kw], stride, pad);
+            let (n, h, w) = (2, 6, 6);
+            let xv: Vec<f32> =
+                lcg(51, n * c * h * w).iter().map(|&v| sign_binarize(v)).collect();
+            let x = Tensor::new(vec![n, c, h, w], xv);
+            let mut rows = PackedMatrix::zeroed(n * h * w, c, Side::A);
+            for ni in 0..n {
+                for yy in 0..h {
+                    for xx in 0..w {
+                        for ci in 0..c {
+                            if x.at4(ni, ci, yy, xx) >= 0.0 {
+                                rows.set_bit((ni * h + yy) * w + xx, ci);
+                            }
+                        }
+                    }
+                }
+            }
+            let acts = PackedActs::new(rows, n, c, h, w);
+            let got = qconv.forward_packed(&acts);
+            let expect = qconv.forward(&x);
+            assert_eq!(got.shape(), expect.shape(), "stride={stride} pad={pad}");
+            assert_eq!(got.data(), expect.data(), "stride={stride} pad={pad}");
+        }
+    }
+
+    #[test]
+    fn packed_qdense_matches_f32_qdense() {
+        let (n, k) = (4, 70);
+        let wf: Vec<f32> = lcg(60, n * k).iter().map(|&v| sign_binarize(v)).collect();
+        let q = QDense::new(PackedMatrix::pack_rows(&wf, n, k, Side::B), n, k);
+        let xv: Vec<f32> = lcg(61, 3 * k).iter().map(|&v| sign_binarize(v)).collect();
+        let x = Tensor::new(vec![3, k], xv.clone());
+        let pa = PackedMatrix::pack_rows(&xv, 3, k, Side::A);
+        assert_eq!(q.forward_packed(&pa).data(), q.forward(&x).data());
     }
 }

@@ -4,6 +4,7 @@ use anyhow::{bail, Context, Result};
 
 use super::layers as L;
 use crate::gemm::dispatch::Method;
+use crate::gemm::ChannelRule;
 use crate::model::bmx::BmxModel;
 use crate::obs::Profiler;
 use crate::tensor::Tensor;
@@ -20,7 +21,13 @@ pub struct Lenet {
     bn1: L::BatchNorm,
     conv2_fp: Option<L::Conv2d>,
     conv2_bin: Option<L::QConv2d>,
-    bn2: L::BatchNorm,
+    /// Float BN after conv2; absent when the model file ships pre-folded
+    /// thresholds (`thr.conv2`) instead of BN tensors.
+    bn2: Option<L::BatchNorm>,
+    /// Per-channel popcount thresholds replacing bn2 + sign (paper §2.2.1
+    /// taken to its integer-only conclusion). `Some` ⇒ conv2 runs the
+    /// fused threshold epilogue and pool2/fc1 stay in the bit domain.
+    fold2: Option<Vec<ChannelRule>>,
     fc1_fp: Option<L::Dense>,
     fc1_bin: Option<L::QDense>,
     bn3: L::BatchNorm,
@@ -50,8 +57,18 @@ impl Lenet {
     }
 
     /// Build with an explicit act_bit (k > 1: quantized f32 weights,
-    /// k-bit QActivation, standard dots — paper §2.1).
+    /// k-bit QActivation, standard dots — paper §2.1). Folding follows
+    /// the `BMXNET_NO_FOLD` escape hatch (see [`super::engine::fold_enabled`]).
     pub fn from_bmx_act_bit(m: &BmxModel, binary: bool, act_bit: u32) -> Result<Self> {
+        Self::from_bmx_with_fold(m, binary, act_bit, super::engine::fold_enabled())
+    }
+
+    /// Build with an explicit fold decision (tests use this instead of
+    /// mutating the environment). `fold` only matters on the xnor path
+    /// (`binary && act_bit == 1`); a model file that already ships
+    /// `thr.conv2` thresholds is always folded — there is no BN left to
+    /// run the float epilogue with.
+    pub fn from_bmx_with_fold(m: &BmxModel, binary: bool, act_bit: u32, fold: bool) -> Result<Self> {
         let (s, w) = get_f32(m, "params.conv1.w")?;
         let conv1 = L::Conv2d::new(
             w,
@@ -61,29 +78,39 @@ impl Lenet {
             0,
         );
         let bn1 = get_bn(m, "bn1")?;
-        let bn2 = get_bn(m, "bn2")?;
         let bn3 = get_bn(m, "bn3")?;
         let (fs, fw) = get_f32(m, "params.fc2.w")?;
         let fc2 = L::Dense::new(fw, Some(get_f32(m, "params.fc2.b")?.1), fs[0], fs[1]);
 
-        let (conv2_fp, conv2_bin, fc1_fp, fc1_bin) = if binary && act_bit > 1 {
+        let (conv2_fp, conv2_bin, fc1_fp, fc1_bin, bn2, fold2) = if binary && act_bit > 1 {
             // k-bit mode: weights were Eq.1-quantized by convert_kbit and
             // stored f32; compute uses the standard float GEMM (§2.1).
             let (cs, cw) = get_f32(m, "params.conv2.w")?;
             let c2 = L::Conv2d::new(cw, None, [cs[0], cs[1], cs[2], cs[3]], 1, 0);
             let (ds, dw) = get_f32(m, "params.fc1.w")?;
             let d1 = L::Dense::new(dw, None, ds[0], ds[1]);
-            (Some(c2), None, Some(d1), None)
+            (Some(c2), None, Some(d1), None, Some(get_bn(m, "bn2")?), None)
         } else if binary {
             let (cs, packed) = m
                 .get_packed("conv2.w")
                 .context("binary lenet: missing packed conv2.w")?;
-            let qc = L::QConv2d::new(packed.clone(), [cs[0], cs[1], cs[2], cs[3]], 1, 0);
+            let mut qc = L::QConv2d::new(packed.clone(), [cs[0], cs[1], cs[2], cs[3]], 1, 0);
             let (ds, dpacked) = m
                 .get_packed("fc1.w")
                 .context("binary lenet: missing packed fc1.w")?;
             let qd = L::QDense::new(dpacked.clone(), ds[0], ds[1]);
-            (None, Some(qc), None, Some(qd))
+            let (bn2, fold2) = if let Some(rules) = m.get_thresholds("thr.conv2") {
+                // Pre-folded file: BN tensors are gone, thresholds rule.
+                (None, Some(rules.to_vec()))
+            } else {
+                let bn = get_bn(m, "bn2")?;
+                let fold2 = fold.then(|| bn.fold_sign_rules(qc.packed.k));
+                (Some(bn), fold2)
+            };
+            if fold2.is_some() {
+                qc.method = Method::XnorFusedThresh;
+            }
+            (None, Some(qc), None, Some(qd), bn2, fold2)
         } else {
             let (cs, cw) = get_f32(m, "params.conv2.w")?;
             let c2 = L::Conv2d::new(
@@ -95,7 +122,7 @@ impl Lenet {
             );
             let (ds, dw) = get_f32(m, "params.fc1.w")?;
             let d1 = L::Dense::new(dw, Some(get_f32(m, "params.fc1.b")?.1), ds[0], ds[1]);
-            (Some(c2), None, Some(d1), None)
+            (Some(c2), None, Some(d1), None, Some(get_bn(m, "bn2")?), None)
         };
         Ok(Self {
             binary,
@@ -105,11 +132,23 @@ impl Lenet {
             conv2_fp,
             conv2_bin,
             bn2,
+            fold2,
             fc1_fp,
             fc1_bin,
             bn3,
             fc2,
         })
+    }
+
+    /// Which conv2 epilogue this instance runs: `"thr"` (folded integer
+    /// thresholds, bit-domain pool2/fc1) or `"f32bn"` (float BatchNorm
+    /// then sign). Bench cell ids and `dispatch_summary` carry this label.
+    pub fn epilogue(&self) -> &'static str {
+        if self.fold2.is_some() {
+            "thr"
+        } else {
+            "f32bn"
+        }
     }
 
     /// Forward pass: x (B, 1, 28, 28) -> logits (B, 10).
@@ -138,6 +177,39 @@ impl Lenet {
         let h = layer(prof, || "bn1".into(), "batchnorm", None, bytes, || self.bn1.forward(&h));
 
         let bytes = h.data().len() * 4;
+        if let (true, Some(rules)) = (self.binary && self.act_bit == 1, self.fold2.as_deref()) {
+            // Integer-only tail: conv2's popcount accumulators compare
+            // against the folded thresholds and emit the next layer's
+            // packed bits directly — no f32 tensor until after fc1.
+            let hb = layer(prof, || "qact2".into(), "sign", None, bytes, || L::qactivation(&h));
+            let c = self.conv2_bin.as_ref().unwrap();
+            let cb = bytes + c.packed.words.len() * 8;
+            let hbits = layer(prof, || "conv2".into(), "qconv", Some(c.method), cb, || {
+                c.forward_folded(&hb, rules) // (B,64,8,8) packed
+            });
+            let pb = hbits.rows.words.len() * 8;
+            let hbits = layer(prof, || "pool2".into(), "maxpool2_bits", None, pb, || {
+                L::maxpool2_bits(&hbits) // (B,64,4,4) packed
+            });
+            let rows = hbits.to_dense_rows();
+            let d = self.fc1_bin.as_ref().unwrap();
+            let db = rows.words.len() * 8 + d.packed.words.len() * 8;
+            let h = layer(prof, || "fc1".into(), "qdense", Some(d.method), db, || {
+                d.forward_packed(&rows)
+            });
+            let bytes = h.data().len() * 4;
+            let h = layer(prof, || "bn3".into(), "batchnorm", None, bytes, || self.bn3.forward(&h));
+            let h = layer(prof, || "act3".into(), "tanh", None, bytes, || L::tanh(&h));
+            let fb = bytes + self.fc2.w.len() * 4;
+            return Ok(layer(
+                prof,
+                || "fc2".into(),
+                "dense_f32",
+                Some(Method::BlockedF32),
+                fb,
+                || self.fc2.forward(&h),
+            ));
+        }
         let h = if self.binary && self.act_bit > 1 {
             let hq = layer(prof, || "qact2".into(), "qact_k", None, bytes, || {
                 L::qactivation_k(&h, self.act_bit)
@@ -162,7 +234,8 @@ impl Lenet {
             })
         };
         let bytes = h.data().len() * 4;
-        let h = layer(prof, || "bn2".into(), "batchnorm", None, bytes, || self.bn2.forward(&h));
+        let bn2 = self.bn2.as_ref().expect("unfolded lenet path requires bn2");
+        let h = layer(prof, || "bn2".into(), "batchnorm", None, bytes, || bn2.forward(&h));
         let h = if self.binary {
             h
         } else {
@@ -260,6 +333,63 @@ pub(crate) mod tests {
         assert!(conv2.bytes > 0);
         let act = recs.iter().find(|r| r.name == "act1").unwrap();
         assert!(act.method.is_none() && act.kernel.is_none());
+    }
+
+    #[test]
+    fn folded_logits_match_unfolded_bit_exactly() {
+        let ck = fake_ckpt(true);
+        let names = inventory::lenet(true).binary_names();
+        let m = convert(&ck, &names, "{}").unwrap();
+        let folded = Lenet::from_bmx_with_fold(&m, true, 1, true).unwrap();
+        let unfolded = Lenet::from_bmx_with_fold(&m, true, 1, false).unwrap();
+        assert_eq!(folded.epilogue(), "thr");
+        assert_eq!(unfolded.epilogue(), "f32bn");
+        let data: Vec<f32> =
+            (0..2 * 28 * 28).map(|i| ((i * 37 + 11) % 97) as f32 / 48.5 - 1.0).collect();
+        let x = Tensor::new(vec![2, 1, 28, 28], data);
+        let yf = folded.forward(&x).unwrap();
+        let yu = unfolded.forward(&x).unwrap();
+        assert_eq!(yf.shape(), yu.shape());
+        // Bit-exact, not approximately equal: the fold is constructed to
+        // reproduce the f32 BN+sign decision for every popcount.
+        assert_eq!(yf.data(), yu.data());
+    }
+
+    #[test]
+    fn prefolded_model_file_loads_without_bn_and_matches() {
+        let ck = fake_ckpt(true);
+        let names = inventory::lenet(true).binary_names();
+        let m = convert(&ck, &names, r#"{"arch": "lenet"}"#).unwrap();
+        let unfolded = Lenet::from_bmx_with_fold(&m, true, 1, false).unwrap();
+        let mut mf = m.clone();
+        crate::model::bmx::fold_thresholds(&mut mf).unwrap();
+        // Even with folding "disabled", a pre-folded file runs thresholds:
+        // there are no bn2 tensors left to do anything else with.
+        let net = Lenet::from_bmx_with_fold(&mf, true, 1, false).unwrap();
+        assert_eq!(net.epilogue(), "thr");
+        let data: Vec<f32> =
+            (0..28 * 28).map(|i| ((i * 13 + 5) % 89) as f32 / 44.5 - 1.0).collect();
+        let x = Tensor::new(vec![1, 1, 28, 28], data);
+        assert_eq!(net.forward(&x).unwrap().data(), unfolded.forward(&x).unwrap().data());
+    }
+
+    #[test]
+    fn folded_forward_stays_in_bit_domain_between_binary_layers() {
+        let ck = fake_ckpt(true);
+        let names = inventory::lenet(true).binary_names();
+        let m = convert(&ck, &names, "{}").unwrap();
+        // Explicit fold=true: env-independent (CI runs a BMXNET_NO_FOLD leg).
+        let net = Lenet::from_bmx_with_fold(&m, true, 1, true).unwrap();
+        let prof = Profiler::new();
+        let x = Tensor::full(vec![1, 1, 28, 28], 0.3);
+        net.forward_with(&x, Some(&prof)).unwrap();
+        let recs = prof.take();
+        let pool2 = recs.iter().find(|r| r.name == "pool2").unwrap();
+        assert_eq!(pool2.kind, "maxpool2_bits");
+        let conv2 = recs.iter().find(|r| r.name == "conv2").unwrap();
+        assert_eq!(conv2.method, Some("xnor_fused_thr"));
+        // qact3 is absorbed into the conv2 threshold epilogue.
+        assert!(!recs.iter().any(|r| r.name == "qact3"));
     }
 
     #[test]

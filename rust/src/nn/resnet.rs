@@ -6,6 +6,7 @@ use anyhow::{bail, Context, Result};
 use super::layers as L;
 use super::lenet::{get_bn, get_f32};
 use crate::gemm::dispatch::Method;
+use crate::gemm::ChannelRule;
 use crate::model::bmx::BmxModel;
 use crate::obs::Profiler;
 use crate::tensor::Tensor;
@@ -23,7 +24,13 @@ struct Block {
     name: String,
     binary: bool,
     conv1: BlockConv,
-    bn1: L::BatchNorm,
+    /// Float BN after conv1; absent when the model ships pre-folded
+    /// `thr.{name}.conv1` thresholds instead of BN tensors.
+    bn1: Option<L::BatchNorm>,
+    /// Folded bn1+sign thresholds: conv1 runs the fused threshold
+    /// epilogue and conv2 consumes its packed bits directly. bn2 feeds
+    /// the residual add and stays float (not foldable).
+    fold1: Option<Vec<ChannelRule>>,
     conv2: BlockConv,
     bn2: L::BatchNorm,
     down: Option<(L::Conv2d, L::BatchNorm)>,
@@ -64,7 +71,16 @@ fn load_conv(
 }
 
 impl Resnet {
+    /// Folding follows the `BMXNET_NO_FOLD` escape hatch (see
+    /// [`super::engine::fold_enabled`]).
     pub fn from_bmx(m: &BmxModel, fp_stages: &[usize]) -> Result<Self> {
+        Self::from_bmx_with_fold(m, fp_stages, super::engine::fold_enabled())
+    }
+
+    /// Build with an explicit fold decision (tests use this instead of
+    /// mutating the environment). Pre-folded files (with `thr.*` tensors)
+    /// always run thresholds regardless of `fold`.
+    pub fn from_bmx_with_fold(m: &BmxModel, fp_stages: &[usize], fold: bool) -> Result<Self> {
         let (ss, sw) = get_f32(m, "params.stem.w")?;
         let width = ss[0];
         let stem = L::Conv2d::new(sw, None, [ss[0], ss[1], ss[2], ss[3]], 1, 1);
@@ -79,7 +95,30 @@ impl Resnet {
                 let name = format!("s{s}b{b}");
                 let conv1 = load_conv(m, &format!("{name}.conv1.w"), binary, stride, 1)?;
                 let conv2 = load_conv(m, &format!("{name}.conv2.w"), binary, 1, 1)?;
-                let bn1 = get_bn(m, &format!("{name}.bn1"))?;
+                let (conv1, bn1, fold1) = if binary {
+                    let (bn1, fold1) =
+                        if let Some(rules) = m.get_thresholds(&format!("thr.{name}.conv1")) {
+                            (get_bn(m, &format!("{name}.bn1")).ok(), Some(rules.to_vec()))
+                        } else {
+                            let bn = get_bn(m, &format!("{name}.bn1"))?;
+                            let k = match &conv1 {
+                                BlockConv::Bin(q) => q.packed.k,
+                                BlockConv::Fp(_) => unreachable!("binary block loads packed"),
+                            };
+                            let fold1 = fold.then(|| bn.fold_sign_rules(k));
+                            (Some(bn), fold1)
+                        };
+                    let conv1 = match (fold1.is_some(), conv1) {
+                        (true, BlockConv::Bin(mut q)) => {
+                            q.method = Method::XnorFusedThresh;
+                            BlockConv::Bin(q)
+                        }
+                        (_, c) => c,
+                    };
+                    (conv1, bn1, fold1)
+                } else {
+                    (conv1, Some(get_bn(m, &format!("{name}.bn1"))?), None)
+                };
                 let bn2 = get_bn(m, &format!("{name}.bn2"))?;
                 let down = if stride != 1 || in_ch != out_ch {
                     let (ds, dw) = get_f32(m, &format!("params.{name}.down.w"))?;
@@ -89,7 +128,7 @@ impl Resnet {
                 } else {
                     None
                 };
-                blocks.push(Block { name, binary, conv1, bn1, conv2, bn2, down });
+                blocks.push(Block { name, binary, conv1, bn1, fold1, conv2, bn2, down });
                 in_ch = out_ch;
             }
         }
@@ -104,6 +143,16 @@ impl Resnet {
             blocks,
             fc,
         })
+    }
+
+    /// Which conv1 epilogue the binary blocks run: `"thr"` (folded
+    /// integer thresholds) or `"f32bn"` (float BatchNorm then sign).
+    pub fn epilogue(&self) -> &'static str {
+        if self.blocks.iter().any(|b| b.fold1.is_some()) {
+            "thr"
+        } else {
+            "f32bn"
+        }
     }
 
     /// Forward: x (B, 3, 32, 32) -> logits (B, classes).
@@ -181,7 +230,43 @@ fn block_forward(blk: &Block, x: &Tensor, prof: Option<&Profiler>) -> Tensor {
     let nm = &blk.name;
     let mut h;
     let bytes = x.data().len() * 4;
-    if blk.binary {
+    if blk.binary && blk.fold1.is_some() {
+        // Integer tail: conv1's threshold epilogue emits packed bits
+        // (bn1 + sign folded in), conv2 consumes them via bit-domain
+        // im2col. No f32 tensor between the two binary convs.
+        let rules = blk.fold1.as_deref().unwrap();
+        let q1 = match &blk.conv1 {
+            BlockConv::Bin(q) => q,
+            BlockConv::Fp(_) => unreachable!("folded block is binary"),
+        };
+        let q2 = match &blk.conv2 {
+            BlockConv::Bin(q) => q,
+            BlockConv::Fp(_) => unreachable!("folded block is binary"),
+        };
+        let hb = layer(prof, || format!("{nm}.qact1"), "sign", None, bytes, || L::qactivation(x));
+        let cb = bytes + conv_bytes(&blk.conv1);
+        let bits = layer(
+            prof,
+            || format!("{nm}.conv1"),
+            "qconv",
+            Some(q1.method),
+            cb,
+            || q1.forward_folded(&hb, rules),
+        );
+        let cb = bits.rows.words.len() * 8 + conv_bytes(&blk.conv2);
+        h = layer(
+            prof,
+            || format!("{nm}.conv2"),
+            "qconv",
+            Some(q2.method),
+            cb,
+            || q2.forward_packed(&bits),
+        );
+        let hbytes = h.data().len() * 4;
+        h = layer(prof, || format!("{nm}.bn2"), "batchnorm", None, hbytes, || {
+            blk.bn2.forward(&h)
+        });
+    } else if blk.binary {
         let hb = layer(prof, || format!("{nm}.qact1"), "sign", None, bytes, || L::qactivation(x));
         let cb = bytes + conv_bytes(&blk.conv1);
         h = layer(
@@ -193,9 +278,8 @@ fn block_forward(blk: &Block, x: &Tensor, prof: Option<&Profiler>) -> Tensor {
             || conv_forward(&blk.conv1, &hb, true),
         );
         let hbytes = h.data().len() * 4;
-        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || {
-            blk.bn1.forward(&h)
-        });
+        let bn1 = blk.bn1.as_ref().expect("unfolded binary block requires bn1");
+        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || bn1.forward(&h));
         let hb = layer(prof, || format!("{nm}.qact2"), "sign", None, hbytes, || {
             L::qactivation(&h)
         });
@@ -223,9 +307,8 @@ fn block_forward(blk: &Block, x: &Tensor, prof: Option<&Profiler>) -> Tensor {
             || conv_forward(&blk.conv1, x, false),
         );
         let hbytes = h.data().len() * 4;
-        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || {
-            blk.bn1.forward(&h)
-        });
+        let bn1 = blk.bn1.as_ref().expect("fp block always has bn1");
+        h = layer(prof, || format!("{nm}.bn1"), "batchnorm", None, hbytes, || bn1.forward(&h));
         h = layer(prof, || format!("{nm}.act1"), "relu", None, hbytes, || L::relu(&h));
         let cb = hbytes + conv_bytes(&blk.conv2);
         h = layer(
@@ -354,6 +437,51 @@ mod tests {
         let c = recs.iter().find(|r| r.name == "s1b1.conv1").unwrap();
         assert_eq!(c.kind, "qconv");
         assert!(c.method.is_some());
+    }
+
+    #[test]
+    fn folded_logits_match_unfolded_bit_exactly() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let folded = Resnet::from_bmx_with_fold(&m, &[], true).unwrap();
+        let unfolded = Resnet::from_bmx_with_fold(&m, &[], false).unwrap();
+        assert_eq!(folded.epilogue(), "thr");
+        assert_eq!(unfolded.epilogue(), "f32bn");
+        let data: Vec<f32> =
+            (0..2 * 3 * 32 * 32).map(|i| ((i * 29 + 3) % 101) as f32 / 50.5 - 1.0).collect();
+        let x = Tensor::new(vec![2, 3, 32, 32], data);
+        let yf = folded.forward(&x).unwrap();
+        let yu = unfolded.forward(&x).unwrap();
+        assert_eq!(yf.shape(), yu.shape());
+        assert_eq!(yf.data(), yu.data());
+    }
+
+    #[test]
+    fn prefolded_model_file_loads_without_bn1_and_matches() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, r#"{"arch": "resnet18"}"#).unwrap();
+        let unfolded = Resnet::from_bmx_with_fold(&m, &[], false).unwrap();
+        let mut mf = m.clone();
+        let n = crate::model::bmx::fold_thresholds(&mut mf).unwrap();
+        assert_eq!(n, NUM_STAGES * BLOCKS_PER_STAGE);
+        let net = Resnet::from_bmx_with_fold(&mf, &[], false).unwrap();
+        assert_eq!(net.epilogue(), "thr");
+        let x = Tensor::full(vec![1, 3, 32, 32], 0.15);
+        assert_eq!(net.forward(&x).unwrap().data(), unfolded.forward(&x).unwrap().data());
+    }
+
+    #[test]
+    fn folded_blocks_absorb_qact2_and_bn1() {
+        let (ck, names) = fake_ckpt(8, 10, &[]);
+        let m = convert(&ck, &names, "{}").unwrap();
+        let net = Resnet::from_bmx_with_fold(&m, &[], true).unwrap();
+        let prof = Profiler::new();
+        net.forward_with(&Tensor::full(vec![1, 3, 32, 32], 0.1), Some(&prof)).unwrap();
+        let recs = prof.take();
+        let c = recs.iter().find(|r| r.name == "s1b1.conv1").unwrap();
+        assert_eq!(c.kind, "qconv");
+        assert_eq!(c.method, Some("xnor_fused_thr"));
+        assert!(!recs.iter().any(|r| r.name == "s1b1.qact2" || r.name == "s1b1.bn1"));
     }
 
     #[test]

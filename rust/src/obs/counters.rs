@@ -20,7 +20,7 @@ use crate::gemm::Method;
 #[allow(clippy::declare_interior_mutable_const)] // array-init pattern
 const ZERO: AtomicU64 = AtomicU64::new(0);
 
-const N_METHODS: usize = 10;
+const N_METHODS: usize = 11;
 /// Kernel columns of the counter grid; the last is the float-GEMM
 /// pseudo-kernel.
 pub const KERNEL_COLUMNS: [&str; 5] = ["scalar", "avx2", "avx512", "neon", "f32"];

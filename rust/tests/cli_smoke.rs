@@ -112,6 +112,7 @@ fn method_labels_are_the_pinned_strings() {
             "xnor_64_avx512",
             "xnor_64_neon",
             "xnor_fused",
+            "xnor_fused_thr",
         ]
     );
 }
@@ -130,7 +131,14 @@ fn available_methods_are_a_stable_subset() {
         last_idx = idx;
     }
     for label in [
-        "naive", "cblas", "xnor_32", "xnor_64", "xnor_64_blk", "xnor_64_omp", "xnor_fused",
+        "naive",
+        "cblas",
+        "xnor_32",
+        "xnor_64",
+        "xnor_64_blk",
+        "xnor_64_omp",
+        "xnor_fused",
+        "xnor_fused_thr",
     ] {
         let m = Method::from_label(label).unwrap();
         assert!(avail.contains(&m), "{label} must always be available");

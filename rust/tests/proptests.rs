@@ -170,6 +170,48 @@ fn prop_prepacked_agrees_with_f32_entry() {
 }
 
 // ---------------------------------------------------------------------------
+// BN+sign threshold folding (integer epilogue ≡ float reference, ∀ channels)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_folded_thresholds_match_f32_bn_sign() {
+    use repro::gemm::{binary_gemm_packed_b, binary_gemm_packed_b_threshold, fold_bn_sign_all};
+    for (seed, mut rng) in cases(60) {
+        let m = 1 + rng.below(6);
+        let n = 1 + rng.below(12);
+        let k = 1 + rng.below(200);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        // Mixed-sign scales with occasional exact zeros; shifts spanning
+        // magnitudes so some channels saturate at the popcount extremes.
+        let scale: Vec<f32> = (0..n)
+            .map(|j| if j % 5 == 4 { 0.0 } else { rng.normal() * 10f32.powi(rng.below(5) as i32 - 2) })
+            .collect();
+        let shift: Vec<f32> = (0..n)
+            .map(|_| rng.normal() * 10f32.powi(rng.below(7) as i32 - 3))
+            .collect();
+        let rules = fold_bn_sign_all(&scale, &shift, k);
+        let pb = PackedMatrix::pack_cols(&b, k, n);
+        let pops = binary_gemm_packed_b(Method::XnorFused, &a, m, k, &pb);
+        let bits = binary_gemm_packed_b_threshold(&a, m, k, &pb, &rules);
+        for i in 0..m {
+            for j in 0..n {
+                let dot = xnor_to_dot(pops[i * n + j], k);
+                let reference = scale[j] * dot + shift[j] >= 0.0;
+                assert_eq!(
+                    bits.get_bit(i, j),
+                    reference,
+                    "seed={seed} ({i},{j}) scale={} shift={} pop={} k={k}",
+                    scale[j],
+                    shift[j],
+                    pops[i * n + j],
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Eq. 1 / Eq. 2 quantization properties
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,111 @@
+//! End-to-end tests of the integer threshold epilogue: folded engines
+//! must produce bit-identical logits to the float BN+sign reference,
+//! pre-folded `.bmx` v2 files must round-trip smaller and load back into
+//! the same rules, and the `BMXNET_NO_FOLD` escape hatch must flip the
+//! epilogue label on a real process (env reads are per-load, so the env
+//! leg runs the installed binary rather than racing this test's threads).
+
+use std::process::Command;
+
+use repro::gemm::{fold_bn_sign, ChannelRule};
+use repro::model::bmx::{fold_thresholds, synth_lenet, BmxModel};
+use repro::nn::lenet::Lenet;
+use repro::nn::Engine;
+use repro::tensor::Tensor;
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("threshold_fold_{}_{name}", std::process::id()))
+}
+
+fn varied_batch(n: usize) -> Tensor {
+    let data: Vec<f32> =
+        (0..n * 28 * 28).map(|i| ((i * 31 + 7) % 113) as f32 / 56.5 - 1.0).collect();
+    Tensor::new(vec![n, 1, 28, 28], data)
+}
+
+#[test]
+fn folded_engine_logits_equal_unfolded_bit_for_bit() {
+    let m = synth_lenet(11, 1).unwrap();
+    let folded = Lenet::from_bmx_with_fold(&m, true, 1, true).unwrap();
+    let unfolded = Lenet::from_bmx_with_fold(&m, true, 1, false).unwrap();
+    let x = varied_batch(3);
+    assert_eq!(folded.forward(&x).unwrap().data(), unfolded.forward(&x).unwrap().data());
+}
+
+#[test]
+fn folded_file_roundtrips_smaller_and_matches() {
+    let m = synth_lenet(12, 1).unwrap();
+    let unfolded = Lenet::from_bmx_with_fold(&m, true, 1, false).unwrap();
+    let mut mf = m.clone();
+    let folded_count = fold_thresholds(&mut mf).unwrap();
+    assert_eq!(folded_count, 1); // lenet: conv2 → bn2 → sign
+    // Thresholds (5 B/channel) replace BN (16 B/channel): smaller file.
+    let (plain, packed) = (m.to_bytes(), mf.to_bytes());
+    assert!(
+        packed.len() < plain.len(),
+        "folded file must shrink: {} vs {}",
+        packed.len(),
+        plain.len()
+    );
+    let path = tmp_path("v2.bmx");
+    std::fs::write(&path, &packed).unwrap();
+    let engine = Engine::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(engine.epilogue(), "thr");
+    let x = varied_batch(2);
+    assert_eq!(engine.forward(&x).unwrap().data(), unfolded.forward(&x).unwrap().data());
+}
+
+#[test]
+fn version1_bytes_still_load_and_fold_at_engine_load() {
+    let m = synth_lenet(13, 1).unwrap();
+    let mut bytes = m.to_bytes();
+    bytes[4..8].copy_from_slice(&1u32.to_le_bytes()); // rewrite header to v1
+    let back = BmxModel::from_bytes(&bytes).unwrap();
+    let unfolded = Lenet::from_bmx_with_fold(&back, true, 1, false).unwrap();
+    let folded = Lenet::from_bmx_with_fold(&back, true, 1, true).unwrap();
+    let x = varied_batch(2);
+    assert_eq!(folded.forward(&x).unwrap().data(), unfolded.forward(&x).unwrap().data());
+}
+
+#[test]
+fn fold_edge_cases_pin_rule_shapes() {
+    let k = 800; // the LeNet conv2 im2col K (32*5*5)
+    // Always-fire / never-fire shifts saturate at the popcount extremes.
+    assert_eq!(fold_bn_sign(1.0, 1e12, k), ChannelRule::Ge(0));
+    assert_eq!(fold_bn_sign(1.0, -1e12, k), ChannelRule::Ge(k as i32 + 1));
+    assert_eq!(fold_bn_sign(-1.0, 1e12, k), ChannelRule::Le(k as i32));
+    assert_eq!(fold_bn_sign(-1.0, -1e12, k), ChannelRule::Le(-1));
+    // Zero scale degenerates to a constant decision on the shift sign.
+    assert_eq!(fold_bn_sign(0.0, 0.5, k), ChannelRule::Const(true));
+    assert_eq!(fold_bn_sign(0.0, -0.5, k), ChannelRule::Const(false));
+    // A negative gamma flips the comparison direction.
+    assert!(matches!(fold_bn_sign(-0.004, 1.5, k), ChannelRule::Le(_)));
+    assert!(matches!(fold_bn_sign(0.004, 1.5, k), ChannelRule::Ge(_)));
+}
+
+/// `BMXNET_NO_FOLD=1` must flip the profile's dispatch line to the float
+/// epilogue; unset, folding is the default. Runs the real binary so the
+/// env var cannot race other tests in this process.
+#[test]
+fn no_fold_env_flips_epilogue_label_in_profile() {
+    let path = tmp_path("env.bmx");
+    synth_lenet(14, 1).unwrap().save(&path).unwrap();
+    let run = |no_fold: bool| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_bmxnet"));
+        cmd.args(["profile", "--bmx", path.to_str().unwrap(), "--batch", "1", "--reps", "1"]);
+        if no_fold {
+            cmd.env("BMXNET_NO_FOLD", "1");
+        } else {
+            cmd.env_remove("BMXNET_NO_FOLD");
+        }
+        let out = cmd.output().expect("run bmxnet profile");
+        assert!(out.status.success(), "profile failed: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let folded = run(false);
+    let unfolded = run(true);
+    std::fs::remove_file(&path).ok();
+    assert!(folded.contains("epilogue thr"), "default must fold: {folded}");
+    assert!(unfolded.contains("epilogue f32bn"), "NO_FOLD must not fold: {unfolded}");
+}

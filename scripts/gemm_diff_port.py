@@ -13,6 +13,14 @@ lane-independent, the simulation reproduces the real kernel's arithmetic
 including the CSA tier ordering, the 64-word block loop, the 4-word
 remainder loop and the scalar tail — the places tail bugs live.
 
+It also ports the integer-threshold epilogue (`rust/src/gemm/fused.rs` +
+`rust/src/nn/layers.rs::fold_sign_rules`): BN scale/shift is computed
+with per-op float32 rounding exactly like the Rust f32 code, folded into
+per-channel popcount threshold rules (Ge/Le/Const, negative gamma flips
+the compare, zero variance saturates), and the fused compare epilogue is
+checked bit-exactly against the unfused f32 BN+sign reference — plus the
+2×2 register-tile microkernel and the bit-domain OR-maxpool identity.
+
 Modes:
   default         run the differential suite; exit nonzero on any mismatch
   --bench PATH    additionally time the port's implementations on the
@@ -32,6 +40,7 @@ Rust toolchain is available to regenerate via
 
 import argparse
 import json
+import math
 import os
 import platform
 import statistics
@@ -184,6 +193,33 @@ KERNELS = {
     "xnor_32": u32_row,
 }
 
+
+def tile2x2_avx2(a0, a1, b0, b1):
+    """Exact simulation of x86::tile2x2_avx2 (2×2 register tile).
+
+    Each 256-bit accumulator holds per-64-bit-lane popcount sums; as in
+    `avx2_row`, modelling the four accumulators by their lane sums is
+    arithmetically identical to the kernel's final `lane_sum` reduction.
+    """
+    n = min(len(a0), len(a1), len(b0), len(b1))
+    c = [0, 0, 0, 0]
+    i = 0
+    while i + 4 <= n:
+        va0, va1 = _vec4(a0, i), _vec4(a1, i)
+        vb0, vb1 = _vec4(b0, i), _vec4(b1, i)
+        c[0] += (~(va0 ^ vb0) & M256).bit_count()
+        c[1] += (~(va0 ^ vb1) & M256).bit_count()
+        c[2] += (~(va1 ^ vb0) & M256).bit_count()
+        c[3] += (~(va1 ^ vb1) & M256).bit_count()
+        i += 4
+    while i < n:
+        c[0] += (~(a0[i] ^ b0[i]) & M64).bit_count()
+        c[1] += (~(a0[i] ^ b1[i]) & M64).bit_count()
+        c[2] += (~(a1[i] ^ b0[i]) & M64).bit_count()
+        c[3] += (~(a1[i] ^ b1[i]) & M64).bit_count()
+        i += 1
+    return c
+
 # ---------------------------------------------------------------------------
 # GEMM entry points (dispatch.rs / fused.rs)
 # ---------------------------------------------------------------------------
@@ -193,18 +229,111 @@ def xnor_gemm(pa, pb, row_fn):
     return [[row_fn(ar, br) for br in pb] for ar in pa]
 
 
-def fused_gemm(a, m, k, pb, row_fn, mr=8, jb=64):
-    """rust/src/gemm/fused.rs: MR-row panel packing, JB-column B tiles."""
+def fused_gemm(a, m, k, pb, row_fn, tile_fn=None, mr=8, jb=64):
+    """rust/src/gemm/fused.rs: MR-row panel packing, JB-column B tiles,
+    2×2 register-tile main loop with single-row cleanup on odd edges."""
     n = len(pb)
+    if tile_fn is None:
+        tile_fn = lambda a0, a1, b0, b1: [
+            row_fn(a0, b0), row_fn(a0, b1), row_fn(a1, b0), row_fn(a1, b1)
+        ]
     c = [[0] * n for _ in range(m)]
     for ic in range(0, m, mr):
         mb = min(mr, m - ic)
         panel = [pack_row(a[(ic + di) * k : (ic + di + 1) * k], "A") for di in range(mb)]
         for jc in range(0, n, jb):
-            for di in range(mb):
-                for dj in range(min(jb, n - jc)):
+            nb = min(jb, n - jc)
+            di = 0
+            while di + 2 <= mb:
+                dj = 0
+                while dj + 2 <= nb:
+                    t = tile_fn(panel[di], panel[di + 1], pb[jc + dj], pb[jc + dj + 1])
+                    c[ic + di][jc + dj] = t[0]
+                    c[ic + di][jc + dj + 1] = t[1]
+                    c[ic + di + 1][jc + dj] = t[2]
+                    c[ic + di + 1][jc + dj + 1] = t[3]
+                    dj += 2
+                while dj < nb:  # odd column tail
                     c[ic + di][jc + dj] = row_fn(panel[di], pb[jc + dj])
+                    c[ic + di + 1][jc + dj] = row_fn(panel[di + 1], pb[jc + dj])
+                    dj += 1
+                di += 2
+            while di < mb:  # odd row tail
+                for dj in range(nb):
+                    c[ic + di][jc + dj] = row_fn(panel[di], pb[jc + dj])
+                di += 1
     return c
+
+
+# ---------------------------------------------------------------------------
+# BN+sign threshold folding (rust/src/gemm/fused.rs fold_bn_sign and
+# rust/src/nn/layers.rs BatchNorm::scale_shift) — strict f32 per-op port
+# ---------------------------------------------------------------------------
+
+BN_EPS = np.float32(1e-5)
+
+
+def bn_scale_shift(gamma, beta, mean, var):
+    """BatchNorm::scale_shift with each op rounded to f32, like Rust."""
+    g, be = np.float32(gamma), np.float32(beta)
+    mu, v = np.float32(mean), np.float32(var)
+    scale = np.float32(g / np.sqrt(np.float32(v + BN_EPS)))
+    shift = np.float32(be - np.float32(mu * scale))
+    return scale, shift
+
+
+def fold_bn_sign(scale, shift, k):
+    """Port of fused::fold_bn_sign: candidate threshold from exact f64
+    algebra, then locally walked against the exact f32 reference so the
+    rule reproduces `scale * dot + shift >= 0` for every popcount."""
+    scale, shift = np.float32(scale), np.float32(shift)
+
+    def fires(p):
+        return bool(scale * np.float32(2 * p - k) + shift >= np.float32(0.0))
+
+    if scale == np.float32(0.0):
+        return ("const", bool(shift >= np.float32(0.0)))
+    cand = (-float(shift) / float(scale) + k) / 2.0
+    if scale > 0.0:
+        t = min(max(math.ceil(cand), 0), k + 1)
+        while t > 0 and fires(t - 1):
+            t -= 1
+        while t <= k and not fires(t):
+            t += 1
+        return ("ge", t)
+    t = min(max(math.floor(cand), -1), k)
+    while t < k and fires(t + 1):
+        t += 1
+    while t >= 0 and not fires(t):
+        t -= 1
+    return ("le", t)
+
+
+def rule_fires(rule, p):
+    op, v = rule
+    if op == "ge":
+        return p >= v
+    if op == "le":
+        return p <= v
+    return v
+
+
+def fused_gemm_threshold(a, m, k, pb, rules, row_fn, tile_fn=None, mr=8, jb=64):
+    """fused::gemm_fused_threshold: popcounts compared per channel against
+    the folded rules, sign bits written to A-side-padded packed rows."""
+    pops = fused_gemm(a, m, k, pb, row_fn, tile_fn, mr, jb)
+    n = len(pb)
+    wpr = (n + 63) // 64
+    out = []
+    for i in range(m):
+        words = [0] * wpr
+        if n % 64:
+            words[-1] = (M64 << (n % 64)) & M64  # next layer's A-side pads
+        for j in range(n):
+            if rule_fires(rules[j], pops[i][j]):
+                words[j // 64] |= 1 << (j % 64)
+        out.append(words)
+    return out
 
 
 def naive_reference(a, b, m, n, k):
@@ -281,6 +410,84 @@ def run_differential(verbose=True):
     if verbose:
         n_checks = len(shapes) * (len(KERNELS) + 1)
         print(f"differential suite: {n_checks} GEMM comparisons, {failures} failures")
+    return failures
+
+
+def run_fold_differential(verbose=True):
+    """Threshold-fold leg: fold math exhaustive over popcounts, the fused
+    threshold epilogue vs the unfused f32 BN+sign reference (negative
+    gamma, zero variance, dead channels, odd channel counts), the 2×2 tile
+    vs four row reductions, and the bit-domain OR-pool identity."""
+    failures = 0
+    # 1) fold math: every rule must reproduce the f32 decision at every
+    #    reachable popcount, including saturating shifts
+    k = 65
+    scales = [0.0, 1.0, -1.0, 0.004, -0.004, 300.0, -300.0, 1e-30, -1e-30]
+    shifts = [0.0, 0.5, -0.5, 1e-3, -1e-3, 64.9, -64.9, 1e9, -1e9]
+    for s in scales:
+        for sh in shifts:
+            rule = fold_bn_sign(s, sh, k)
+            for p in range(k + 1):
+                ref = bool(
+                    np.float32(s) * np.float32(2 * p - k) + np.float32(sh) >= np.float32(0.0)
+                )
+                if rule_fires(rule, p) != ref:
+                    print(f"FAIL fold scale={s} shift={sh} p={p} rule={rule}")
+                    failures += 1
+    # 2) raw BN params -> rules -> fused threshold epilogue, bit-exact vs
+    #    the unfused reference on the same popcounts
+    rng = np.random.default_rng(97)
+    for m, n, k in [(4, 7, 33), (3, 65, 64), (9, 100, 800), (2, 64, 129)]:
+        a = rng.standard_normal(m * k).tolist()
+        b = rng.standard_normal(k * n).tolist()
+        gamma = rng.standard_normal(n).astype(np.float32)
+        gamma[::3] *= np.float32(-1.0)  # negative gamma flips the compare
+        if n > 2:
+            gamma[2] = 0.0  # dead channel -> Const rule
+        beta = rng.standard_normal(n).astype(np.float32)
+        mean = rng.standard_normal(n).astype(np.float32)
+        var = np.abs(rng.standard_normal(n)).astype(np.float32)
+        var[0] = 0.0  # zero-variance channel
+        sc_sh = [bn_scale_shift(gamma[j], beta[j], mean[j], var[j]) for j in range(n)]
+        rules = [fold_bn_sign(sc, sh, k) for sc, sh in sc_sh]
+        pb = pack_cols(b, k, n)
+        pops = fused_gemm(a, m, k, pb, avx2_row, tile2x2_avx2)
+        bits = fused_gemm_threshold(a, m, k, pb, rules, avx2_row, tile2x2_avx2)
+        for i in range(m):
+            for j in range(n):
+                sc, sh = sc_sh[j]
+                ref = bool(sc * np.float32(2 * pops[i][j] - k) + sh >= np.float32(0.0))
+                got = bool(bits[i][j // 64] >> (j % 64) & 1)
+                if got != ref:
+                    print(f"FAIL thr-epilogue m={m} n={n} k={k} ({i},{j})")
+                    failures += 1
+        if n % 64:
+            pad = (M64 << (n % 64)) & M64
+            for i in range(m):
+                if bits[i][-1] & pad != pad:
+                    print(f"FAIL thr pad bits m={m} n={n} k={k} row={i}")
+                    failures += 1
+    # 3) the 2×2 tile is a pure reordering of four row reductions
+    rng2 = np.random.default_rng(5)
+    for words in (0, 1, 3, 4, 5, 8, 65):
+        a0, a1, b0, b1 = (
+            [int(x) for x in rng2.integers(0, 1 << 64, words, dtype=np.uint64)]
+            for _ in range(4)
+        )
+        expect = [scalar_row(a0, b0), scalar_row(a0, b1), scalar_row(a1, b0), scalar_row(a1, b1)]
+        if tile2x2_avx2(a0, a1, b0, b1) != expect:
+            print(f"FAIL tile2 words={words}")
+            failures += 1
+    # 4) bit-domain maxpool == OR: sign(max(y)) == OR(sign(y)) always
+    y = rng.standard_normal((256, 4)).astype(np.float32)
+    if not np.array_equal((y >= 0).any(axis=1), y.max(axis=1) >= 0):
+        print("FAIL or-pool identity")
+        failures += 1
+    if verbose:
+        print(
+            f"threshold-fold suite: {len(scales) * len(shifts)} fold cells, "
+            f"4 epilogue shapes, {failures} failures"
+        )
     return failures
 
 
@@ -465,7 +672,7 @@ def main():
     ap.add_argument("--bench", metavar="PATH", help="also write BENCH_gemm.json to PATH")
     ap.add_argument("--reps", type=int, default=3, help="timed reps per cell for --bench")
     args = ap.parse_args()
-    failures = run_differential()
+    failures = run_differential() + run_fold_differential()
     if failures:
         sys.exit(1)
     if args.bench:

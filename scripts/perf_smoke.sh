@@ -35,9 +35,30 @@ for FAM in gemm tables engine serve serve_policy profile; do
     done
 done
 
+# Engine cells must carry the epilogue label: the folded lenet_bin emits
+# forward/thr cells, the k-bit lenet_q4 stays on the float BN (f32bn).
+for NEEDLE in 'forward/thr' 'forward/f32bn'; do
+    grep -qF "$NEEDLE" "$DIR/base/BENCH_engine.json" \
+        || { echo "perf-smoke: engine record missing $NEEDLE cells" >&2; exit 1; }
+done
+
 # --- 2. self-compare must pass (dir vs dir, exit 0)
 "$BIN" bench-compare "$DIR/base" "$DIR/base" \
     || { echo "perf-smoke: self-compare failed" >&2; exit 1; }
+
+# --- 2b. BMXNET_NO_FOLD=1 leg: the float-epilogue path must also bench
+# and self-compare cleanly, and its cell ids must not claim the folded
+# label (disjoint ids mean bench-compare never mixes the two epilogues).
+BMXNET_FORCE_SCALAR=1 BMXNET_NO_FOLD=1 \
+    "$BIN" bench-suite --quick --filter engine --json "$DIR/nofold"
+grep -qF 'forward/f32bn' "$DIR/nofold/BENCH_engine.json" \
+    || { echo "perf-smoke: no-fold engine record missing f32bn cells" >&2; exit 1; }
+if grep -qF 'forward/thr' "$DIR/nofold/BENCH_engine.json"; then
+    echo "perf-smoke: BMXNET_NO_FOLD=1 still emitted folded thr cells" >&2
+    exit 1
+fi
+"$BIN" bench-compare "$DIR/nofold" "$DIR/nofold" \
+    || { echo "perf-smoke: no-fold self-compare failed" >&2; exit 1; }
 
 # --- 3. injected regression must fail (exit non-zero)
 # Copy the records, zero every MAD (deterministic noise floor), and
