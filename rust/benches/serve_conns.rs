@@ -1,0 +1,25 @@
+//! Gateway connection scaling: closed-loop keep-alive HTTP connections
+//! (binary `x-bmx-f32` bodies) swept against the reactor gateway over
+//! real loopback TCP.
+//!
+//!     cargo bench --bench serve_conns
+//!     BENCH_JSON=out.json cargo bench --bench serve_conns
+//!
+//! Thin driver over the `serve_conns` family of `bench::suite` (knobs:
+//! BENCH_QUICK, BENCH_REPS, BENCH_REQUESTS).  Record results in
+//! EXPERIMENTS.md §Gateway connection scaling (`BENCH_serve_conns.json`).
+
+use repro::bench::{run_family, SuiteOpts};
+
+fn main() {
+    let opts = SuiteOpts::from_env();
+    let record = run_family("serve_conns", &opts).expect("serve_conns family");
+    println!(
+        "(closed-loop: each connection waits for its reply before sending the next; \
+         req/s and p99 as connections grow is the reactor-scaling signal)"
+    );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        record.write(&path).expect("write BENCH_JSON");
+        println!("recorded serve_conns family to {path}");
+    }
+}

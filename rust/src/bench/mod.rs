@@ -19,6 +19,7 @@ pub mod compare;
 pub mod figures;
 pub mod harness;
 pub mod record;
+pub mod serve_conns;
 pub mod serve_scaling;
 pub mod suite;
 pub mod workloads;
@@ -37,5 +38,6 @@ pub use serve_scaling::{
     measure_serve_workload, policy_points, quick_serve_workloads, run_serve_scaling,
     serve_scaling_workloads, PolicyPoint, ServeScalingRow, ServeWorkload, SyntheticBackend,
 };
+pub use serve_conns::{conn_counts, run_serve_conns};
 pub use suite::{run_family, run_gemm_figures, run_suite, SuiteOpts, FAMILIES};
 pub use workloads::{fig1_workloads, fig2_workloads, fig3_workloads, quick_gemm, GemmWorkload};

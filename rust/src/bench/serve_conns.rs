@@ -1,0 +1,234 @@
+//! Connection-count scaling of the reactor gateway: C concurrent
+//! keep-alive HTTP connections, each a closed-loop client (write one
+//! request, wait for the reply, repeat) over real loopback TCP.
+//!
+//! Where the `serve` family measures the *pool* (in-process `Client`
+//! handles, no HTTP), this family measures the *gateway*: non-blocking
+//! connection handling, head parsing, the binary `x-bmx-f32` body path,
+//! and response flushing all sit on the measured path. The signal is
+//! req/s and p99 latency as connections grow past the old
+//! thread-per-connection design's comfort zone.
+//!
+//! Cells: `c={n}/req_s` (higher is better) and `c={n}/p99` ms (lower is
+//! better) per connection count — both direction-aware under
+//! `bmxnet bench-compare`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::harness::{BenchTable, Stats};
+use super::record::{PerfRecord, Unit};
+use super::suite::{suite_provenance, SuiteOpts};
+use crate::coordinator::BatchPolicy;
+use crate::model::bmx::synth_lenet;
+use crate::serve::{Gateway, GatewayConfig, ModelRegistry, PoolConfig, RegistryConfig};
+
+/// Connection counts swept per run.
+pub fn conn_counts(quick: bool) -> &'static [usize] {
+    if quick {
+        &[4, 16]
+    } else {
+        &[8, 64, 256]
+    }
+}
+
+/// One closed-loop rep: `conns` keep-alive connections, `per_conn`
+/// requests each, binary f32 bodies. Returns (req/s, p99 ms).
+fn run_closed_loop(addr: &str, conns: usize, per_conn: usize, body: &[f32]) -> Result<(f64, f64)> {
+    let mut raw = Vec::with_capacity(body.len() * 4);
+    for v in body {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    let head = format!(
+        "POST /v1/models/lenet_bin:classify HTTP/1.1\r\nhost: bench\r\n\
+         content-type: application/x-bmx-f32\r\ncontent-length: {}\r\n\r\n",
+        raw.len()
+    );
+    let mut request = head.into_bytes();
+    request.extend_from_slice(&raw);
+    let request = Arc::new(request);
+
+    let t0 = Instant::now();
+    let lat_us: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| {
+                let request = request.clone();
+                s.spawn(move || -> Result<Vec<u64>> {
+                    let mut stream =
+                        TcpStream::connect(addr).context("connect to bench gateway")?;
+                    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+                    let mut lats = Vec::with_capacity(per_conn);
+                    let mut buf = vec![0u8; 4096];
+                    for _ in 0..per_conn {
+                        let r0 = Instant::now();
+                        stream.write_all(&request)?;
+                        // keep-alive responses are delimited by content-length
+                        let mut acc: Vec<u8> = Vec::with_capacity(512);
+                        loop {
+                            let n = stream.read(&mut buf)?;
+                            if n == 0 {
+                                bail!("gateway closed a keep-alive bench connection");
+                            }
+                            acc.extend_from_slice(&buf[..n]);
+                            if let Some(done) = response_complete(&acc)? {
+                                if acc.len() > done {
+                                    bail!("unexpected pipelined bytes in closed loop");
+                                }
+                                break;
+                            }
+                        }
+                        lats.push(r0.elapsed().as_micros() as u64);
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench client panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut all: Vec<u64> = lat_us.into_iter().flatten().collect();
+    all.sort_unstable();
+    let total = all.len();
+    let p99 = all[((total - 1) as f64 * 0.99).round() as usize] as f64 / 1e3;
+    Ok((total as f64 / wall.max(1e-9), p99))
+}
+
+/// Parse enough of a buffered response to know when it is complete:
+/// `Some(total_len)` once head + content-length bytes are buffered.
+/// Errors on non-200 statuses so a mis-sized body or 429 fails loudly
+/// instead of skewing the measurement.
+fn response_complete(acc: &[u8]) -> Result<Option<usize>> {
+    let Some(head_end) = acc.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4) else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&acc[..head_end]).context("non-UTF-8 response head")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line in {head:?}"))?;
+    if status != 200 {
+        bail!("bench request failed with status {status}: {head:?}");
+    }
+    let content_len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.trim().eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .context("response without content-length")?;
+    if acc.len() >= head_end + content_len {
+        Ok(Some(head_end + content_len))
+    } else {
+        Ok(None)
+    }
+}
+
+/// The `serve_conns` suite family: one real gateway over loopback, a
+/// connection-count sweep of closed-loop keep-alive clients.
+pub fn run_serve_conns(opts: &SuiteOpts) -> Result<PerfRecord> {
+    let reps = opts.reps_or(3, 2);
+    let counts = conn_counts(opts.quick);
+    let max_c = *counts.iter().max().expect("non-empty sweep");
+
+    // Synthetic packed LeNet in a temp models dir — no artifacts needed.
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("bench_serve_conns_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+    synth_lenet(1, 1)?.save(dir.join("lenet_bin.bmx"))?;
+
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 32, window: Duration::from_millis(1) },
+            // closed-loop: at most max_c requests in flight; headroom so
+            // the sweep never measures the 429 path
+            queue_cap: (max_c * 2).max(512),
+            ..Default::default()
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start_with(
+        registry,
+        "127.0.0.1:0",
+        GatewayConfig {
+            io_workers: 2,
+            max_conns: max_c + 64,
+            idle_timeout: Duration::from_secs(60),
+            request_timeout: Duration::from_secs(30),
+        },
+    )?;
+    let addr = gateway.addr().to_string();
+    let image = vec![0.1f32; 784];
+
+    let mut rec = PerfRecord::new(
+        "serve_conns",
+        suite_provenance(opts, reps, "closed-loop keep-alive conns, x-bmx-f32 bodies"),
+    );
+    let mut table = BenchTable::new(
+        "Gateway connection scaling (median over reps)",
+        &["conns", "req/conn", "req/s", "p99_ms"],
+    );
+    for &c in counts {
+        // enough requests per point that the loop dominates setup, but
+        // bounded so 256 conns stays CI-sized
+        let per_conn = (opts.requests_or(512, 128) / c).clamp(2, 64);
+        let mut req_s = Vec::with_capacity(reps);
+        let mut p99 = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let (r, p) = run_closed_loop(&addr, c, per_conn, &image)?;
+            req_s.push(r);
+            p99.push(p);
+        }
+        let (req_s, p99) = (Stats::from_samples(&req_s), Stats::from_samples(&p99));
+        table.row(vec![
+            c.to_string(),
+            per_conn.to_string(),
+            format!("{:.0}", req_s.median),
+            format!("{:.1}", p99.median),
+        ]);
+        rec.push(format!("c={c}/req_s"), Unit::ReqPerSec, req_s);
+        rec.push(format!("c={c}/p99"), Unit::Ms, p99);
+    }
+    table.print();
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_complete_detects_full_and_partial() {
+        let full = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n\r\nok";
+        assert_eq!(response_complete(full).unwrap(), Some(full.len()));
+        assert_eq!(response_complete(&full[..full.len() - 1]).unwrap(), None);
+        assert_eq!(response_complete(b"HTTP/1.1 200").unwrap(), None);
+    }
+
+    #[test]
+    fn response_complete_rejects_non_200() {
+        let resp = b"HTTP/1.1 429 Too Many Requests\r\ncontent-length: 0\r\n\r\n";
+        let err = response_complete(resp).unwrap_err();
+        assert!(err.to_string().contains("429"), "{err}");
+    }
+
+    #[test]
+    fn conn_counts_quick_is_a_subrange() {
+        assert!(conn_counts(true).len() < conn_counts(false).len());
+        let max_quick = conn_counts(true).iter().max().unwrap();
+        let max_full = conn_counts(false).iter().max().unwrap();
+        assert!(max_quick <= max_full);
+    }
+}

@@ -12,13 +12,15 @@
 //!   the QConv2 GEMM shape;
 //! * `serve` — gateway pool scaling (workers × offered load, req/s);
 //! * `serve_policy` — dynamic-batcher (max_batch, window) sweep;
+//! * `serve_conns` — reactor connection-count sweep over real loopback
+//!   HTTP (keep-alive closed-loop clients, binary `x-bmx-f32` bodies);
 //! * `profile` — the PR-7 per-layer profiler as a record.
 //!
 //! Every family runs on synthetic models/operands — no artifacts, no
 //! network — so the suite runs identically in CI (`--quick`, pinned
 //! scalar kernels via `BMXNET_FORCE_SCALAR=1`) and on a dev box.
 //!
-//! The eight `cargo bench` targets are thin drivers over this module
+//! The nine `cargo bench` targets are thin drivers over this module
 //! (env knobs `BENCH_QUICK` / `BENCH_FULL` / `BENCH_REPS` /
 //! `BENCH_REQUESTS` / `BENCH_JSON`, mirrored by the CLI's `--quick` /
 //! `--full` / `--reps` / `--requests` / `--json` flags).
@@ -46,7 +48,7 @@ use crate::tensor::Tensor;
 
 /// Every family `bench-suite` runs, in run order.
 pub const FAMILIES: &[&str] =
-    &["gemm", "tables", "engine", "serve", "serve_policy", "profile"];
+    &["gemm", "tables", "engine", "serve", "serve_policy", "serve_conns", "profile"];
 
 /// Knobs shared by the CLI and the bench-target env vars.
 #[derive(Debug, Clone, Default)]
@@ -80,7 +82,7 @@ impl SuiteOpts {
         }
     }
 
-    fn reps_or(&self, default: usize, quick: usize) -> usize {
+    pub(crate) fn reps_or(&self, default: usize, quick: usize) -> usize {
         if self.reps > 0 {
             self.reps
         } else if self.quick {
@@ -90,7 +92,7 @@ impl SuiteOpts {
         }
     }
 
-    fn requests_or(&self, default: usize, quick: usize) -> usize {
+    pub(crate) fn requests_or(&self, default: usize, quick: usize) -> usize {
         if self.requests > 0 {
             self.requests
         } else if self.quick {
@@ -110,7 +112,7 @@ impl SuiteOpts {
 
 /// Base provenance for a suite record: capture + the opts every family
 /// shares.  Families append their own `note`.
-fn suite_provenance(opts: &SuiteOpts, reps: usize, note: &str) -> Provenance {
+pub(crate) fn suite_provenance(opts: &SuiteOpts, reps: usize, note: &str) -> Provenance {
     let mut p = Provenance::capture("bmxnet bench-suite");
     p.reps = reps;
     p.quick = opts.quick;
@@ -161,6 +163,7 @@ pub fn run_family(family: &str, opts: &SuiteOpts) -> Result<PerfRecord> {
         "engine" => run_engine(opts),
         "serve" => run_serve(opts),
         "serve_policy" => run_serve_policy(opts),
+        "serve_conns" => super::serve_conns::run_serve_conns(opts),
         "profile" => run_profile(opts),
         other => bail!("unknown bench family {other:?} (families: {})", FAMILIES.join(" ")),
     }
@@ -511,7 +514,7 @@ mod tests {
     fn filter_matches_substrings() {
         let opts = SuiteOpts { filter: Some("serve".into()), ..Default::default() };
         let hits: Vec<&str> = FAMILIES.iter().copied().filter(|f| opts.matches(f)).collect();
-        assert_eq!(hits, ["serve", "serve_policy"]);
+        assert_eq!(hits, ["serve", "serve_policy", "serve_conns"]);
         let all = SuiteOpts::default();
         assert!(FAMILIES.iter().all(|f| all.matches(f)));
     }

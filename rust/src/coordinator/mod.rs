@@ -15,4 +15,4 @@ pub mod server;
 
 pub use batcher::BatchPolicy;
 pub use metrics::{MetricsSnapshot, ServerMetrics};
-pub use server::{Backend, Client, Request, Response, Server, ServerConfig};
+pub use server::{Backend, Client, ImageBuf, Request, Response, Server, ServerConfig};

@@ -44,9 +44,96 @@ impl Backend for crate::nn::Engine {
     }
 }
 
+/// A flat image payload moving through the batcher: a `Vec<f32>` plus an
+/// optional return-to-pool hook.  The gateway's [`crate::serve::bufpool::
+/// FloatPool`] checks buffers out per request; the batcher copies the
+/// pixels into its contiguous batch and calls [`ImageBuf::recycle`], so
+/// the backing storage goes straight back to the pool instead of being
+/// freed — the admission→batcher hand-off moves one pooled allocation
+/// end-to-end.  `From<Vec<f32>>` keeps plain (unpooled) submission
+/// working everywhere else; the Drop impl guarantees every exit path
+/// (engine failure, dropped waiter, shutdown drain) returns the buffer.
+pub struct ImageBuf {
+    data: Vec<f32>,
+    home: Option<Arc<dyn Fn(Vec<f32>) + Send + Sync>>,
+}
+
+impl ImageBuf {
+    /// Wrap pool-owned storage; `home` receives the storage back on
+    /// recycle/drop.
+    pub fn pooled(data: Vec<f32>, home: Arc<dyn Fn(Vec<f32>) + Send + Sync>) -> ImageBuf {
+        ImageBuf { data, home: Some(home) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Append one value (the binary decode paths fill checked-out
+    /// buffers in place).
+    pub fn push(&mut self, v: f32) {
+        self.data.push(v);
+    }
+
+    /// Append a slice of values.
+    pub fn extend_from_slice(&mut self, vs: &[f32]) {
+        self.data.extend_from_slice(vs);
+    }
+
+    /// Return the backing storage to its pool *now* (the batcher calls
+    /// this right after copying into the batch, rather than holding the
+    /// buffer hostage through the whole forward pass).  Idempotent; a
+    /// recycled buffer reads as an empty slice.
+    pub fn recycle(&mut self) {
+        let data = std::mem::take(&mut self.data);
+        if let Some(home) = self.home.take() {
+            home(data);
+        }
+    }
+}
+
+impl From<Vec<f32>> for ImageBuf {
+    fn from(data: Vec<f32>) -> ImageBuf {
+        ImageBuf { data, home: None }
+    }
+}
+
+impl std::ops::Deref for ImageBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for ImageBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl std::fmt::Debug for ImageBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ImageBuf")
+            .field("len", &self.data.len())
+            .field("pooled", &self.home.is_some())
+            .finish()
+    }
+}
+
+impl Drop for ImageBuf {
+    fn drop(&mut self) {
+        self.recycle();
+    }
+}
+
 /// One classification request.
 pub struct Request {
-    pub image: Vec<f32>,
+    pub image: ImageBuf,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Response>,
 }
@@ -95,13 +182,14 @@ pub struct Client {
 
 impl Client {
     /// Blocking classify: submit and wait for the response.
-    pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
+    pub fn classify(&self, image: impl Into<ImageBuf>) -> Result<Response> {
         let rx = self.submit(image)?;
         rx.recv().map_err(|_| anyhow!("server dropped the request"))
     }
 
     /// Submit without waiting; returns the response channel.
-    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+    pub fn submit(&self, image: impl Into<ImageBuf>) -> Result<mpsc::Receiver<Response>> {
+        let image = image.into();
         anyhow::ensure!(
             image.len() == self.image_len,
             "image must have {} floats, got {}",
@@ -116,8 +204,9 @@ impl Client {
     /// without cloning the pixels.
     pub fn try_submit(
         &self,
-        image: Vec<f32>,
-    ) -> std::result::Result<mpsc::Receiver<Response>, (Vec<f32>, &'static str)> {
+        image: impl Into<ImageBuf>,
+    ) -> std::result::Result<mpsc::Receiver<Response>, (ImageBuf, &'static str)> {
+        let image = image.into();
         if image.len() != self.image_len {
             return Err((image, "wrong image length"));
         }
@@ -127,7 +216,7 @@ impl Client {
             Err(mpsc::TrySendError::Full(Msg::Req(r))) => Err((r.image, "queue full")),
             Err(mpsc::TrySendError::Disconnected(Msg::Req(r))) => Err((r.image, "server down")),
             // we only ever send Msg::Req here
-            Err(_) => Err((Vec::new(), "server down")),
+            Err(_) => Err((ImageBuf::from(Vec::new()), "server down")),
         }
     }
 
@@ -270,8 +359,11 @@ fn dispatch(
 ) {
     let bsz = batch.len();
     let mut images = Vec::with_capacity(bsz * per);
-    for q in batch.iter() {
+    for q in batch.iter_mut() {
         images.extend_from_slice(&q.req.image);
+        // the pixels now live in the contiguous batch; send the pooled
+        // buffer home before the forward instead of after it
+        q.req.image.recycle();
     }
     let forward_start = Instant::now();
     match backend.classify_batch(&images, bsz) {

@@ -34,7 +34,9 @@ use repro::model::bmx::{convert, BmxModel};
 use repro::model::ckpt::Checkpoint;
 use repro::nn::Engine;
 use repro::runtime::{Manifest, Runtime};
-use repro::serve::{binary_names_for, Gateway, ModelRegistry, PoolConfig, RegistryConfig};
+use repro::serve::{
+    binary_names_for, Gateway, GatewayConfig, ModelRegistry, PoolConfig, RegistryConfig,
+};
 use repro::train::{train, TrainConfig};
 
 fn main() {
@@ -87,7 +89,9 @@ fn print_help() {
          \x20         [--json [F.json]]               per-layer time/bytes/dispatch\n\
          \x20 serve   [--models-dir D] [--workers N] [--port P] [--host H]\n\
          \x20         [--max-batch B] [--window-us U] [--queue-cap Q]\n\
-         \x20         [--mem-budget-mb M]             multi-model HTTP gateway\n\
+         \x20         [--mem-budget-mb M] [--io-workers N] [--max-conns C]\n\
+         \x20         [--idle-timeout-ms T] [--request-timeout-ms T]\n\
+         \x20                                         multi-model HTTP gateway\n\
          \x20 synth-models --out D [--seed S]         synthetic lenet_bin/_q4 .bmx\n\
          \x20 bench-gemm [--figure 1|2|3] [--full] [--reps N]\n\
          \x20         [--json F.json]                 record rows to BENCH_gemm.json\n\
@@ -357,6 +361,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         "window-us",
         "queue-cap",
         "mem-budget-mb",
+        "max-conns",
+        "idle-timeout-ms",
+        "request-timeout-ms",
+        "io-workers",
         "artifacts",
     ])?;
     let models_dir = flags
@@ -378,10 +386,29 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     };
     let host = flags.str("host").unwrap_or("127.0.0.1").to_string();
     let port = flags.usize("port", 8080)?;
+    let gw_cfg = GatewayConfig {
+        io_workers: flags.usize("io-workers", 0)?,
+        max_conns: flags.usize("max-conns", GatewayConfig::default().max_conns)?,
+        idle_timeout: Duration::from_millis(flags.usize(
+            "idle-timeout-ms",
+            GatewayConfig::default().idle_timeout.as_millis() as usize,
+        )? as u64),
+        request_timeout: Duration::from_millis(flags.usize(
+            "request-timeout-ms",
+            GatewayConfig::default().request_timeout.as_millis() as usize,
+        )? as u64),
+    };
     let registry = Arc::new(ModelRegistry::new(cfg.clone()));
     let available = registry.list();
-    let gateway = Gateway::start(registry, &format!("{host}:{port}"))?;
+    let gateway = Gateway::start_with(registry, &format!("{host}:{port}"), gw_cfg.clone())?;
     println!("listening on http://{}", gateway.addr());
+    println!(
+        "reactor: {} io workers, max {} conns, idle timeout {:?}, request timeout {:?}",
+        gateway.stats().workers(),
+        gw_cfg.max_conns,
+        gw_cfg.idle_timeout,
+        gw_cfg.request_timeout,
+    );
     println!(
         "models dir {:?}: {} available ({} workers/model, max_batch {}, window {:?})",
         cfg.models_dir,

@@ -227,10 +227,12 @@ mod tests {
     fn observe_record_covers_each_reached_stage_once() {
         let st = StageStats::new();
         let mut t = Trace::begin();
+        t.mark(Stage::Read);
         t.mark(Stage::Parse);
         t.mark(Stage::Admission);
         t.absorb_batch_timing(&BatchTiming { queue_us: 5, window_us: 5, forward_us: 5 });
         t.mark(Stage::Respond);
+        t.mark(Stage::Write);
         st.observe_record(&t.finish("m", 200, 0, 1));
         for h in st.snapshot() {
             assert_eq!(h.count, 1, "stage {} count", h.stage);

@@ -9,7 +9,7 @@
 //! * [`counters`] — process-wide GEMM Method×Kernel call counters and
 //!   per-stage latency histograms, rendered by `serve::prom`.
 //!
-//! Overhead budget: with nothing enabled the per-request cost is six
+//! Overhead budget: with nothing enabled the per-request cost is eight
 //! `Instant::now` stamps, ~20 relaxed atomic ops for the journal publish
 //! and stage histograms, and zero heap allocation (enforced by
 //! `rust/tests/profiler_overhead.rs`); the per-layer hook costs one
@@ -95,10 +95,12 @@ mod tests {
     fn complete_publishes_and_observes() {
         let obs = Obs::with_slots(8);
         let mut t = Trace::begin();
+        t.mark(Stage::Read);
         t.mark(Stage::Parse);
         t.mark(Stage::Admission);
         t.absorb_batch_timing(&BatchTiming { queue_us: 1, window_us: 1, forward_us: 10 });
         t.mark(Stage::Respond);
+        t.mark(Stage::Write);
         let id = obs.complete(&t.finish("m", 200, 0, 2));
         assert_eq!(id, 0);
         assert_eq!(obs.journal.recent(1).len(), 1);

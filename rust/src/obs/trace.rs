@@ -1,18 +1,22 @@
 //! Request-scoped span tracing.
 //!
-//! A [`Trace`] lives on the gateway handler's stack for the duration of one
-//! request and records *cumulative* microsecond offsets from request start
-//! at the end of each pipeline stage:
+//! A [`Trace`] lives with its connection for the duration of one request
+//! and records *cumulative* microsecond offsets from request start at the
+//! end of each pipeline stage:
 //!
 //! ```text
-//! parse → admission → queue_wait → batch_window → forward → respond
+//! read → parse → admission → queue_wait → batch_window → forward → respond → write
 //! ```
 //!
-//! The first two and the last stage are stamped by the gateway thread
-//! itself ([`Trace::mark`]); the middle three happen inside the batcher on
-//! another thread, so the coordinator measures them per-request
-//! ([`BatchTiming`] rides back on the `Response`) and the gateway anchors
-//! them after its own admission stamp ([`Trace::absorb_batch_timing`]).
+//! `read` (socket → complete request bytes) and `write` (response bytes →
+//! socket flushed) are stamped by the reactor's event-loop worker; with a
+//! non-blocking gateway both can span many readiness polls, which is
+//! exactly why they are worth tracing.  `parse`, `admission` and `respond`
+//! are stamped on the same worker ([`Trace::mark`]); the middle three
+//! happen inside the batcher on another thread, so the coordinator
+//! measures them per-request ([`BatchTiming`] rides back on the
+//! `Response`) and the gateway anchors them after its own admission stamp
+//! ([`Trace::absorb_batch_timing`]).
 //! Because each absorbed offset is `previous + delta`, stage offsets are
 //! monotone by construction — the property `rust/tests` assert.
 //!
@@ -27,7 +31,10 @@ use std::time::{Instant, SystemTime, UNIX_EPOCH};
 /// `[u64; Stage::COUNT]` appears (trace records, stage histograms).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
-    /// Request body read + JSON decoded + image tensor built.
+    /// Request bytes read off the socket (first byte → body complete);
+    /// spans many readiness polls on a slow client.
+    Read,
+    /// Body decoded (JSON or binary) + image tensor built.
     Parse,
     /// Shard chosen and the request accepted into a bounded queue.
     Admission,
@@ -37,44 +44,52 @@ pub enum Stage {
     BatchWindow,
     /// Engine forward pass (amortised across the whole batch).
     Forward,
-    /// Response serialized and handed to the socket.
+    /// Response serialized and queued on the connection.
     Respond,
+    /// Response bytes flushed to the socket (spans partial writes).
+    Write,
 }
 
 impl Stage {
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 8;
 
     pub fn all() -> [Stage; Stage::COUNT] {
         [
+            Stage::Read,
             Stage::Parse,
             Stage::Admission,
             Stage::QueueWait,
             Stage::BatchWindow,
             Stage::Forward,
             Stage::Respond,
+            Stage::Write,
         ]
     }
 
     pub fn index(self) -> usize {
         match self {
-            Stage::Parse => 0,
-            Stage::Admission => 1,
-            Stage::QueueWait => 2,
-            Stage::BatchWindow => 3,
-            Stage::Forward => 4,
-            Stage::Respond => 5,
+            Stage::Read => 0,
+            Stage::Parse => 1,
+            Stage::Admission => 2,
+            Stage::QueueWait => 3,
+            Stage::BatchWindow => 4,
+            Stage::Forward => 5,
+            Stage::Respond => 6,
+            Stage::Write => 7,
         }
     }
 
     /// Stable label used in `/metrics` (`stage="..."`) and trace JSON.
     pub fn label(self) -> &'static str {
         match self {
+            Stage::Read => "read",
             Stage::Parse => "parse",
             Stage::Admission => "admission",
             Stage::QueueWait => "queue_wait",
             Stage::BatchWindow => "batch_window",
             Stage::Forward => "forward",
             Stage::Respond => "respond",
+            Stage::Write => "write",
         }
     }
 }
@@ -235,10 +250,12 @@ mod tests {
     #[test]
     fn mark_and_absorb_keep_offsets_monotone() {
         let mut t = Trace::begin();
+        t.mark(Stage::Read);
         t.mark(Stage::Parse);
         t.mark(Stage::Admission);
         t.absorb_batch_timing(&BatchTiming { queue_us: 10, window_us: 0, forward_us: 250 });
         t.mark(Stage::Respond);
+        t.mark(Stage::Write);
         let rec = t.finish("lenet_bin", 200, 1, 4);
         let mut prev = 0u64;
         let mut named = 0;
@@ -249,7 +266,7 @@ mod tests {
             prev = off;
             named += 1;
         }
-        assert_eq!(named, 6);
+        assert_eq!(named, 8);
         assert!(rec.total_us >= prev, "total below last stage offset");
     }
 

@@ -1,0 +1,182 @@
+//! Reusable buffer pools for the reactor gateway.
+//!
+//! Two pools with different ownership rules (DESIGN.md §Gateway reactor):
+//!
+//! * [`BytePool`] — request/response byte buffers. Owned by exactly one
+//!   event-loop worker, so it is plain `&mut self` with no locking: a
+//!   connection checks buffers out when it is accepted and the worker
+//!   puts them back when the connection closes. Oversized buffers (a
+//!   client that once sent a near-`MAX_BODY` request) are dropped rather
+//!   than retained, so one abusive request cannot pin megabytes forever.
+//! * [`FloatPool`] — decoded image tensors (`Vec<f32>`) that leave the
+//!   gateway thread entirely: they ride a [`crate::coordinator::ImageBuf`]
+//!   through the pool shard's queue into the batcher, which copies the
+//!   pixels into its contiguous batch and recycles the buffer from *its*
+//!   thread. The return path is therefore a `Mutex`-guarded free list
+//!   behind an `Arc` closure ([`ImageBuf::pooled`]'s `home` hook); the
+//!   lock is held for a push/pop only and the drop guarantee on
+//!   `ImageBuf` means every exit path (queue-full give-back, engine
+//!   failure, shutdown drain) still returns the storage.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::ImageBuf;
+
+/// Cap on the *capacity* of a byte buffer worth keeping. Buffers that
+/// grew past this (large request bodies) are freed instead of pooled.
+pub const BYTE_RETAIN_CAP: usize = 256 << 10;
+
+/// Per-worker stack of reusable byte buffers. Not `Sync` on purpose —
+/// each event-loop worker owns its own.
+pub struct BytePool {
+    free: Vec<Vec<u8>>,
+    max_pooled: usize,
+}
+
+impl BytePool {
+    pub fn new(max_pooled: usize) -> BytePool {
+        BytePool { free: Vec::new(), max_pooled }
+    }
+
+    /// Check out an empty buffer (reused capacity when available).
+    pub fn get(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer. Cleared; dropped instead of pooled when the pool
+    /// is full or the buffer's capacity exceeds [`BYTE_RETAIN_CAP`].
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < self.max_pooled && buf.capacity() <= BYTE_RETAIN_CAP {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Buffers currently pooled (tests/metrics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Shared free list of decoded image tensors. Cheap to clone (two Arcs);
+/// the gateway keeps one per `Gateway`, shared by all workers, because
+/// buffers are returned from the batcher thread, not the worker that
+/// checked them out.
+#[derive(Clone)]
+pub struct FloatPool {
+    free: Arc<Mutex<Vec<Vec<f32>>>>,
+    home: Arc<dyn Fn(Vec<f32>) + Send + Sync>,
+}
+
+impl FloatPool {
+    pub fn new(max_pooled: usize) -> FloatPool {
+        let free: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(Vec::new()));
+        let slot = free.clone();
+        let home = Arc::new(move |mut v: Vec<f32>| {
+            v.clear();
+            if let Ok(mut g) = slot.lock() {
+                if g.len() < max_pooled {
+                    g.push(v);
+                }
+            }
+        });
+        FloatPool { free, home }
+    }
+
+    /// Check out an empty tensor with at least `cap` capacity, wrapped so
+    /// that recycling/dropping it anywhere returns the storage here.
+    pub fn checkout(&self, cap: usize) -> ImageBuf {
+        let mut v = self
+            .free
+            .lock()
+            .map(|mut g| g.pop())
+            .ok()
+            .flatten()
+            .unwrap_or_default();
+        v.clear();
+        v.reserve(cap);
+        ImageBuf::pooled(v, self.home.clone())
+    }
+
+    /// Tensors currently pooled (tests/metrics).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().map(|g| g.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_pool_reuses_capacity_and_caps_retention() {
+        let mut p = BytePool::new(2);
+        let mut a = p.get();
+        a.extend_from_slice(b"hello");
+        let cap_a = a.capacity();
+        p.put(a);
+        assert_eq!(p.pooled(), 1);
+        let b = p.get();
+        assert!(b.is_empty(), "returned buffer must come back cleared");
+        assert_eq!(b.capacity(), cap_a, "capacity must be reused");
+        assert_eq!(p.pooled(), 0);
+
+        // pool size cap
+        p.put(vec![1; 8]);
+        p.put(vec![2; 8]);
+        p.put(vec![3; 8]);
+        assert_eq!(p.pooled(), 2);
+
+        // oversized buffers are dropped, not retained
+        let mut q = BytePool::new(4);
+        q.put(Vec::with_capacity(BYTE_RETAIN_CAP + 1));
+        assert_eq!(q.pooled(), 0);
+    }
+
+    #[test]
+    fn float_pool_round_trips_through_imagebuf_recycle_and_drop() {
+        let pool = FloatPool::new(4);
+        let mut buf = pool.checkout(16);
+        assert!(buf.is_empty());
+        for i in 0..16 {
+            buf.push(i as f32);
+        }
+        assert_eq!(buf.len(), 16);
+        assert_eq!(pool.pooled(), 0);
+        buf.recycle();
+        assert_eq!(buf.len(), 0, "recycled buffer reads empty");
+        assert_eq!(pool.pooled(), 1, "explicit recycle returns storage");
+
+        let again = pool.checkout(4);
+        assert_eq!(pool.pooled(), 0);
+        drop(again);
+        assert_eq!(pool.pooled(), 1, "drop also returns storage");
+    }
+
+    #[test]
+    fn float_pool_return_crosses_threads() {
+        let pool = FloatPool::new(4);
+        let mut buf = pool.checkout(8);
+        buf.extend_from_slice(&[1.0, 2.0]);
+        std::thread::spawn(move || drop(buf)).join().unwrap();
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn float_pool_caps_pooled_count() {
+        let pool = FloatPool::new(1);
+        let a = pool.checkout(4);
+        let b = pool.checkout(4);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn unpooled_imagebuf_from_vec_still_works() {
+        let mut buf = ImageBuf::from(vec![0.5f32; 3]);
+        assert_eq!(&buf[..], &[0.5, 0.5, 0.5]);
+        buf.recycle();
+        assert!(buf.is_empty());
+    }
+}

@@ -1,47 +1,60 @@
-//! Minimal HTTP/1.1 gateway over `std::net::TcpListener` (offline
-//! environment: no hyper/tokio — hand-rolled request parsing, keep-alive,
-//! thread-per-connection).
+//! HTTP/1.1 gateway over the std-only readiness-polling reactor
+//! ([`super::reactor`]): a small acceptor plus N event-loop workers
+//! drive non-blocking connections through a read → dispatch → write
+//! state machine, so concurrency is bounded by fds (`max_conns`), not
+//! threads — the old thread-per-connection gateway capped out at 256.
 //!
 //! Routes:
 //!
-//! * `POST /v1/models/{name}:classify` — body `{"image": [f32; C*H*W]}`;
-//!   200 with `{"model", "class", "score", "latency_us", "batch_size",
-//!   "shard"}`, 400 on malformed input, 404 on unknown model, **429 when
-//!   every pool shard's bounded queue is full** (admission control).
+//! * `POST /v1/models/{name}:classify` — 200 with `{"model", "class",
+//!   "score", "latency_us", "batch_size", "shard"}`, 400 on malformed
+//!   input, 404 on unknown model, **429 when every pool shard's bounded
+//!   queue is full** (admission control). Three body formats, selected
+//!   by `content-type`:
+//!   - `application/json` (default): `{"image": [f32; C*H*W]}`
+//!   - `application/x-bmx-f32`: raw little-endian f32 pixels, exactly
+//!     `4*C*H*W` bytes — no JSON parse, decoded into a pooled buffer
+//!   - `application/x-bmx-packed`: pre-packed sign bits, LSB-first
+//!     (`(C*H*W+7)/8` bytes; bit set → +1.0, clear → −1.0; padding bits
+//!     must be zero)
 //! * `GET /v1/models` — available + resident models, per-model GEMM
 //!   dispatch, and the process `force_scalar` state.
 //! * `GET /v1/models/{name}/profile?batch=N&reps=R` — per-layer wall
-//!   time / bytes / dispatch labels from a synthetic profiled forward.
+//!   time / bytes / dispatch labels from a synthetic profiled forward
+//!   (runs inline on the event-loop worker; it is a debug endpoint).
 //! * `GET /v1/debug/trace?n=K` — the K most recent request traces from
 //!   the lock-free journal (stage offsets in µs from request start).
-//! * `GET /metrics` — Prometheus-style text (see [`super::prom`]).
+//! * `GET /metrics` — Prometheus-style text (see [`super::prom`]),
+//!   including the reactor's connection gauges and loop histograms.
 //! * `GET /healthz` — liveness.
 //!
-//! Every classify request carries a [`Trace`]: the gateway stamps
-//! parse/admission/respond, the pool batcher contributes
-//! queue_wait/batch_window/forward via [`crate::coordinator::Response`]
-//! timing, and the completed record feeds the journal, the per-stage
-//! histograms and the slow-request log ([`Obs::complete`]).
+//! Every classify request carries a [`Trace`]: the reactor stamps
+//! read/respond/write, this module stamps parse/admission, the pool
+//! batcher contributes queue_wait/batch_window/forward via
+//! [`crate::coordinator::Response`] timing, and the completed record is
+//! published when the response bytes finish flushing ([`Obs::complete`]).
 //!
-//! Limits: bodies over [`MAX_BODY`] are rejected, chunked transfer
-//! encoding is not supported (501-adjacent 400), at most
-//! [`MAX_CONNECTIONS`] handler threads run at once (then immediate 503),
-//! and idle keep-alive connections are reaped on shutdown via a read
-//! timeout + stop flag.
+//! Limits: bodies over [`MAX_BODY`] and heads over [`MAX_HEAD`] are
+//! rejected, chunked transfer encoding is not supported (400), past
+//! `max_conns` open connections the acceptor sheds with an immediate
+//! 503, and slow clients hit the timer-wheel idle/request timeouts.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::bufpool::FloatPool;
 use super::prom;
+use super::reactor::{self, ReactorStats};
 use super::registry::ModelRegistry;
+use crate::coordinator::ImageBuf;
 use crate::model::json;
 use crate::obs::{trace, Obs, Stage, Trace};
+use crate::serve::pool::PendingResponse;
 
 /// Request body cap (a 3×32×32 image in long-form JSON is ~40 kB).
 pub const MAX_BODY: usize = 8 << 20;
@@ -50,55 +63,105 @@ pub const MAX_BODY: usize = 8 << 20;
 /// streaming newline-free bytes would grow the line buffer unboundedly.
 pub const MAX_LINE: usize = 8 << 10;
 
-/// How long a connection handler waits for the *first byte* of the next
-/// request before re-checking the gateway stop flag (bounds shutdown
-/// latency for idle keep-alive connections).
-const IDLE_TIMEOUT: Duration = Duration::from_millis(200);
+/// Cap on the whole head (request line + headers). A connection that
+/// buffers this much without a blank line is answered 400 and closed.
+pub const MAX_HEAD: usize = 16 << 10;
 
-/// Read-timeout once a request has started arriving: a slow client may
-/// stall this long between segments of the request line, headers or body
-/// before the connection is dropped.
-const REQUEST_TIMEOUT: Duration = Duration::from_secs(10);
-
-/// Cap on concurrent connection-handler threads ("bounded everything":
-/// past this, new connections get an immediate 503 instead of a thread).
+/// Default cap on concurrently open connections ("bounded everything":
+/// past this, new connections get an immediate 503, not an fd).
 pub const MAX_CONNECTIONS: usize = 256;
 
-/// Decrements the live-connection gauge even if the handler panics.
-struct ConnGuard(Arc<AtomicUsize>);
+/// Default reap deadline for idle keep-alive connections. The old
+/// thread-per-connection gateway's 200 ms "idle timeout" was a stop-flag
+/// poll interval, not a reaping deadline — idle connections lived until
+/// shutdown. Now that idleness actually closes connections, the default
+/// is a conventional keep-alive horizon instead.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 
-impl Drop for ConnGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::AcqRel);
+/// Default budget for one whole request (first byte → response flushed,
+/// excluding the batcher wait). Carried over from the old gateway's
+/// per-request read timeout.
+pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Decoded image tensors kept pooled for reuse across requests.
+const FLOAT_POOL_CAP: usize = 1024;
+
+/// Reactor sizing + timeout knobs (`cmd_serve` flags `--max-conns`,
+/// `--idle-timeout-ms`, `--request-timeout-ms`).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Event-loop worker threads; 0 = `min(available_parallelism, 4)`.
+    pub io_workers: usize,
+    /// Open-connection cap; the acceptor sheds with 503 past it.
+    pub max_conns: usize,
+    /// Reap a keep-alive connection idle this long between requests.
+    pub idle_timeout: Duration,
+    /// Budget for one request: covers reading it (408 on expiry) and
+    /// writing the response (silent close). The batcher wait between the
+    /// two is not counted — the bounded queue guarantees an answer.
+    pub request_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            io_workers: 0,
+            max_conns: MAX_CONNECTIONS,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            request_timeout: DEFAULT_REQUEST_TIMEOUT,
+        }
     }
 }
 
-/// A running gateway: accept loop + per-connection handler threads.
+/// Shared state every event-loop worker routes against.
+pub(crate) struct GatewayCtx {
+    pub registry: Arc<ModelRegistry>,
+    pub obs: Arc<Obs>,
+    pub floats: FloatPool,
+    pub stats: Arc<ReactorStats>,
+}
+
+/// A running gateway: acceptor + event-loop worker threads.
 pub struct Gateway {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
-    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    handles: Vec<JoinHandle<()>>,
+    stats: Arc<ReactorStats>,
 }
 
 impl Gateway {
-    /// Bind and start serving.  `addr` is `host:port`; port 0 picks an
-    /// ephemeral port — read the real one back from [`Gateway::addr`].
-    /// Observability state (journal, stage histograms, slow-request
-    /// threshold) is built from the environment ([`Obs::from_env`]).
+    /// Bind and start serving with default reactor sizing.  `addr` is
+    /// `host:port`; port 0 picks an ephemeral port — read the real one
+    /// back from [`Gateway::addr`].  Observability state (journal, stage
+    /// histograms, slow-request threshold) is built from the environment
+    /// ([`Obs::from_env`]).
     pub fn start(registry: Arc<ModelRegistry>, addr: &str) -> Result<Gateway> {
+        Self::start_with(registry, addr, GatewayConfig::default())
+    }
+
+    /// [`Gateway::start`] with explicit reactor sizing and timeouts.
+    pub fn start_with(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
+        let workers = if cfg.io_workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            cfg.io_workers
+        };
+        let stats = Arc::new(ReactorStats::new(workers));
+        let ctx = Arc::new(GatewayCtx {
+            registry,
+            obs: Arc::new(Obs::from_env()),
+            floats: FloatPool::new(FLOAT_POOL_CAP),
+            stats: stats.clone(),
+        });
         let stop = Arc::new(AtomicBool::new(false));
-        let conn_handles = Arc::new(Mutex::new(Vec::new()));
-        let obs = Arc::new(Obs::from_env());
-        let s = stop.clone();
-        let ch = conn_handles.clone();
-        let accept_handle = std::thread::Builder::new()
-            .name("bmxnet-accept".into())
-            .spawn(move || accept_loop(listener, registry, obs, s, ch))
-            .context("spawn accept thread")?;
-        Ok(Gateway { addr: local, stop, accept_handle: Some(accept_handle), conn_handles })
+        let handles = reactor::spawn(listener, ctx, cfg, stop.clone())?;
+        Ok(Gateway { addr: local, stop, handles, stats })
     }
 
     /// The bound address (resolves port 0).
@@ -106,20 +169,24 @@ impl Gateway {
         self.addr
     }
 
-    /// Stop accepting, wake the listener, join every handler thread.
+    /// Live reactor gauges (also on `/metrics`).
+    pub fn stats(&self) -> &ReactorStats {
+        &self.stats
+    }
+
+    /// Stop accepting, wake the listener, join every reactor thread.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
         self.stop.store(true, Ordering::SeqCst);
         // wake the blocking accept() with a throwaway connection
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conn_handles.lock().unwrap());
-        for h in handles {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -127,205 +194,124 @@ impl Gateway {
 
 impl Drop for Gateway {
     fn drop(&mut self) {
-        if self.accept_handle.is_some() {
-            self.stop_and_join();
-        }
+        self.stop_and_join();
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    registry: Arc<ModelRegistry>,
-    obs: Arc<Obs>,
-    stop: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
-) {
-    let active = Arc::new(AtomicUsize::new(0));
-    for incoming in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
-        let Ok(stream) = incoming else { continue };
-        // connection-level admission: shed load before spawning a thread
-        if active.load(Ordering::Acquire) >= MAX_CONNECTIONS {
-            let mut s = stream;
-            let resp = HttpResponse::error(503, "connection limit reached, retry");
-            let _ = write_response(&mut s, &resp, false);
-            continue;
-        }
-        active.fetch_add(1, Ordering::AcqRel);
-        let guard = ConnGuard(active.clone());
-        let registry = registry.clone();
-        let obs = obs.clone();
-        let stop = stop.clone();
-        let handle = std::thread::Builder::new()
-            .name("bmxnet-conn".into())
-            .spawn(move || {
-                let _guard = guard;
-                let _ = handle_connection(stream, &registry, &obs, &stop);
-            });
-        let mut g = conns.lock().unwrap();
-        if let Ok(h) = handle {
-            g.push(h);
-        }
-        // spawn failure: `guard` was moved into the closure only on
-        // success; on Err the closure is dropped, releasing the slot.
-        // reap finished handlers so the vec stays bounded under churn
-        g.retain(|h| !h.is_finished());
-    }
+/// Classify body encodings, selected by `content-type`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BodyFormat {
+    /// `{"image": [f32; C*H*W]}` (default for absent/other content types).
+    Json,
+    /// Raw little-endian f32 pixels (`application/x-bmx-f32`).
+    F32,
+    /// LSB-first packed sign bits (`application/x-bmx-packed`).
+    Packed,
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    registry: &ModelRegistry,
-    obs: &Obs,
-    stop: &AtomicBool,
-) -> std::io::Result<()> {
-    let _ = stream.set_nodelay(true);
-    // reader and writer are dup'd fds over one socket, so a timeout set on
-    // `writer` governs `reader`'s reads too.
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    loop {
-        // Idle gap between requests: short timeout, poll the stop flag.
-        writer.set_read_timeout(Some(IDLE_TIMEOUT))?;
-        match reader.fill_buf() {
-            Ok(buf) if buf.is_empty() => return Ok(()), // clean EOF
-            Ok(_) => {}
-            Err(e) if is_timeout(&e) => {
-                if stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(_) => return Ok(()),
-        }
-        // A request has started: allow slow clients the full budget.
-        writer.set_read_timeout(Some(REQUEST_TIMEOUT))?;
-        match read_request(&mut reader) {
-            Ok(Some(req)) => {
-                let keep_alive = req.keep_alive;
-                let resp = route(registry, obs, &req);
-                write_response(&mut writer, &resp, keep_alive)?;
-                if !keep_alive {
-                    return Ok(());
-                }
-            }
-            Ok(None) => return Ok(()), // clean EOF between requests
-            Err(ReadError::Idle) => {
-                if stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-            }
-            Err(ReadError::Bad(msg)) => {
-                let _ = write_response(&mut writer, &HttpResponse::error(400, &msg), false);
-                return Ok(());
-            }
-            Err(ReadError::Io(_)) => return Ok(()),
-        }
-    }
-}
-
-/// Why reading one request off the wire failed.
-enum ReadError {
-    /// Read timeout with no bytes consumed — poll the stop flag and retry.
-    Idle,
-    /// Client spoke malformed or unsupported HTTP (answer 400, close).
-    Bad(String),
-    /// Connection-level failure (close silently).
-    Io(std::io::Error),
-}
-
-struct HttpRequest {
-    method: String,
+/// One parsed request head; body bytes follow at `head_len`.
+#[derive(Debug)]
+pub(crate) struct HeadInfo {
+    pub method: String,
     /// Path with any query string stripped.
-    path: String,
+    pub path: String,
     /// Raw query string (after `?`, empty when absent).
-    query: String,
-    body: Vec<u8>,
-    keep_alive: bool,
+    pub query: String,
+    pub content_length: usize,
+    pub format: BodyFormat,
+    pub keep_alive: bool,
+    /// Byte offset where the body starts (end of the blank line).
+    pub head_len: usize,
 }
 
-fn is_timeout(e: &std::io::Error) -> bool {
-    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+/// Incremental head-parse result over the bytes buffered so far.
+pub(crate) enum HeadParse {
+    /// No blank line yet — read more (caller enforces [`MAX_HEAD`]).
+    Incomplete,
+    /// Malformed or unsupported HTTP — answer 400, close.
+    Bad(String),
+    Parsed(HeadInfo),
 }
 
-/// `Ok(None)` = clean EOF before a request; see [`ReadError`] otherwise.
-type ReadResult = std::result::Result<Option<HttpRequest>, ReadError>;
-
-/// `read_line` bounded by [`MAX_LINE`]: errors with `InvalidData` when a
-/// line (sans terminator) would exceed the cap, instead of growing the
-/// buffer for as long as the peer keeps sending newline-free bytes.
-fn read_line_capped<R: BufRead>(reader: &mut R, line: &mut String) -> std::io::Result<usize> {
-    let n = (&mut *reader).take((MAX_LINE + 2) as u64).read_line(line)?;
-    if line.len() > MAX_LINE && !line.ends_with('\n') {
-        return Err(std::io::Error::new(ErrorKind::InvalidData, "line exceeds MAX_LINE"));
-    }
-    Ok(n)
-}
-
-/// Parse one request (request line, headers, Content-Length body).
-/// Generic over the reader so the parser is unit-testable off-socket.
-fn read_request<R: BufRead>(reader: &mut R) -> ReadResult {
-    let mut line = String::new();
-    match read_line_capped(reader, &mut line) {
-        Ok(0) => return Ok(None), // EOF before a request
-        Ok(_) => {}
-        Err(e) if e.kind() == ErrorKind::InvalidData => {
-            return Err(ReadError::Bad("request line too long".to_string()))
+/// Find the end of the head: the byte offset just past the first blank
+/// line (`\r\n\r\n` or `\n\n`).
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            match (buf.get(i + 1), buf.get(i + 2)) {
+                (Some(b'\n'), _) => return Some(i + 2),
+                (Some(b'\r'), Some(b'\n')) => return Some(i + 3),
+                _ => {}
+            }
         }
-        Err(e) if is_timeout(&e) && line.is_empty() => return Err(ReadError::Idle),
-        Err(e) => return Err(ReadError::Io(e)),
+        i += 1;
     }
-    let line_t = line.trim_end();
-    let mut parts = line_t.split_whitespace();
+    None
+}
+
+/// Parse a complete head out of the buffered bytes, if one is there.
+pub(crate) fn parse_head(buf: &[u8]) -> HeadParse {
+    let Some(head_len) = find_head_end(buf) else {
+        return HeadParse::Incomplete;
+    };
+    let Ok(text) = std::str::from_utf8(&buf[..head_len]) else {
+        return HeadParse::Bad("head is not valid UTF-8".to_string());
+    };
+    let mut lines = text.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let req_line = lines.next().unwrap_or("");
+    if req_line.len() > MAX_LINE {
+        return HeadParse::Bad("request line too long".to_string());
+    }
+    let mut parts = req_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let target = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("HTTP/1.1").to_string();
     if method.is_empty() || target.is_empty() {
-        return Err(ReadError::Bad(format!("malformed request line {line_t:?}")));
+        return HeadParse::Bad(format!("malformed request line {req_line:?}"));
     }
     let mut headers: BTreeMap<String, String> = BTreeMap::new();
-    loop {
-        let mut h = String::new();
-        match read_line_capped(reader, &mut h) {
-            Ok(0) => return Err(ReadError::Bad("unexpected EOF in headers".to_string())),
-            Ok(_) => {}
-            Err(e) if e.kind() == ErrorKind::InvalidData => {
-                return Err(ReadError::Bad("header line too long".to_string()))
-            }
-            Err(e) => return Err(ReadError::Io(e)),
-        }
-        let h = h.trim_end();
+    for h in lines {
         if h.is_empty() {
             break;
+        }
+        if h.len() > MAX_LINE {
+            return HeadParse::Bad("header line too long".to_string());
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
         if headers.len() > 100 {
-            return Err(ReadError::Bad("too many headers".to_string()));
+            return HeadParse::Bad("too many headers".to_string());
         }
     }
     if headers
         .get("transfer-encoding")
         .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
     {
-        return Err(ReadError::Bad("chunked transfer encoding not supported".to_string()));
+        return HeadParse::Bad("chunked transfer encoding not supported".to_string());
     }
-    let content_len: usize = match headers.get("content-length") {
+    let content_length: usize = match headers.get("content-length") {
         None => 0,
-        Some(v) => v
-            .parse()
-            .map_err(|_| ReadError::Bad(format!("bad content-length {v:?}")))?,
+        Some(v) => match v.parse() {
+            Ok(n) => n,
+            Err(_) => return HeadParse::Bad(format!("bad content-length {v:?}")),
+        },
     };
-    if content_len > MAX_BODY {
-        return Err(ReadError::Bad(format!("body of {content_len} bytes exceeds cap {MAX_BODY}")));
+    if content_length > MAX_BODY {
+        return HeadParse::Bad(format!("body of {content_length} bytes exceeds cap {MAX_BODY}"));
     }
-    let mut body = vec![0u8; content_len];
-    if content_len > 0 {
-        reader.read_exact(&mut body).map_err(ReadError::Io)?;
-    }
+    let format = match headers.get("content-type") {
+        Some(ct) => {
+            let ct = ct.split(';').next().unwrap_or("").trim().to_ascii_lowercase();
+            match ct.as_str() {
+                "application/x-bmx-f32" => BodyFormat::F32,
+                "application/x-bmx-packed" => BodyFormat::Packed,
+                _ => BodyFormat::Json,
+            }
+        }
+        None => BodyFormat::Json,
+    };
     let http10 = version.eq_ignore_ascii_case("HTTP/1.0");
     let keep_alive = match headers.get("connection").map(|s| s.to_ascii_lowercase()).as_deref() {
         Some("close") => false,
@@ -336,18 +322,26 @@ fn read_request<R: BufRead>(reader: &mut R) -> ReadResult {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target, String::new()),
     };
-    Ok(Some(HttpRequest { method, path, query, body, keep_alive }))
+    HeadParse::Parsed(HeadInfo {
+        method,
+        path,
+        query,
+        content_length,
+        format,
+        keep_alive,
+        head_len,
+    })
 }
 
-struct HttpResponse {
-    status: u16,
-    content_type: &'static str,
-    body: Vec<u8>,
-    retry_after: bool,
+pub(crate) struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub retry_after: bool,
 }
 
 impl HttpResponse {
-    fn json(status: u16, body: String) -> Self {
+    pub fn json(status: u16, body: String) -> Self {
         Self {
             status,
             content_type: "application/json",
@@ -356,7 +350,7 @@ impl HttpResponse {
         }
     }
 
-    fn text(status: u16, body: String) -> Self {
+    pub fn text(status: u16, body: String) -> Self {
         Self {
             status,
             content_type: "text/plain; charset=utf-8",
@@ -365,7 +359,7 @@ impl HttpResponse {
         }
     }
 
-    fn error(status: u16, msg: &str) -> Self {
+    pub fn error(status: u16, msg: &str) -> Self {
         Self::json(status, format!("{{\"error\": {}}}", json_string(msg)))
     }
 }
@@ -376,6 +370,7 @@ fn status_reason(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
@@ -384,8 +379,10 @@ fn status_reason(code: u16) -> &'static str {
     }
 }
 
-fn write_response(w: &mut TcpStream, r: &HttpResponse, keep_alive: bool) -> std::io::Result<()> {
-    let mut head = format!(
+/// Serialize a response into `out` (appended; caller clears). The
+/// reactor flushes these bytes incrementally from its Write state.
+pub(crate) fn render_response(r: &HttpResponse, keep_alive: bool, out: &mut Vec<u8>) {
+    let head = format!(
         "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         r.status,
         status_reason(r.status),
@@ -393,13 +390,12 @@ fn write_response(w: &mut TcpStream, r: &HttpResponse, keep_alive: bool) -> std:
         r.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    out.extend_from_slice(head.as_bytes());
     if r.retry_after {
-        head.push_str("retry-after: 1\r\n");
+        out.extend_from_slice(b"retry-after: 1\r\n");
     }
-    head.push_str("\r\n");
-    w.write_all(head.as_bytes())?;
-    w.write_all(&r.body)?;
-    w.flush()
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(&r.body);
 }
 
 /// Serialize a string as a JSON string literal (quotes included).
@@ -433,17 +429,47 @@ fn query_usize(query: &str, key: &str) -> Option<usize> {
         .and_then(|v| v.parse().ok())
 }
 
-fn route(registry: &ModelRegistry, obs: &Obs, req: &HttpRequest) -> HttpResponse {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/v1/models") => list_models(registry),
-        ("GET", "/v1/debug/trace") => debug_trace(obs, &req.query),
-        ("GET", "/metrics") => HttpResponse::text(200, prom::render(registry, obs)),
-        ("GET", "/healthz") => HttpResponse::json(200, "{\"status\": \"ok\"}".to_string()),
+/// An accepted classify waiting on its pool shard: the reactor's
+/// Dispatch state polls `pending` each pass.
+pub(crate) struct ClassifyTail {
+    pub pending: PendingResponse,
+    pub name: String,
+}
+
+/// How one routed request resolves.
+pub(crate) enum RouteOutcome {
+    /// Non-classify route: respond, no trace publish.
+    Plain(HttpResponse),
+    /// Classify route that resolved synchronously (bad body, unknown
+    /// model, 429 …): respond AND publish the trace with this metadata.
+    ClassifyDone { resp: HttpResponse, name: String, shard: u16, batch: u16 },
+    /// Classify accepted into a shard; poll the tail for the answer.
+    ClassifyPending(ClassifyTail),
+}
+
+/// Route one complete request. Synchronous routes return `Plain`;
+/// classify stamps parse/admission on `trace` and may go async.
+pub(crate) fn route_begin(
+    ctx: &GatewayCtx,
+    head: &HeadInfo,
+    body: &[u8],
+    trace: &mut Trace,
+) -> RouteOutcome {
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/v1/models") => RouteOutcome::Plain(list_models(&ctx.registry)),
+        ("GET", "/v1/debug/trace") => RouteOutcome::Plain(debug_trace(&ctx.obs, &head.query)),
+        ("GET", "/metrics") => RouteOutcome::Plain(HttpResponse::text(
+            200,
+            prom::render(&ctx.registry, &ctx.obs, &ctx.stats),
+        )),
+        ("GET", "/healthz") => {
+            RouteOutcome::Plain(HttpResponse::json(200, "{\"status\": \"ok\"}".to_string()))
+        }
         ("POST", path)
             if path.starts_with(CLASSIFY_PREFIX) && path.ends_with(CLASSIFY_SUFFIX) =>
         {
             let name = &path[CLASSIFY_PREFIX.len()..path.len() - CLASSIFY_SUFFIX.len()];
-            classify(registry, obs, name, &req.body)
+            classify_begin(ctx, name, head.format, body, trace)
         }
         ("GET", path)
             if path.starts_with(CLASSIFY_PREFIX)
@@ -451,12 +477,16 @@ fn route(registry: &ModelRegistry, obs: &Obs, req: &HttpRequest) -> HttpResponse
                 && path.len() > CLASSIFY_PREFIX.len() + PROFILE_SUFFIX.len() =>
         {
             let name = &path[CLASSIFY_PREFIX.len()..path.len() - PROFILE_SUFFIX.len()];
-            model_profile(registry, name, &req.query)
+            RouteOutcome::Plain(model_profile(&ctx.registry, name, &head.query))
         }
-        ("GET" | "POST", _) => {
-            HttpResponse::error(404, &format!("no route for {} {}", req.method, req.path))
-        }
-        _ => HttpResponse::error(405, &format!("method {} not allowed", req.method)),
+        ("GET" | "POST", _) => RouteOutcome::Plain(HttpResponse::error(
+            404,
+            &format!("no route for {} {}", head.method, head.path),
+        )),
+        _ => RouteOutcome::Plain(HttpResponse::error(
+            405,
+            &format!("method {} not allowed", head.method),
+        )),
     }
 }
 
@@ -563,82 +593,170 @@ fn model_profile(registry: &ModelRegistry, name: &str, query: &str) -> HttpRespo
     }
 }
 
-fn classify(registry: &ModelRegistry, obs: &Obs, name: &str, body: &[u8]) -> HttpResponse {
-    let mut trace = Trace::begin();
-    let (resp, shard, batch) = classify_traced(registry, name, body, &mut trace);
-    trace.mark(Stage::Respond);
-    obs.complete(&trace.finish(name, resp.status, shard, batch));
-    resp
+/// Shorthand for a classify that resolved before reaching a shard.
+fn classify_done(resp: HttpResponse, name: &str) -> RouteOutcome {
+    RouteOutcome::ClassifyDone { resp, name: name.to_string(), shard: 0, batch: 0 }
 }
 
-/// Classify body with stage stamps; returns (response, shard, batch_size)
-/// so the caller can finish and publish the trace on every exit path.
-fn classify_traced(
-    registry: &ModelRegistry,
+/// Decode the body per its content type, resolve the model, and submit
+/// into the pool. JSON keeps the old stage order (parse → resolve →
+/// length check); the binary formats need the model first to know the
+/// expected length, so they resolve → decode.
+fn classify_begin(
+    ctx: &GatewayCtx,
     name: &str,
+    format: BodyFormat,
     body: &[u8],
     trace: &mut Trace,
-) -> (HttpResponse, u16, u16) {
-    let Ok(text) = std::str::from_utf8(body) else {
-        return (HttpResponse::error(400, "body is not UTF-8"), 0, 0);
-    };
-    let parsed = match json::parse(text) {
-        Ok(v) => v,
-        Err(e) => return (HttpResponse::error(400, &format!("bad JSON body: {e}")), 0, 0),
-    };
-    let Some(image_v) = parsed.get("image").and_then(|v| v.as_array()) else {
-        return (HttpResponse::error(400, "body must be {\"image\": [f32; C*H*W]}"), 0, 0);
-    };
-    let mut image = Vec::with_capacity(image_v.len());
-    for v in image_v {
-        match v.as_f64() {
-            Some(f) => image.push(f as f32),
-            None => {
-                return (HttpResponse::error(400, "\"image\" must contain only numbers"), 0, 0)
-            }
-        }
-    }
-    trace.mark(Stage::Parse);
-    let model = match registry.get(name) {
-        Ok(m) => m,
+) -> RouteOutcome {
+    let lookup = |name: &str| match ctx.registry.get(name) {
+        Ok(m) => Ok(m),
         Err(e) => {
             // a name the registry could resolve but failed to load is a
             // server-side fault (500), not a client-side unknown (404)
-            let known = registry.list().iter().any(|m| m.name == name);
+            let known = ctx.registry.list().iter().any(|m| m.name == name);
             let status = if known { 500 } else { 404 };
-            return (
-                HttpResponse::error(status, &format!("model {name:?} unavailable: {e:#}")),
-                0,
-                0,
-            );
+            Err(HttpResponse::error(status, &format!("model {name:?} unavailable: {e:#}")))
         }
     };
-    if image.len() != model.pool.image_len() {
-        return (
-            HttpResponse::error(
-                400,
-                &format!(
-                    "model {name:?} expects {} floats, got {}",
-                    model.pool.image_len(),
-                    image.len()
-                ),
-            ),
-            0,
-            0,
-        );
-    }
-    let pending = match model.pool.submit(image) {
-        Ok(p) => p,
+    let (model, image): (_, ImageBuf) = match format {
+        BodyFormat::Json => {
+            let Ok(text) = std::str::from_utf8(body) else {
+                return classify_done(HttpResponse::error(400, "body is not UTF-8"), name);
+            };
+            let parsed = match json::parse(text) {
+                Ok(v) => v,
+                Err(e) => {
+                    return classify_done(
+                        HttpResponse::error(400, &format!("bad JSON body: {e}")),
+                        name,
+                    )
+                }
+            };
+            let Some(image_v) = parsed.get("image").and_then(|v| v.as_array()) else {
+                return classify_done(
+                    HttpResponse::error(400, "body must be {\"image\": [f32; C*H*W]}"),
+                    name,
+                );
+            };
+            let mut image = ctx.floats.checkout(image_v.len());
+            for v in image_v {
+                match v.as_f64() {
+                    Some(f) => image.push(f as f32),
+                    None => {
+                        return classify_done(
+                            HttpResponse::error(400, "\"image\" must contain only numbers"),
+                            name,
+                        )
+                    }
+                }
+            }
+            trace.mark(Stage::Parse);
+            let model = match lookup(name) {
+                Ok(m) => m,
+                Err(resp) => return classify_done(resp, name),
+            };
+            if image.len() != model.pool.image_len() {
+                return classify_done(
+                    HttpResponse::error(
+                        400,
+                        &format!(
+                            "model {name:?} expects {} floats, got {}",
+                            model.pool.image_len(),
+                            image.len()
+                        ),
+                    ),
+                    name,
+                );
+            }
+            (model, image)
+        }
+        BodyFormat::F32 => {
+            let model = match lookup(name) {
+                Ok(m) => m,
+                Err(resp) => return classify_done(resp, name),
+            };
+            let expect = model.pool.image_len();
+            if body.len() != expect * 4 {
+                return classify_done(
+                    HttpResponse::error(
+                        400,
+                        &format!(
+                            "model {name:?} expects {} raw f32 bytes, got {}",
+                            expect * 4,
+                            body.len()
+                        ),
+                    ),
+                    name,
+                );
+            }
+            let mut image = ctx.floats.checkout(expect);
+            for ch in body.chunks_exact(4) {
+                image.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            trace.mark(Stage::Parse);
+            (model, image)
+        }
+        BodyFormat::Packed => {
+            let model = match lookup(name) {
+                Ok(m) => m,
+                Err(resp) => return classify_done(resp, name),
+            };
+            let expect = model.pool.image_len();
+            let nbytes = expect.div_ceil(8);
+            if body.len() != nbytes {
+                return classify_done(
+                    HttpResponse::error(
+                        400,
+                        &format!(
+                            "model {name:?} expects {nbytes} packed bytes ({expect} bits), got {}",
+                            body.len()
+                        ),
+                    ),
+                    name,
+                );
+            }
+            if expect % 8 != 0 {
+                let pad_mask = !0u8 << (expect % 8);
+                if body[nbytes - 1] & pad_mask != 0 {
+                    return classify_done(
+                        HttpResponse::error(400, "packed padding bits must be zero"),
+                        name,
+                    );
+                }
+            }
+            let mut image = ctx.floats.checkout(expect);
+            for i in 0..expect {
+                let bit = (body[i / 8] >> (i % 8)) & 1;
+                image.push(if bit == 1 { 1.0 } else { -1.0 });
+            }
+            trace.mark(Stage::Parse);
+            (model, image)
+        }
+    };
+    match model.pool.submit(image) {
+        Ok(pending) => {
+            trace.mark(Stage::Admission);
+            RouteOutcome::ClassifyPending(ClassifyTail { pending, name: name.to_string() })
+        }
         Err(_) => {
             // every shard queue full: bounded-queue fast rejection
             let mut r = HttpResponse::error(429, &format!("model {name:?} at capacity, retry"));
             r.retry_after = true;
-            return (r, 0, 0);
+            classify_done(r, name)
         }
-    };
-    trace.mark(Stage::Admission);
-    let shard = pending.shard();
-    match pending.wait() {
+    }
+}
+
+/// Turn the batcher's answer into the classify response; absorbs the
+/// batcher's timing into the trace. Returns `(response, shard, batch)`.
+pub(crate) fn classify_finish(
+    tail: &ClassifyTail,
+    result: Result<crate::coordinator::Response>,
+    trace: &mut Trace,
+) -> (HttpResponse, u16, u16) {
+    let shard = tail.pending.shard();
+    match result {
         Ok(resp) => {
             trace.absorb_batch_timing(&resp.timing);
             (
@@ -647,7 +765,7 @@ fn classify_traced(
                     format!(
                         "{{\"model\": {}, \"class\": {}, \"score\": {:.6}, \"latency_us\": {}, \
                          \"batch_size\": {}, \"shard\": {}}}",
-                        json_string(name),
+                        json_string(&tail.name),
                         resp.class,
                         resp.score,
                         resp.latency.as_micros(),
@@ -670,47 +788,126 @@ fn classify_traced(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Cursor;
 
-    fn req(raw: &str) -> ReadResult {
-        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    fn parsed(raw: &str) -> HeadInfo {
+        match parse_head(raw.as_bytes()) {
+            HeadParse::Parsed(h) => h,
+            HeadParse::Incomplete => panic!("incomplete: {raw:?}"),
+            HeadParse::Bad(m) => panic!("bad ({m}): {raw:?}"),
+        }
+    }
+
+    fn bad(raw: &str) -> String {
+        match parse_head(raw.as_bytes()) {
+            HeadParse::Bad(m) => m,
+            HeadParse::Parsed(_) => panic!("parsed: {raw:?}"),
+            HeadParse::Incomplete => panic!("incomplete: {raw:?}"),
+        }
     }
 
     #[test]
     fn parses_get_with_keepalive_default() {
-        let r = req("GET /v1/models HTTP/1.1\r\nhost: x\r\n\r\n").unwrap().unwrap();
-        assert_eq!(r.method, "GET");
-        assert_eq!(r.path, "/v1/models");
-        assert!(r.keep_alive);
-        assert!(r.body.is_empty());
+        let h = parsed("GET /v1/models HTTP/1.1\r\nhost: x\r\n\r\n");
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.path, "/v1/models");
+        assert!(h.keep_alive);
+        assert_eq!(h.content_length, 0);
+        assert_eq!(h.format, BodyFormat::Json);
     }
 
     #[test]
-    fn parses_post_body_and_connection_close() {
-        let r = req(
-            "POST /v1/models/m:classify HTTP/1.1\r\ncontent-length: 4\r\n\
-             connection: close\r\n\r\nabcd",
-        )
-        .unwrap()
-        .unwrap();
-        assert_eq!(r.method, "POST");
-        assert_eq!(r.body, b"abcd");
-        assert!(!r.keep_alive);
+    fn parses_post_body_offsets_and_connection_close() {
+        let raw = "POST /v1/models/m:classify HTTP/1.1\r\ncontent-length: 4\r\n\
+                   connection: close\r\n\r\nabcd";
+        let h = parsed(raw);
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.content_length, 4);
+        assert!(!h.keep_alive);
+        assert_eq!(&raw.as_bytes()[h.head_len..h.head_len + h.content_length], b"abcd");
     }
 
     #[test]
     fn http10_defaults_to_close() {
-        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
-        assert!(!r.keep_alive);
+        assert!(!parsed("GET / HTTP/1.0\r\n\r\n").keep_alive);
+        assert!(parsed("GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n").keep_alive);
     }
 
     #[test]
     fn query_string_is_stripped() {
-        let r = req("GET /metrics?x=1 HTTP/1.1\r\n\r\n").unwrap().unwrap();
-        assert_eq!(r.path, "/metrics");
-        assert_eq!(r.query, "x=1");
-        let r = req("GET /metrics HTTP/1.1\r\n\r\n").unwrap().unwrap();
-        assert_eq!(r.query, "");
+        let h = parsed("GET /metrics?x=1 HTTP/1.1\r\n\r\n");
+        assert_eq!(h.path, "/metrics");
+        assert_eq!(h.query, "x=1");
+        assert_eq!(parsed("GET /metrics HTTP/1.1\r\n\r\n").query, "");
+    }
+
+    #[test]
+    fn content_type_selects_body_format() {
+        let f = |ct: &str| {
+            parsed(&format!("POST /x HTTP/1.1\r\ncontent-type: {ct}\r\n\r\n")).format
+        };
+        assert_eq!(f("application/json"), BodyFormat::Json);
+        assert_eq!(f("application/x-bmx-f32"), BodyFormat::F32);
+        assert_eq!(f("application/x-bmx-packed"), BodyFormat::Packed);
+        assert_eq!(f("Application/X-BMX-F32"), BodyFormat::F32);
+        assert_eq!(f("application/x-bmx-packed; charset=binary"), BodyFormat::Packed);
+        assert_eq!(f("text/plain"), BodyFormat::Json);
+    }
+
+    #[test]
+    fn incomplete_and_garbage_heads() {
+        assert!(matches!(parse_head(b""), HeadParse::Incomplete));
+        assert!(matches!(parse_head(b"GET / HTTP/1.1\r\nhost: x\r\n"), HeadParse::Incomplete));
+        bad("\r\n\r\n");
+        bad("GET / HTTP/1.1\r\ncontent-length: nope\r\n\r\n");
+        bad("GET / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n");
+    }
+
+    #[test]
+    fn bare_lf_terminator_accepted() {
+        let h = parsed("GET /healthz HTTP/1.1\nhost: x\n\n");
+        assert_eq!(h.path, "/healthz");
+    }
+
+    #[test]
+    fn oversized_body_rejected_at_parse() {
+        let msg = bad(&format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1));
+        assert!(msg.contains("exceeds cap"), "{msg}");
+    }
+
+    #[test]
+    fn overlong_lines_rejected() {
+        bad(&format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE)));
+        bad(&format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "b".repeat(MAX_LINE)));
+        // a line just under the cap still parses
+        parsed(&format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "c".repeat(1024)));
+    }
+
+    #[test]
+    fn pipelined_bytes_stay_after_head_len() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let h = parsed(raw);
+        assert_eq!(h.path, "/healthz");
+        let rest = &raw.as_bytes()[h.head_len + h.content_length..];
+        assert!(rest.starts_with(b"GET /metrics"), "second request must remain unconsumed");
+    }
+
+    #[test]
+    fn render_response_wire_format() {
+        let mut out = Vec::new();
+        render_response(&HttpResponse::json(200, "{}".to_string()), true, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(
+            text,
+            "HTTP/1.1 200 OK\r\ncontent-type: application/json\r\ncontent-length: 2\r\n\
+             connection: keep-alive\r\n\r\n{}"
+        );
+        let mut out = Vec::new();
+        let mut resp = HttpResponse::error(429, "busy");
+        resp.retry_after = true;
+        render_response(&resp, false, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("connection: close\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
     }
 
     #[test]
@@ -720,37 +917,6 @@ mod tests {
         assert_eq!(query_usize("nn=9", "n"), None);
         assert_eq!(query_usize("n=x", "n"), None);
         assert_eq!(query_usize("", "n"), None);
-    }
-
-    #[test]
-    fn eof_is_none_and_garbage_is_bad() {
-        assert!(matches!(req(""), Ok(None)));
-        assert!(matches!(req("\r\n\r\n"), Err(ReadError::Bad(_))));
-        assert!(matches!(
-            req("GET / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
-            Err(ReadError::Bad(_))
-        ));
-        assert!(matches!(
-            req("GET / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
-            Err(ReadError::Bad(_))
-        ));
-    }
-
-    #[test]
-    fn oversized_body_rejected_before_reading() {
-        let r = req(&format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1));
-        assert!(matches!(r, Err(ReadError::Bad(_))));
-    }
-
-    #[test]
-    fn overlong_lines_rejected() {
-        let long_target = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE));
-        assert!(matches!(req(&long_target), Err(ReadError::Bad(_))));
-        let long_header = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "b".repeat(MAX_LINE));
-        assert!(matches!(req(&long_header), Err(ReadError::Bad(_))));
-        // a line just under the cap still parses
-        let ok_header = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "c".repeat(1024));
-        assert!(req(&ok_header).unwrap().is_some());
     }
 
     #[test]

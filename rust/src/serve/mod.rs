@@ -5,8 +5,9 @@
 //! (§4.2, binary models under real-world load on commodity CPUs):
 //!
 //! ```text
-//!   HTTP/1.1 over TcpListener          [`http::Gateway`]
-//!        │  POST /v1/models/{name}:classify
+//!   readiness-polling reactor          [`http::Gateway`] / [`reactor`]
+//!        │  acceptor + N event-loop workers, non-blocking conns,
+//!        │  POST /v1/models/{name}:classify (JSON / x-bmx-f32 / x-bmx-packed)
 //!        ▼
 //!   name → model resolution            [`registry::ModelRegistry`]
 //!        │  lazy load · LRU byte budget · hot-swap on file change
@@ -20,18 +21,25 @@
 //!   xnor/popcount engine forward       [`crate::nn::Engine`]
 //! ```
 //!
-//! Everything is std-only (threads + `TcpListener`; no tokio/hyper in the
-//! offline environment).  `GET /metrics` exposes per-model request counts,
-//! batch-size histograms and latency quantiles aggregated across shards
-//! ([`prom`]); `GET /v1/models` lists what the registry can serve.
-//! Architecture rationale: DESIGN.md §Serving architecture.
+//! Everything is std-only (threads + non-blocking `TcpStream`s driven by
+//! level-triggered readiness polling; no tokio/hyper/mio in the offline
+//! environment).  Request/response byte buffers and decoded image tensors
+//! are pooled ([`bufpool`]) so the steady state allocates nothing per
+//! request.  `GET /metrics` exposes per-model request counts, batch-size
+//! histograms, latency quantiles aggregated across shards, and the
+//! reactor's connection gauges ([`prom`]); `GET /v1/models` lists what
+//! the registry can serve.  Architecture rationale: DESIGN.md §Serving
+//! architecture and §Gateway reactor.
 
+pub mod bufpool;
 pub mod http;
 pub mod pool;
 pub mod prom;
+pub mod reactor;
 pub mod registry;
 
-pub use http::Gateway;
+pub use http::{Gateway, GatewayConfig};
+pub use reactor::ReactorStats;
 pub use pool::{ModelPool, PendingResponse, PoolConfig};
 pub use registry::{
     binary_names_for, LoadedModel, ModelInfo, ModelRegistry, ModelStatus, RegistryConfig,

@@ -14,7 +14,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    Backend, BatchPolicy, Client, MetricsSnapshot, Response, Server, ServerConfig,
+    Backend, BatchPolicy, Client, ImageBuf, MetricsSnapshot, Response, Server, ServerConfig,
 };
 
 /// Pool construction parameters.
@@ -82,6 +82,19 @@ impl PendingResponse {
     pub fn wait(self) -> Result<Response> {
         self.rx.recv().map_err(|_| anyhow!("server dropped the request"))
     }
+
+    /// Non-blocking check for the response (the reactor's Dispatch state
+    /// polls this each event-loop pass). `Ok(None)` = not ready yet;
+    /// `Err` = the batcher dropped the request (gateway answers 500).
+    pub fn poll(&self) -> Result<Option<Response>> {
+        match self.rx.try_recv() {
+            Ok(resp) => Ok(Some(resp)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow!("server dropped the request"))
+            }
+        }
+    }
 }
 
 impl Drop for PendingResponse {
@@ -138,8 +151,11 @@ impl ModelPool {
 
     /// Route a request: shards ordered by queue depth (round-robin cursor
     /// breaks ties), first shard with queue space wins.  Errs immediately
-    /// when the image is malformed or every shard queue is full.
-    pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse> {
+    /// when the image is malformed or every shard queue is full.  Takes
+    /// anything convertible to [`ImageBuf`], so the gateway's pooled
+    /// buffers and plain `Vec<f32>`s both flow through unchanged.
+    pub fn submit(&self, image: impl Into<ImageBuf>) -> Result<PendingResponse> {
+        let image = image.into();
         anyhow::ensure!(
             image.len() == self.image_len,
             "image must have {} floats, got {}",
@@ -167,7 +183,7 @@ impl ModelPool {
     }
 
     /// Blocking classify through the router.
-    pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
+    pub fn classify(&self, image: impl Into<ImageBuf>) -> Result<Response> {
         self.submit(image)?.wait()
     }
 

@@ -16,6 +16,7 @@
 use crate::coordinator::MetricsSnapshot;
 use crate::obs::{counters, Obs};
 
+use super::reactor::ReactorStats;
 use super::registry::{ModelInfo, ModelRegistry};
 
 fn push_family(out: &mut String, name: &str, kind: &str, help: &str) {
@@ -29,8 +30,9 @@ fn label_escape(s: &str) -> String {
 
 /// Render the whole registry: per-model counters, batch-size histogram
 /// and latency quantiles, aggregated across each model's pool shards —
-/// plus the process-wide observability families from `obs`.
-pub fn render(registry: &ModelRegistry, obs: &Obs) -> String {
+/// plus the process-wide observability families from `obs` and the
+/// gateway reactor's connection gauges and loop histograms from `stats`.
+pub fn render(registry: &ModelRegistry, obs: &Obs, stats: &ReactorStats) -> String {
     let loaded = registry.loaded_models();
     let rows: Vec<(ModelInfo, MetricsSnapshot, usize, Vec<usize>)> = loaded
         .iter()
@@ -183,7 +185,7 @@ pub fn render(registry: &ModelRegistry, obs: &Obs) -> String {
         "bmxnet_stage_latency_us",
         "histogram",
         "Per-stage request latency in microseconds \
-         (parse, admission, queue_wait, batch_window, forward, respond).",
+         (read, parse, admission, queue_wait, batch_window, forward, respond, write).",
     );
     for h in obs.stages.snapshot() {
         let stage = h.stage;
@@ -227,6 +229,47 @@ pub fn render(registry: &ModelRegistry, obs: &Obs) -> String {
         "Traces dropped on journal slot contention.",
     );
     out.push_str(&format!("bmxnet_trace_dropped_total {}\n", obs.journal.dropped()));
+
+    push_family(
+        &mut out,
+        "bmxnet_active_connections",
+        "gauge",
+        "Connections currently open on the gateway reactor.",
+    );
+    out.push_str(&format!("bmxnet_active_connections {}\n", stats.active()));
+    push_family(
+        &mut out,
+        "bmxnet_conns_shed_total",
+        "counter",
+        "Connections refused with 503 at accept (past --max-conns).",
+    );
+    out.push_str(&format!("bmxnet_conns_shed_total {}\n", stats.shed_total()));
+
+    push_family(
+        &mut out,
+        "bmxnet_reactor_loop_us",
+        "histogram",
+        "Event-loop pass duration per reactor worker in microseconds \
+         (active portion; backoff sleeps not counted).",
+    );
+    for h in stats.loop_snapshot() {
+        let worker = h.worker;
+        for (i, &le) in counters::STAGE_BUCKETS.iter().enumerate() {
+            out.push_str(&format!(
+                "bmxnet_reactor_loop_us_bucket{{worker=\"{worker}\",le=\"{le}\"}} {}\n",
+                h.buckets[i]
+            ));
+        }
+        out.push_str(&format!(
+            "bmxnet_reactor_loop_us_bucket{{worker=\"{worker}\",le=\"+Inf\"}} {}\n",
+            h.buckets[counters::STAGE_BUCKETS.len()]
+        ));
+        out.push_str(&format!("bmxnet_reactor_loop_us_sum{{worker=\"{worker}\"}} {}\n", h.sum_us));
+        out.push_str(&format!(
+            "bmxnet_reactor_loop_us_count{{worker=\"{worker}\"}} {}\n",
+            h.count
+        ));
+    }
     out
 }
 
@@ -246,7 +289,8 @@ mod tests {
     fn empty_registry_renders_zero_gauge() {
         let reg = ModelRegistry::new(RegistryConfig::new(std::env::temp_dir().join("nope")));
         let obs = Obs::with_slots(8);
-        let text = render(&reg, &obs);
+        let stats = ReactorStats::new(2);
+        let text = render(&reg, &obs, &stats);
         assert!(text.contains("# TYPE bmxnet_build_info gauge"), "{text}");
         assert!(text.contains("bmxnet_build_info{version=\""), "{text}");
         assert!(
@@ -260,6 +304,13 @@ mod tests {
         assert!(text.contains("# TYPE bmxnet_stage_latency_us histogram"), "{text}");
         assert!(text.contains("# TYPE bmxnet_kernel_calls_total counter"), "{text}");
         assert!(text.contains("bmxnet_trace_total 0\n"), "{text}");
+        // reactor families render even before any traffic
+        assert!(text.contains("bmxnet_active_connections 0\n"), "{text}");
+        assert!(text.contains("bmxnet_conns_shed_total 0\n"), "{text}");
+        assert!(
+            text.contains("bmxnet_reactor_loop_us_count{worker=\"1\"} 0\n"),
+            "{text}"
+        );
     }
 
     #[test]
@@ -271,7 +322,9 @@ mod tests {
             t.mark(s);
         }
         obs.complete(&t.finish("m", 200, 0, 1));
-        let text = render(&reg, &obs);
+        let stats = ReactorStats::new(1);
+        stats.record_loop(0, 7);
+        let text = render(&reg, &obs, &stats);
         assert!(text.contains("bmxnet_trace_total 1\n"), "{text}");
         assert!(
             text.contains("bmxnet_stage_latency_us_count{stage=\"parse\"} 1\n"),
@@ -279,6 +332,10 @@ mod tests {
         );
         assert!(
             text.contains("bmxnet_stage_latency_us_bucket{stage=\"forward\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("bmxnet_reactor_loop_us_count{worker=\"0\"} 1\n"),
             "{text}"
         );
     }

@@ -1,0 +1,780 @@
+//! Std-only readiness-polling reactor behind the HTTP gateway.
+//!
+//! No epoll/kqueue wrapper exists in std, so instead of a thread per
+//! connection (the old gateway, capped at 256) this runs a small acceptor
+//! plus N event-loop workers, each owning a slab of non-blocking
+//! `TcpStream`s and driving them through a per-connection state machine:
+//!
+//! ```text
+//! Read (headers → body) → Dispatch (poll batcher) → Write → Read …
+//! ```
+//!
+//! Readiness is discovered by *attempting* the syscall and treating
+//! `WouldBlock` as "not ready" (level-triggered polling). When a full
+//! scan makes no progress the worker sleeps with exponential backoff
+//! (100 µs doubling to 2 ms), so an idle gateway costs a few wakeups per
+//! millisecond per worker and a busy one never sleeps. This trades a
+//! bounded idle cost for zero dependencies — see DESIGN.md §Gateway
+//! reactor for why this beats pulling in mio here.
+//!
+//! Timeouts come from a hashed [`TimerWheel`] with lazy revalidation:
+//! every connection keeps exactly one wheel entry alive; when it fires
+//! the worker re-checks the connection's *authoritative* deadline and
+//! either closes it (408 mid-request, silent when idle) or reschedules.
+//! Deadlines longer than one wheel revolution simply revalidate once per
+//! revolution.
+//!
+//! Overload is shed at accept: past `max_conns` open connections the
+//! acceptor writes a best-effort 503 and closes, instead of the old
+//! "no thread available" cliff.
+
+use anyhow::{Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::bufpool::BytePool;
+use super::http::{
+    render_response, route_begin, ClassifyTail, GatewayConfig, GatewayCtx, HeadInfo, HeadParse,
+    HttpResponse, RouteOutcome, MAX_HEAD,
+};
+use crate::obs::counters::STAGE_BUCKETS;
+use crate::obs::{Stage, Trace};
+
+/// Per-worker buffers kept for reuse (request + response per connection).
+const BYTE_POOL_CAP: usize = 512;
+
+/// Worker sleep bounds when a full scan makes no progress.
+const MIN_BACKOFF: Duration = Duration::from_micros(100);
+const MAX_BACKOFF: Duration = Duration::from_millis(2);
+
+/// Timer wheel geometry: 256 slots × 5 ms ≈ 1.28 s per revolution.
+const WHEEL_SLOTS: usize = 256;
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(5);
+
+/// Stand-in deadline for states with no timeout (Dispatch: the batcher's
+/// bounded queue guarantees an answer, matching the old blocking wait).
+const NO_DEADLINE: Duration = Duration::from_secs(3600);
+
+/// Bytes read from a socket per `read()` attempt.
+const READ_CHUNK: usize = 16 << 10;
+
+/// Gauges + counters the reactor exports on `/metrics`.
+pub struct ReactorStats {
+    /// Currently open connections (accepted, not yet closed).
+    active: AtomicUsize,
+    /// Connections refused with 503 at accept (`bmxnet_conns_shed_total`).
+    shed: AtomicU64,
+    /// Per-worker event-loop iteration histograms (µs, active portion of
+    /// each pass — the backoff sleep is not counted).
+    loops: Vec<LoopHist>,
+}
+
+struct LoopHist {
+    buckets: [AtomicU64; STAGE_BUCKETS.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+/// One worker's loop histogram: cumulative counts aligned to
+/// [`STAGE_BUCKETS`] plus a final +Inf entry (same shape as
+/// `obs::counters::StageHist`).
+pub struct LoopHistSnapshot {
+    pub worker: usize,
+    pub buckets: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl ReactorStats {
+    pub fn new(workers: usize) -> ReactorStats {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ROW: [AtomicU64; STAGE_BUCKETS.len() + 1] = [ZERO; STAGE_BUCKETS.len() + 1];
+        ReactorStats {
+            active: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            loops: (0..workers.max(1))
+                .map(|_| LoopHist { buckets: ROW, sum_us: ZERO, count: ZERO })
+                .collect(),
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.loops.len()
+    }
+
+    fn conn_opened(&self) {
+        self.active.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn conn_closed(&self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn shed_one(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_loop(&self, worker: usize, us: u64) {
+        let Some(h) = self.loops.get(worker) else { return };
+        let bucket = STAGE_BUCKETS
+            .iter()
+            .position(|&le| us <= le)
+            .unwrap_or(STAGE_BUCKETS.len());
+        h.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        h.sum_us.fetch_add(us, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn loop_snapshot(&self) -> Vec<LoopHistSnapshot> {
+        self.loops
+            .iter()
+            .enumerate()
+            .map(|(worker, h)| {
+                let mut cum = 0u64;
+                let buckets = h
+                    .buckets
+                    .iter()
+                    .map(|c| {
+                        cum += c.load(Ordering::Relaxed);
+                        cum
+                    })
+                    .collect();
+                LoopHistSnapshot {
+                    worker,
+                    buckets,
+                    sum_us: h.sum_us.load(Ordering::Relaxed),
+                    count: h.count.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Wheel entry: a slab index plus the generation it was armed for, so an
+/// entry surviving past its connection (slot reused) is ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimerEntry {
+    pub idx: usize,
+    pub gen: u64,
+}
+
+/// Hashed timer wheel. Entries land in the slot their deadline rounds up
+/// to; deadlines past one revolution clamp to the farthest slot and fire
+/// *early* — callers must revalidate against the real deadline and
+/// reschedule (lazy revalidation). O(1) schedule, O(slots stepped) tick.
+pub struct TimerWheel {
+    slots: Vec<Vec<TimerEntry>>,
+    granularity_us: u64,
+    cursor: usize,
+    last_tick: Instant,
+}
+
+impl TimerWheel {
+    pub fn new(slots: usize, granularity: Duration, now: Instant) -> TimerWheel {
+        TimerWheel {
+            slots: (0..slots.max(2)).map(|_| Vec::new()).collect(),
+            granularity_us: (granularity.as_micros() as u64).max(1),
+            cursor: 0,
+            last_tick: now,
+        }
+    }
+
+    /// Arm `e` to fire no later than `deadline` (possibly earlier when
+    /// the deadline exceeds one revolution).
+    pub fn schedule(&mut self, now: Instant, deadline: Instant, e: TimerEntry) {
+        let delta_us = deadline.saturating_duration_since(now).as_micros() as u64;
+        let ticks = (delta_us / self.granularity_us + 1).min(self.slots.len() as u64 - 1) as usize;
+        let slot = (self.cursor + ticks) % self.slots.len();
+        self.slots[slot].push(e);
+    }
+
+    /// Advance to `now`, appending every entry whose slot has passed to
+    /// `out`. A gap longer than one revolution drains the whole wheel.
+    pub fn tick(&mut self, now: Instant, out: &mut Vec<TimerEntry>) {
+        let elapsed_us = now.duration_since(self.last_tick).as_micros() as u64;
+        let steps = elapsed_us / self.granularity_us;
+        if steps == 0 {
+            return;
+        }
+        if steps >= self.slots.len() as u64 {
+            for slot in &mut self.slots {
+                out.append(slot);
+            }
+            self.last_tick = now;
+            return;
+        }
+        for _ in 0..steps {
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            out.append(&mut self.slots[self.cursor]);
+        }
+        self.last_tick += Duration::from_micros(steps * self.granularity_us);
+    }
+}
+
+/// Connection state machine position.
+enum ConnState {
+    /// Accumulating request bytes (head, then body).
+    Read,
+    /// Request handed to a pool shard; polling for the batcher's answer.
+    Dispatch,
+    /// Flushing the rendered response.
+    Write,
+}
+
+/// Trace metadata carried to write-completion, where classify traces are
+/// finished and published (`write` stage = full flush).
+struct PublishMeta {
+    name: String,
+    status: u16,
+    shard: u16,
+    batch: u16,
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    /// Accumulated request bytes (pooled; pipelined requests queue here).
+    req_buf: Vec<u8>,
+    /// Rendered response bytes (pooled) + how many are already flushed.
+    resp_buf: Vec<u8>,
+    resp_written: usize,
+    /// Parsed head while the body is still streaming in.
+    head: Option<HeadInfo>,
+    /// In-flight classify: the shard's response channel + model name.
+    job: Option<ClassifyTail>,
+    trace: Option<Trace>,
+    publish: Option<PublishMeta>,
+    keep_alive: bool,
+    /// A request has started arriving and its response is not yet flushed.
+    in_request: bool,
+    /// Authoritative timeout; the wheel entry revalidates against this.
+    deadline: Instant,
+}
+
+enum DriveVerdict {
+    Keep,
+    Close,
+}
+
+struct Worker {
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Bumped on release; wheel entries from a prior tenant mismatch.
+    gens: Vec<u64>,
+    wheel: TimerWheel,
+    bytes: BytePool,
+}
+
+impl Worker {
+    fn adopt(&mut self, stream: TcpStream, now: Instant, cfg: &GatewayConfig) {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_nonblocking(true);
+        let idx = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.gens.push(0);
+            self.conns.len() - 1
+        });
+        let deadline = now + cfg.idle_timeout;
+        self.wheel.schedule(now, deadline, TimerEntry { idx, gen: self.gens[idx] });
+        self.conns[idx] = Some(Conn {
+            stream,
+            state: ConnState::Read,
+            req_buf: self.bytes.get(),
+            resp_buf: self.bytes.get(),
+            resp_written: 0,
+            head: None,
+            job: None,
+            trace: None,
+            publish: None,
+            keep_alive: true,
+            in_request: false,
+            deadline,
+        });
+    }
+
+    /// Close a connection: return its buffers to the pool, free the slab
+    /// slot, invalidate outstanding wheel entries.
+    fn release(&mut self, idx: usize, conn: Conn, stats: &ReactorStats) {
+        self.bytes.put(conn.req_buf);
+        self.bytes.put(conn.resp_buf);
+        self.gens[idx] += 1;
+        self.free.push(idx);
+        stats.conn_closed();
+        // conn.stream drops here → close
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+enum ReadOutcome {
+    Data,
+    Blocked,
+    Eof,
+    Fatal,
+}
+
+fn read_some(c: &mut Conn) -> ReadOutcome {
+    let old = c.req_buf.len();
+    c.req_buf.resize(old + READ_CHUNK, 0);
+    let r = c.stream.read(&mut c.req_buf[old..]);
+    match r {
+        Ok(0) => {
+            c.req_buf.truncate(old);
+            ReadOutcome::Eof
+        }
+        Ok(n) => {
+            c.req_buf.truncate(old + n);
+            ReadOutcome::Data
+        }
+        Err(e) if would_block(&e) || e.kind() == ErrorKind::Interrupted => {
+            c.req_buf.truncate(old);
+            ReadOutcome::Blocked
+        }
+        Err(_) => {
+            c.req_buf.truncate(old);
+            ReadOutcome::Fatal
+        }
+    }
+}
+
+/// Render `resp` and move the connection into the Write state.
+fn start_write(c: &mut Conn, resp: &HttpResponse, keep_alive: bool, now: Instant, cfg: &GatewayConfig) {
+    c.resp_buf.clear();
+    render_response(resp, keep_alive, &mut c.resp_buf);
+    c.resp_written = 0;
+    c.keep_alive = keep_alive;
+    if let Some(t) = c.trace.as_mut() {
+        t.mark(Stage::Respond);
+    }
+    c.state = ConnState::Write;
+    c.deadline = now + cfg.request_timeout;
+}
+
+/// Try to complete a buffered request: parse the head, wait for the full
+/// body, route it. Returns true when the connection changed state (to
+/// Write or Dispatch); false when more bytes are needed.
+fn advance_request(c: &mut Conn, ctx: &GatewayCtx, cfg: &GatewayConfig, now: Instant) -> bool {
+    if c.head.is_none() {
+        match super::http::parse_head(&c.req_buf) {
+            HeadParse::Incomplete => {
+                if c.req_buf.len() > MAX_HEAD {
+                    let resp =
+                        HttpResponse::error(400, &format!("headers exceed cap {MAX_HEAD}"));
+                    c.trace = None;
+                    start_write(c, &resp, false, now, cfg);
+                    return true;
+                }
+                return false;
+            }
+            HeadParse::Bad(msg) => {
+                let resp = HttpResponse::error(400, &msg);
+                c.trace = None;
+                start_write(c, &resp, false, now, cfg);
+                return true;
+            }
+            HeadParse::Parsed(h) => c.head = Some(h),
+        }
+    }
+    let (head_len, content_length) = {
+        let h = c.head.as_ref().expect("head parsed above");
+        (h.head_len, h.content_length)
+    };
+    let total = head_len + content_length;
+    if c.req_buf.len() < total {
+        return false;
+    }
+    // full request buffered: stamp the read stage and route
+    let head = c.head.take().expect("head parsed above");
+    let mut trace = c.trace.take().unwrap_or_else(Trace::begin);
+    trace.mark(Stage::Read);
+    let keep_alive = head.keep_alive;
+    let outcome = {
+        let body = &c.req_buf[head_len..total];
+        route_begin(ctx, &head, body, &mut trace)
+    };
+    c.req_buf.drain(..total); // keep pipelined leftovers
+    match outcome {
+        RouteOutcome::Plain(resp) => {
+            c.trace = None;
+            c.publish = None;
+            start_write(c, &resp, keep_alive, now, cfg);
+        }
+        RouteOutcome::ClassifyDone { resp, name, shard, batch } => {
+            c.publish = Some(PublishMeta { name, status: resp.status, shard, batch });
+            c.trace = Some(trace);
+            start_write(c, &resp, keep_alive, now, cfg);
+        }
+        RouteOutcome::ClassifyPending(tail) => {
+            c.job = Some(tail);
+            c.trace = Some(trace);
+            c.keep_alive = keep_alive;
+            c.state = ConnState::Dispatch;
+            c.deadline = now + NO_DEADLINE;
+        }
+    }
+    true
+}
+
+/// Drive one connection as far as it will go without blocking. Sets
+/// `*progress` when any byte moved or any state advanced.
+fn drive_conn(
+    c: &mut Conn,
+    ctx: &GatewayCtx,
+    cfg: &GatewayConfig,
+    now: Instant,
+    progress: &mut bool,
+) -> DriveVerdict {
+    loop {
+        match c.state {
+            ConnState::Read => {
+                // consume buffered bytes first (pipelining), then the socket
+                loop {
+                    if !c.req_buf.is_empty() && !c.in_request {
+                        c.in_request = true;
+                        c.trace = Some(Trace::begin());
+                        c.deadline = now + cfg.request_timeout;
+                    }
+                    if advance_request(c, ctx, cfg, now) {
+                        *progress = true;
+                        break; // state changed; outer loop continues
+                    }
+                    match read_some(c) {
+                        ReadOutcome::Data => *progress = true,
+                        ReadOutcome::Blocked => return DriveVerdict::Keep,
+                        ReadOutcome::Eof | ReadOutcome::Fatal => return DriveVerdict::Close,
+                    }
+                }
+            }
+            ConnState::Dispatch => {
+                let tail = c.job.as_ref().expect("dispatch state has a job");
+                let polled = tail.pending.poll();
+                match polled {
+                    Ok(None) => return DriveVerdict::Keep,
+                    ready => {
+                        let tail = c.job.take().expect("dispatch state has a job");
+                        let trace = c.trace.as_mut().expect("classify carries a trace");
+                        let result = ready.map(|r| r.expect("Ok(None) handled above"));
+                        let (resp, shard, batch) =
+                            super::http::classify_finish(&tail, result, trace);
+                        c.publish = Some(PublishMeta {
+                            name: tail.name,
+                            status: resp.status,
+                            shard,
+                            batch,
+                        });
+                        let ka = c.keep_alive;
+                        start_write(c, &resp, ka, now, cfg);
+                        *progress = true;
+                    }
+                }
+            }
+            ConnState::Write => {
+                while c.resp_written < c.resp_buf.len() {
+                    match c.stream.write(&c.resp_buf[c.resp_written..]) {
+                        Ok(0) => return DriveVerdict::Close,
+                        Ok(n) => {
+                            c.resp_written += n;
+                            *progress = true;
+                        }
+                        Err(e) if would_block(&e) || e.kind() == ErrorKind::Interrupted => {
+                            return DriveVerdict::Keep
+                        }
+                        Err(_) => return DriveVerdict::Close,
+                    }
+                }
+                // fully flushed: finish + publish the classify trace
+                if let (Some(t), Some(meta)) = (c.trace.as_mut(), c.publish.take()) {
+                    t.mark(Stage::Write);
+                    ctx.obs
+                        .complete(&t.finish(&meta.name, meta.status, meta.shard, meta.batch));
+                }
+                c.trace = None;
+                c.publish = None;
+                c.resp_buf.clear();
+                c.resp_written = 0;
+                *progress = true;
+                if !c.keep_alive {
+                    return DriveVerdict::Close;
+                }
+                c.in_request = false;
+                c.state = ConnState::Read;
+                c.deadline = now + cfg.idle_timeout;
+                // loop: pipelined bytes may already hold the next request
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    rx: mpsc::Receiver<TcpStream>,
+    ctx: Arc<GatewayCtx>,
+    cfg: GatewayConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let now = Instant::now();
+    let mut w = Worker {
+        conns: Vec::new(),
+        free: Vec::new(),
+        gens: Vec::new(),
+        wheel: TimerWheel::new(WHEEL_SLOTS, WHEEL_GRANULARITY, now),
+        bytes: BytePool::new(BYTE_POOL_CAP),
+    };
+    let mut backoff = MIN_BACKOFF;
+    let mut fired: Vec<TimerEntry> = Vec::new();
+    loop {
+        let loop_start = Instant::now();
+        let mut progress = false;
+        // adopt new connections
+        loop {
+            match rx.try_recv() {
+                Ok(s) => {
+                    w.adopt(s, loop_start, &cfg);
+                    progress = true;
+                }
+                Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // drive every live connection
+        for idx in 0..w.conns.len() {
+            let Some(mut c) = w.conns[idx].take() else { continue };
+            match drive_conn(&mut c, &ctx, &cfg, loop_start, &mut progress) {
+                DriveVerdict::Keep => w.conns[idx] = Some(c),
+                DriveVerdict::Close => {
+                    w.release(idx, c, &ctx.stats);
+                    progress = true;
+                }
+            }
+        }
+        // expire / revalidate timers
+        fired.clear();
+        let tick_now = Instant::now();
+        w.wheel.tick(tick_now, &mut fired);
+        for e in fired.drain(..) {
+            if w.gens.get(e.idx).copied() != Some(e.gen) {
+                continue; // slot reused since this entry was armed
+            }
+            let due = match w.conns[e.idx].as_ref() {
+                Some(c) => c.deadline <= tick_now,
+                None => continue,
+            };
+            if !due {
+                let d = w.conns[e.idx].as_ref().expect("checked above").deadline;
+                w.wheel.schedule(tick_now, d, e);
+                continue;
+            }
+            let mut c = w.conns[e.idx].take().expect("checked above");
+            if c.in_request && matches!(c.state, ConnState::Read) {
+                // slow client stalled mid-request: best-effort 408
+                let resp = HttpResponse::error(408, "request timed out");
+                let mut buf = Vec::new();
+                render_response(&resp, false, &mut buf);
+                let _ = c.stream.write(&buf);
+            }
+            w.release(e.idx, c, &ctx.stats);
+            progress = true;
+        }
+        ctx.stats.record_loop(id, loop_start.elapsed().as_micros() as u64);
+        if progress {
+            backoff = MIN_BACKOFF;
+        } else {
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(MAX_BACKOFF);
+        }
+    }
+    // shutdown: close everything still open (and anything undrained)
+    for idx in 0..w.conns.len() {
+        if let Some(c) = w.conns[idx].take() {
+            w.release(idx, c, &ctx.stats);
+        }
+    }
+    while let Ok(s) = rx.try_recv() {
+        drop(s);
+        ctx.stats.conn_closed();
+    }
+}
+
+fn shed(stream: TcpStream, stats: &ReactorStats) {
+    stats.shed_one();
+    let _ = stream.set_nonblocking(true);
+    let resp = HttpResponse::error(503, "connection limit reached, retry");
+    let mut buf = Vec::new();
+    render_response(&resp, false, &mut buf);
+    let mut s = stream;
+    let _ = s.write(&buf); // single best-effort write; then close
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    txs: Vec<mpsc::Sender<TcpStream>>,
+    ctx: Arc<GatewayCtx>,
+    cfg: GatewayConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut next = 0usize;
+    for incoming in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = incoming else { continue };
+        if ctx.stats.active() >= cfg.max_conns {
+            shed(stream, &ctx.stats);
+            continue;
+        }
+        ctx.stats.conn_opened();
+        let mut s = stream;
+        let mut placed = false;
+        for _ in 0..txs.len() {
+            let t = next % txs.len();
+            next += 1;
+            match txs[t].send(s) {
+                Ok(()) => {
+                    placed = true;
+                    break;
+                }
+                Err(mpsc::SendError(back)) => s = back, // worker gone; try next
+            }
+        }
+        if !placed {
+            ctx.stats.conn_closed();
+        }
+    }
+}
+
+/// Spawn the acceptor + `cfg.io_workers` event-loop workers over a bound
+/// listener. Returns the join handles (acceptor last).
+pub(crate) fn spawn(
+    listener: TcpListener,
+    ctx: Arc<GatewayCtx>,
+    cfg: GatewayConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<Vec<JoinHandle<()>>> {
+    let workers = ctx.stats.workers();
+    let mut handles = Vec::with_capacity(workers + 1);
+    let mut txs = Vec::with_capacity(workers);
+    for id in 0..workers {
+        let (tx, rx) = mpsc::channel();
+        txs.push(tx);
+        let ctx = ctx.clone();
+        let cfg = cfg.clone();
+        let stop = stop.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("bmxnet-io-{id}"))
+            .spawn(move || worker_loop(id, rx, ctx, cfg, stop))
+            .context("spawn io worker")?;
+        handles.push(h);
+    }
+    let h = std::thread::Builder::new()
+        .name("bmxnet-accept".into())
+        .spawn(move || acceptor_loop(listener, txs, ctx, cfg, stop))
+        .context("spawn accept thread")?;
+    handles.push(h);
+    Ok(handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(idx: usize) -> TimerEntry {
+        TimerEntry { idx, gen: 0 }
+    }
+
+    #[test]
+    fn wheel_fires_at_or_after_deadline_slot() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(16, Duration::from_millis(10), t0);
+        w.schedule(t0, t0 + Duration::from_millis(35), e(1));
+        let mut out = Vec::new();
+        w.tick(t0 + Duration::from_millis(20), &mut out);
+        assert!(out.is_empty(), "fired {}ms early", 35 - 20);
+        w.tick(t0 + Duration::from_millis(60), &mut out);
+        assert_eq!(out, vec![e(1)]);
+        // one-shot: nothing fires twice
+        out.clear();
+        w.tick(t0 + Duration::from_millis(500), &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn wheel_clamps_long_deadlines_to_one_revolution() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(8, Duration::from_millis(10), t0);
+        // 8 slots × 10ms = 80ms revolution; a 10s deadline fires early
+        w.schedule(t0, t0 + Duration::from_secs(10), e(7));
+        let mut out = Vec::new();
+        w.tick(t0 + Duration::from_millis(85), &mut out);
+        assert_eq!(out, vec![e(7)], "long deadline must fire within one revolution");
+    }
+
+    #[test]
+    fn wheel_gap_longer_than_revolution_drains_everything() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(8, Duration::from_millis(10), t0);
+        w.schedule(t0, t0 + Duration::from_millis(15), e(1));
+        w.schedule(t0, t0 + Duration::from_millis(75), e(2));
+        let mut out = Vec::new();
+        w.tick(t0 + Duration::from_secs(5), &mut out);
+        assert_eq!(out.len(), 2);
+        // wheel stays usable after catch-up
+        let t1 = t0 + Duration::from_secs(5);
+        w.schedule(t1, t1 + Duration::from_millis(15), e(3));
+        out.clear();
+        w.tick(t1 + Duration::from_millis(40), &mut out);
+        assert_eq!(out, vec![e(3)]);
+    }
+
+    #[test]
+    fn wheel_subgranularity_ticks_are_noops() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(8, Duration::from_millis(10), t0);
+        w.schedule(t0, t0 + Duration::from_millis(5), e(1));
+        let mut out = Vec::new();
+        w.tick(t0 + Duration::from_millis(3), &mut out);
+        assert!(out.is_empty());
+        w.tick(t0 + Duration::from_millis(12), &mut out);
+        assert_eq!(out, vec![e(1)], "sub-granularity deadline fires on the next slot");
+    }
+
+    #[test]
+    fn stats_track_active_shed_and_loops() {
+        let s = ReactorStats::new(2);
+        s.conn_opened();
+        s.conn_opened();
+        s.conn_closed();
+        assert_eq!(s.active(), 1);
+        s.shed_one();
+        assert_eq!(s.shed_total(), 1);
+        s.record_loop(0, 3);
+        s.record_loop(0, 100);
+        s.record_loop(1, 5);
+        let snap = s.loop_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].count, 2);
+        assert_eq!(snap[0].sum_us, 103);
+        assert_eq!(*snap[0].buckets.last().unwrap(), 2, "+Inf bucket equals count");
+        assert!(snap[0].buckets.windows(2).all(|w| w[0] <= w[1]), "cumulative buckets");
+        assert_eq!(snap[1].count, 1);
+        // out-of-range worker id is ignored, not a panic
+        s.record_loop(9, 1);
+    }
+}

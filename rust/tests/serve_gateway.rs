@@ -18,7 +18,7 @@ use repro::data::Kind;
 use repro::model::bmx::{synth_lenet, BmxModel, BmxTensor};
 use repro::model::json;
 use repro::nn::Engine;
-use repro::serve::{Gateway, ModelRegistry, PoolConfig, RegistryConfig};
+use repro::serve::{Gateway, GatewayConfig, ModelRegistry, PoolConfig, RegistryConfig};
 
 fn temp_models_dir(case: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("serve_gateway_{}_{case}", std::process::id()));
@@ -319,6 +319,130 @@ fn unknown_model_and_bad_bodies_are_clean_http_errors() {
     assert_eq!(status, 200);
     assert!(body.contains("ok"));
 
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Count this process's OS threads (Linux: one dir per thread).
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+/// The reactor's headline capability: 1024 concurrent keep-alive
+/// connections on a bounded set of worker threads — 4× the old
+/// thread-per-connection gateway's hard 256-connection cap. Every
+/// connection answers two rounds of classify requests (round 2 proves
+/// keep-alive reuse), and answers match a direct engine.
+#[test]
+fn serves_1024_keepalive_connections_with_bounded_threads() {
+    let n = 1024usize;
+    let dir = temp_models_dir("kilo");
+    let (bin_eng, _) = write_two_models(&dir);
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 64, window: Duration::from_millis(1) },
+            queue_cap: 2 * n,
+            ..Default::default()
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    let gateway = Gateway::start_with(
+        registry,
+        "127.0.0.1:0",
+        GatewayConfig {
+            io_workers: 2,
+            max_conns: n + 64,
+            idle_timeout: Duration::from_secs(120),
+            request_timeout: Duration::from_secs(60),
+        },
+    )
+    .unwrap();
+    let addr = gateway.addr();
+    let threads_before = thread_count();
+
+    // a handful of distinct images with known answers, cycled across conns
+    let ds = Kind::Digits.generate(8, 21);
+    let expected: Vec<usize> =
+        (0..8).map(|i| bin_eng.classify(ds.image(i), 1).unwrap()[0].0).collect();
+    let bodies: Vec<String> = (0..8).map(|i| classify_body(ds.image(i))).collect();
+
+    let mut conns: Vec<TcpStream> = (0..n)
+        .map(|i| {
+            let s = TcpStream::connect(addr)
+                .unwrap_or_else(|e| panic!("connect {i} of {n} failed: {e}"));
+            s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            s
+        })
+        .collect();
+
+    // opening 1024 connections must not spawn threads per connection
+    let threads_during = thread_count();
+    assert!(
+        threads_during < threads_before + 64,
+        "thread count grew from {threads_before} to {threads_during} with {n} conns open"
+    );
+
+    for round in 0..2 {
+        // write all requests first (keep-alive, no connection: close) …
+        for (i, s) in conns.iter_mut().enumerate() {
+            let body = &bodies[i % 8];
+            let req = format!(
+                "POST /v1/models/lenet_bin:classify HTTP/1.1\r\nhost: t\r\n\
+                 content-type: application/json\r\ncontent-length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            s.write_all(req.as_bytes())
+                .unwrap_or_else(|e| panic!("round {round} write {i}: {e}"));
+        }
+        // … then read every response; the gateway must hold all of them
+        // open and in flight at once
+        for (i, s) in conns.iter_mut().enumerate() {
+            let mut reader = BufReader::new(s);
+            let mut status_line = String::new();
+            reader
+                .read_line(&mut status_line)
+                .unwrap_or_else(|e| panic!("round {round} read {i}: {e}"));
+            assert!(
+                status_line.contains(" 200 "),
+                "round {round} conn {i}: {status_line:?}"
+            );
+            let mut content_len = 0usize;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h).unwrap();
+                let h = h.trim_end();
+                if h.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.split_once(':') {
+                    if k.trim().eq_ignore_ascii_case("content-length") {
+                        content_len = v.trim().parse().unwrap();
+                    }
+                }
+            }
+            let mut body = vec![0u8; content_len];
+            reader.read_exact(&mut body).unwrap();
+            let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            let class = v.get("class").and_then(|c| c.as_usize()).unwrap();
+            assert_eq!(
+                class,
+                expected[i % 8],
+                "round {round} conn {i} answered the wrong class"
+            );
+        }
+    }
+
+    // the reactor saw all of them concurrently
+    let (_, metrics) = http_request(&addr.to_string(), "GET", "/metrics", None);
+    let active: usize = metrics
+        .lines()
+        .find_map(|l| l.strip_prefix("bmxnet_active_connections "))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("no active-connections gauge in:\n{metrics}"));
+    assert!(active >= n, "gauge shows {active} active, want >= {n}");
+
+    drop(conns);
     gateway.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,329 @@
+//! Reactor-gateway behaviors the JSON happy path doesn't cover: slowloris
+//! clients hitting the timer-wheel timeout (not a hung worker), pipelined
+//! keep-alive requests answered in order, the binary request formats
+//! (`x-bmx-f32`, `x-bmx-packed`) agreeing bit-for-bit with their JSON
+//! equivalents, and 503 connection shedding at `--max-conns`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::coordinator::BatchPolicy;
+use repro::data::Kind;
+use repro::model::bmx::synth_lenet;
+use repro::model::json;
+use repro::serve::{Gateway, GatewayConfig, ModelRegistry, PoolConfig, RegistryConfig};
+
+fn temp_models_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_reactor_{}_{case}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start_gateway(case: &str, cfg: GatewayConfig) -> (Gateway, PathBuf) {
+    let dir = temp_models_dir(case);
+    synth_lenet(31, 1).unwrap().save(dir.join("lenet_bin.bmx")).unwrap();
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        pool: PoolConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 8, window: Duration::from_millis(1) },
+            queue_cap: 64,
+            ..Default::default()
+        },
+        ..RegistryConfig::new(dir.clone())
+    }));
+    (Gateway::start_with(registry, "127.0.0.1:0", cfg).unwrap(), dir)
+}
+
+/// Read everything until EOF or the read timeout, returning what arrived.
+fn read_available(stream: &mut TcpStream, timeout: Duration) -> Vec<u8> {
+    stream.set_read_timeout(Some(timeout)).unwrap();
+    let mut acc = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => acc.extend_from_slice(&buf[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+            Err(_) => break,
+        }
+    }
+    acc
+}
+
+/// One request over a fresh connection; returns (status, body).
+fn request(addr: &str, raw: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s.write_all(raw).unwrap();
+    let text = read_available(&mut s, Duration::from_secs(60));
+    parse_response(&text).unwrap_or_else(|| panic!("no response to {raw:?}"))
+}
+
+/// Parse the first buffered response; `None` if the head is incomplete.
+fn parse_response(acc: &[u8]) -> Option<(u16, String)> {
+    let head_end = acc.windows(4).position(|w| w == b"\r\n\r\n")? + 4;
+    let head = std::str::from_utf8(&acc[..head_end]).ok()?;
+    let status: u16 = head.split_whitespace().nth(1)?.parse().ok()?;
+    let content_len: usize = head.lines().find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        k.trim()
+            .eq_ignore_ascii_case("content-length")
+            .then(|| v.trim().parse().ok())?
+    })?;
+    let body = acc.get(head_end..head_end + content_len)?;
+    Some((status, String::from_utf8_lossy(body).to_string()))
+}
+
+fn classify_raw(model: &str, content_type: &str, body: &[u8], keep_alive: bool) -> Vec<u8> {
+    let mut req = format!(
+        "POST /v1/models/{model}:classify HTTP/1.1\r\nhost: t\r\n\
+         content-type: {content_type}\r\ncontent-length: {}\r\n{}\r\n",
+        body.len(),
+        if keep_alive { "" } else { "connection: close\r\n" },
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    req
+}
+
+fn short_timeout_cfg() -> GatewayConfig {
+    GatewayConfig {
+        io_workers: 1,
+        max_conns: 64,
+        idle_timeout: Duration::from_millis(400),
+        request_timeout: Duration::from_millis(400),
+    }
+}
+
+/// A client that sends half a request head and then stalls must be
+/// answered by the timeout path (408 or close) — not hold a worker
+/// hostage. A healthy request afterwards proves the workers survived.
+#[test]
+fn slowloris_partial_header_times_out_not_hangs() {
+    let (gateway, dir) = start_gateway("slow_head", short_timeout_cfg());
+    let addr = gateway.addr().to_string();
+
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    slow.write_all(b"GET /healthz HTT").unwrap();
+    let t0 = Instant::now();
+    // wait for the wheel: either a 408 arrives or the conn closes (EOF)
+    let got = read_available(&mut slow, Duration::from_secs(6));
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(6),
+        "gateway neither answered nor closed a stalled half-request"
+    );
+    if !got.is_empty() {
+        let (status, _) = parse_response(&got).expect("partial head answered with garbage");
+        assert_eq!(status, 408, "stalled mid-request must time out");
+    }
+
+    // workers still serve fine after the slowloris
+    let (status, body) = request(&addr, b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 200, "{body}");
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same for a stalled *body*: complete head claiming 100 bytes, only a
+/// few delivered.
+#[test]
+fn slowloris_partial_body_times_out_not_hangs() {
+    let (gateway, dir) = start_gateway("slow_body", short_timeout_cfg());
+    let addr = gateway.addr().to_string();
+
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    slow.write_all(
+        b"POST /v1/models/lenet_bin:classify HTTP/1.1\r\n\
+          content-length: 100\r\n\r\n{\"image",
+    )
+    .unwrap();
+    let got = read_available(&mut slow, Duration::from_secs(6));
+    if !got.is_empty() {
+        let (status, _) = parse_response(&got).expect("partial body answered with garbage");
+        assert_eq!(status, 408, "stalled body must time out");
+    }
+
+    let (status, _) = request(&addr, b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two requests written back-to-back in a single write (HTTP pipelining)
+/// must produce two responses, in order, on the same connection.
+#[test]
+fn pipelined_keepalive_requests_answer_in_order() {
+    let (gateway, dir) = start_gateway(
+        "pipeline",
+        GatewayConfig { io_workers: 1, ..GatewayConfig::default() },
+    );
+    let addr = gateway.addr().to_string();
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(
+        b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n\
+          GET /v1/models HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n",
+    )
+    .unwrap();
+    // connection: close on the second request delimits the stream
+    let mut acc = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => acc.extend_from_slice(&buf[..n]),
+            Err(e) => panic!("read pipelined responses: {e}"),
+        }
+    }
+    let (status1, body1) = parse_response(&acc).expect("first pipelined response");
+    assert_eq!(status1, 200);
+    assert!(body1.contains("ok"), "first response must be /healthz: {body1}");
+    let first_len = acc.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4 + body1.len();
+    let (status2, body2) = parse_response(&acc[first_len..]).expect("second pipelined response");
+    assert_eq!(status2, 200);
+    assert!(body2.contains("models"), "second response must be /v1/models: {body2}");
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `application/x-bmx-f32` (raw LE floats) must classify bit-identically
+/// to the JSON body carrying the same pixels.
+#[test]
+fn binary_f32_body_matches_json_bitwise() {
+    let (gateway, dir) = start_gateway("binf32", GatewayConfig::default());
+    let addr = gateway.addr().to_string();
+    let ds = Kind::Digits.generate(3, 77);
+
+    for i in 0..3 {
+        let image = ds.image(i);
+        let json_body: String = format!(
+            "{{\"image\": [{}]}}",
+            image.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+        );
+        let (s1, r1) = request(
+            &addr,
+            &classify_raw("lenet_bin", "application/json", json_body.as_bytes(), false),
+        );
+        assert_eq!(s1, 200, "{r1}");
+
+        let raw: Vec<u8> = image.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let (s2, r2) =
+            request(&addr, &classify_raw("lenet_bin", "application/x-bmx-f32", &raw, false));
+        assert_eq!(s2, 200, "{r2}");
+
+        let (v1, v2) = (json::parse(&r1).unwrap(), json::parse(&r2).unwrap());
+        assert_eq!(v1.get("class"), v2.get("class"), "class differs: {r1} vs {r2}");
+        assert_eq!(v1.get("score"), v2.get("score"), "score differs: {r1} vs {r2}");
+    }
+
+    // a mis-sized raw body is a clean 400
+    let (status, body) =
+        request(&addr, &classify_raw("lenet_bin", "application/x-bmx-f32", &[0u8; 7], false));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("raw f32 bytes"), "{body}");
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `application/x-bmx-packed` (LSB-first sign bits) must agree with the
+/// JSON body carrying the equivalent ±1.0 floats.
+#[test]
+fn packed_body_matches_json_of_signs_bitwise() {
+    let (gateway, dir) = start_gateway("packed", GatewayConfig::default());
+    let addr = gateway.addr().to_string();
+    let ds = Kind::Digits.generate(2, 55);
+
+    for i in 0..2 {
+        // ±1.0 image from the sample's signs — exactly representable both ways
+        let signs: Vec<f32> =
+            ds.image(i).iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let json_body = format!(
+            "{{\"image\": [{}]}}",
+            signs.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+        );
+        let (s1, r1) = request(
+            &addr,
+            &classify_raw("lenet_bin", "application/json", json_body.as_bytes(), false),
+        );
+        assert_eq!(s1, 200, "{r1}");
+
+        let mut packed = vec![0u8; signs.len().div_ceil(8)];
+        for (j, &v) in signs.iter().enumerate() {
+            if v > 0.0 {
+                packed[j / 8] |= 1 << (j % 8);
+            }
+        }
+        let (s2, r2) =
+            request(&addr, &classify_raw("lenet_bin", "application/x-bmx-packed", &packed, false));
+        assert_eq!(s2, 200, "{r2}");
+
+        let (v1, v2) = (json::parse(&r1).unwrap(), json::parse(&r2).unwrap());
+        assert_eq!(v1.get("class"), v2.get("class"), "class differs: {r1} vs {r2}");
+        assert_eq!(v1.get("score"), v2.get("score"), "score differs: {r1} vs {r2}");
+    }
+
+    // 784 bits: no padding in the last byte, but a wrong byte count is 400
+    let (status, body) =
+        request(&addr, &classify_raw("lenet_bin", "application/x-bmx-packed", &[0u8; 3], false));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("packed bytes"), "{body}");
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Past `max_conns` open connections the acceptor sheds immediately with
+/// a 503 instead of queueing or crashing, and the shed counter shows it.
+#[test]
+fn sheds_connections_past_max_conns_with_503() {
+    let (gateway, dir) = start_gateway(
+        "shed",
+        GatewayConfig {
+            io_workers: 1,
+            max_conns: 2,
+            idle_timeout: Duration::from_secs(30),
+            request_timeout: Duration::from_secs(10),
+        },
+    );
+    let addr = gateway.addr().to_string();
+
+    // hold the only two allowed slots open and idle
+    let held: Vec<TcpStream> = (0..2).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+    // the acceptor counts at accept; give it a beat to adopt both
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut third = TcpStream::connect(&addr).unwrap();
+    let got = read_available(&mut third, Duration::from_secs(5));
+    let (status, body) = parse_response(&got).expect("shed connection got no 503");
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("connection limit"), "{body}");
+
+    // free the slots; the shed counter must be visible on /metrics
+    drop(held);
+    let mut shed_total = 0u64;
+    for _ in 0..50 {
+        let mut s = match TcpStream::connect(&addr) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        s.write_all(b"GET /metrics HTTP/1.1\r\nconnection: close\r\n\r\n").unwrap();
+        let got = read_available(&mut s, Duration::from_secs(5));
+        if let Some((200, text)) = parse_response(&got) {
+            shed_total = text
+                .lines()
+                .find_map(|l| l.strip_prefix("bmxnet_conns_shed_total "))
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(shed_total >= 1, "shed counter never reached 1");
+    gateway.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -25,7 +25,7 @@ trap cleanup EXIT INT TERM
 # --- 1. quick suite run: one record per family, schema + provenance
 BMXNET_FORCE_SCALAR=1 "$BIN" bench-suite --quick --json "$DIR/base"
 
-for FAM in gemm tables engine serve serve_policy profile; do
+for FAM in gemm tables engine serve serve_policy serve_conns profile; do
     REC="$DIR/base/BENCH_$FAM.json"
     [ -f "$REC" ] || { echo "perf-smoke: missing $REC" >&2; exit 1; }
     for NEEDLE in '"schema": 2' "\"bench\": \"$FAM\"" '"git":' '"rustc":' \

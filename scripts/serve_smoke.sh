@@ -28,7 +28,8 @@ fi
 PID=$!
 cleanup() {
     kill "$PID" 2>/dev/null || true
-    rm -f "$LOG" /tmp/bmxnet_smoke_body.$$ || true
+    rm -f "$LOG" /tmp/bmxnet_smoke_body.$$ /tmp/bmxnet_smoke_f32.$$ \
+        /tmp/bmxnet_smoke_packed.$$ || true
     [ -n "$SYNTH_DIR" ] && rm -rf "$SYNTH_DIR" || true
 }
 trap cleanup EXIT INT TERM
@@ -69,6 +70,26 @@ for MODEL in lenet_bin lenet_q4; do
         || { echo "serve-smoke: $MODEL classify has no class field" >&2; exit 1; }
 done
 
+# binary request bodies (PR 10): raw LE f32 pixels and pre-packed sign
+# bits must classify like their JSON equivalents.  784 zero pixels =
+# 3136 zero f32 bytes; packed, 784 sign bits = 98 bytes (zeros pack to
+# -1.0 everywhere, a different — but valid — all-negative input).
+RAWF32=/tmp/bmxnet_smoke_f32.$$
+PACKED=/tmp/bmxnet_smoke_packed.$$
+head -c 3136 /dev/zero >"$RAWF32"
+head -c 98 /dev/zero >"$PACKED"
+OUT=$(curl -fsS -X POST -H 'content-type: application/x-bmx-f32' \
+    --data-binary @"$RAWF32" "http://$ADDR/v1/models/lenet_bin:classify")
+echo "serve-smoke: lenet_bin (x-bmx-f32) -> $OUT"
+echo "$OUT" | grep -q '"class"' \
+    || { echo "serve-smoke: x-bmx-f32 classify has no class field" >&2; exit 1; }
+OUT=$(curl -fsS -X POST -H 'content-type: application/x-bmx-packed' \
+    --data-binary @"$PACKED" "http://$ADDR/v1/models/lenet_bin:classify")
+echo "serve-smoke: lenet_bin (x-bmx-packed) -> $OUT"
+echo "$OUT" | grep -q '"class"' \
+    || { echo "serve-smoke: x-bmx-packed classify has no class field" >&2; exit 1; }
+rm -f "$RAWF32" "$PACKED"
+
 # counters are recorded just after the reply is written; give them a beat
 sleep 0.5
 METRICS=$(curl -fsS "http://$ADDR/metrics")
@@ -86,7 +107,12 @@ for FAMILY in \
     'bmxnet_latency_us_count{model="lenet_bin"}' \
     'bmxnet_latency_us_sum{model="lenet_bin"}' \
     'bmxnet_build_info{version="' \
-    'bmxnet_trace_total'; do
+    'bmxnet_trace_total' \
+    'bmxnet_active_connections' \
+    'bmxnet_conns_shed_total' \
+    'bmxnet_reactor_loop_us_bucket{worker="0"' \
+    'bmxnet_stage_latency_us_bucket{stage="read"' \
+    'bmxnet_stage_latency_us_bucket{stage="write"'; do
     echo "$METRICS" | grep -qF "$FAMILY" \
         || { echo "serve-smoke: /metrics missing $FAMILY" >&2; exit 1; }
 done
